@@ -1,0 +1,75 @@
+//! DRAM-standard explorer: run the same workload (LJ-sim / GCN) across all
+//! eight Table-4 standards and print how LiGNN's gains track the geometry
+//! (bursts per row, burst size, channel count) — the extended version of
+//! the paper's Figs 13/14 exploration.
+//!
+//! Usage: dram_explorer [--alpha A] [--graph lj|or|pa|small|tiny]
+
+use lignn::config::{SimConfig, Variant};
+use lignn::dram::DramStandardKind;
+use lignn::sim::run_sim;
+use lignn::util::benchkit::print_table;
+
+fn main() {
+    let mut cfg = SimConfig { graph: "small".parse().unwrap(), ..Default::default() };
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        match w[0].as_str() {
+            "--alpha" => cfg.alpha = w[1].parse().expect("bad alpha"),
+            "--graph" => cfg.graph = w[1].parse().expect("bad graph"),
+            _ => {}
+        }
+    }
+    let graph = cfg.build_graph();
+    println!(
+        "workload: {} GCN, α={:.1}, |V|={} |E|={}",
+        cfg.graph.name(),
+        cfg.alpha,
+        graph.num_vertices(),
+        graph.num_edges()
+    );
+
+    let standards = [
+        DramStandardKind::Ddr3,
+        DramStandardKind::Ddr4,
+        DramStandardKind::Gddr5,
+        DramStandardKind::Gddr6,
+        DramStandardKind::Lpddr4,
+        DramStandardKind::Lpddr5,
+        DramStandardKind::Hbm,
+        DramStandardKind::Hbm2,
+    ];
+    let mut rows = Vec::new();
+    for dram in standards {
+        let geom = dram.config();
+        let mut base = cfg.clone();
+        base.dram = dram;
+        base.variant = Variant::A;
+        base.alpha = 0.0;
+        let b = run_sim(&base, &graph);
+        let mut t = cfg.clone();
+        t.dram = dram;
+        t.variant = Variant::T;
+        let m = run_sim(&t, &graph);
+        rows.push(vec![
+            dram.name().to_string(),
+            format!("{}ch", geom.channels),
+            format!("{}B", geom.burst_bytes()),
+            format!("{}", geom.bursts_per_row()),
+            format!("{:.2}ms", b.exec_ns / 1e6),
+            format!("{:.2}ms", m.exec_ns / 1e6),
+            format!("{:.2}x", m.speedup_vs(&b)),
+            format!("-{:.0}%", (1.0 - m.access_ratio_vs(&b)) * 100.0),
+            format!("-{:.0}%", (1.0 - m.activation_ratio_vs(&b)) * 100.0),
+            format!("{:.1}mJ", m.energy.total_pj / 1e9),
+        ]);
+    }
+    print_table(
+        &format!("LG-T @ α={:.1} vs non-dropout across DRAM standards", cfg.alpha),
+        &[
+            "standard", "channels", "burst", "bursts/row", "base", "LG-T", "speedup", "access",
+            "activation", "energy",
+        ],
+        &rows,
+    );
+}

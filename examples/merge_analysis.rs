@@ -1,0 +1,92 @@
+//! Merge analysis (§5.4): LM (merge-only) vs NM (plain interleaved
+//! engine), with the row-session distribution and the hit/new/merge
+//! access breakdown — the interactive companion to `benches/fig15_19_merge`.
+//!
+//! Usage: merge_analysis [--graph small|lj] [--flen N] [--capacity N]
+//!                       [--range N] [--access N]
+
+use lignn::config::{SimConfig, Variant};
+use lignn::sim::run_sim;
+use lignn::util::benchkit::print_table;
+
+fn main() {
+    let mut cfg = SimConfig {
+        graph: "small".parse().unwrap(),
+        alpha: 0.0,
+        flen: 512,
+        capacity: 1024,
+        access: 1024,
+        range: 1024,
+        ..Default::default()
+    };
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        match w[0].as_str() {
+            "--graph" => cfg.graph = w[1].parse().expect("bad graph"),
+            "--flen" => cfg.flen = w[1].parse().expect("bad flen"),
+            "--capacity" => cfg.capacity = w[1].parse().expect("bad capacity"),
+            "--range" => cfg.range = w[1].parse().expect("bad range"),
+            "--access" => cfg.access = w[1].parse().expect("bad access"),
+            _ => {}
+        }
+    }
+    let graph = cfg.build_graph();
+    println!(
+        "workload: {} GCN HBM, flen={} capacity={} range={} access={}",
+        cfg.graph.name(),
+        cfg.flen,
+        cfg.capacity,
+        cfg.range,
+        cfg.access
+    );
+
+    let mut nm_cfg = cfg.clone();
+    nm_cfg.variant = Variant::A;
+    let nm = run_sim(&nm_cfg, &graph);
+    let mut lm_cfg = cfg.clone();
+    lm_cfg.variant = Variant::M;
+    let lm = run_sim(&lm_cfg, &graph);
+
+    let total = |m: &lignn::Metrics| (m.feat_hit + m.feat_new + m.feat_merge).max(1) as f64;
+    let rows = vec![
+        vec![
+            "NM".into(),
+            format!("{:.3}ms", nm.exec_ns / 1e6),
+            format!("{}", nm.dram.activations),
+            format!("{:.2}", nm.dram.mean_session()),
+            format!("{:.1}%", 100.0 * nm.feat_hit as f64 / total(&nm)),
+            format!("{:.1}%", 100.0 * nm.feat_new as f64 / total(&nm)),
+            format!("{:.1}%", 100.0 * nm.feat_merge as f64 / total(&nm)),
+        ],
+        vec![
+            "LM".into(),
+            format!("{:.3}ms", lm.exec_ns / 1e6),
+            format!("{}", lm.dram.activations),
+            format!("{:.2}", lm.dram.mean_session()),
+            format!("{:.1}%", 100.0 * lm.feat_hit as f64 / total(&lm)),
+            format!("{:.1}%", 100.0 * lm.feat_new as f64 / total(&lm)),
+            format!("{:.1}%", 100.0 * lm.feat_merge as f64 / total(&lm)),
+        ],
+    ];
+    print_table(
+        "LM vs NM (no dropout)",
+        &["config", "exec", "activations", "mean session", "hit", "new", "merge"],
+        &rows,
+    );
+    println!(
+        "\nLM speedup {:.2}x, activation ratio {:.3}",
+        lm.speedup_vs(&nm),
+        lm.activation_ratio_vs(&nm)
+    );
+
+    // session size distribution (Fig 16 view)
+    let mut rows = Vec::new();
+    for size in 1..=8usize {
+        rows.push(vec![
+            size.to_string(),
+            nm.dram.session_hist[size].to_string(),
+            lm.dram.session_hist[size].to_string(),
+        ]);
+    }
+    print_table("Row-session size distribution", &["size", "NM", "LM"], &rows);
+}

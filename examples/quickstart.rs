@@ -1,0 +1,55 @@
+//! Quickstart: run LG-A (baseline) and LG-T at α=0.5 on the LJ-sim graph
+//! with HBM, print the headline metrics (speedup, DRAM access reduction,
+//! row-activation reduction) — the paper's abstract numbers.
+
+use lignn::config::{GraphPreset, SimConfig, Variant};
+use lignn::sim::run_sim;
+
+fn main() {
+    let mut cfg = SimConfig {
+        graph: GraphPreset::Small,
+        ..Default::default()
+    };
+    // parse optional --graph lj/or/pa/small and --alpha
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        match w[0].as_str() {
+            "--graph" => cfg.graph = w[1].parse().expect("bad graph"),
+            "--alpha" => cfg.alpha = w[1].parse().expect("bad alpha"),
+            "--flen" => cfg.flen = w[1].parse().expect("bad flen"),
+            "--capacity" => cfg.capacity = w[1].parse().expect("bad capacity"),
+            "--range" => cfg.range = w[1].parse().expect("bad range"),
+            "--access" => cfg.access = w[1].parse().expect("bad access"),
+            _ => {}
+        }
+    }
+    let graph = cfg.build_graph();
+    println!(
+        "graph {}: |V|={} |E|={}",
+        cfg.graph.name(),
+        graph.num_vertices(),
+        graph.num_edges()
+    );
+
+    for variant in [Variant::A, Variant::B, Variant::R, Variant::S, Variant::T] {
+        let mut c = cfg.clone();
+        c.variant = variant;
+        let m = run_sim(&c, &graph);
+        println!("{}", m.summary());
+    }
+
+    let mut base = cfg.clone();
+    base.variant = Variant::A;
+    base.alpha = 0.0;
+    let b = run_sim(&base, &graph);
+    let mut t = cfg.clone();
+    t.variant = Variant::T;
+    let m = run_sim(&t, &graph);
+    println!(
+        "\nLG-T @ α={:.1} vs non-dropout: speedup {:.2}x, DRAM access -{:.0}%, row activation -{:.0}%",
+        cfg.alpha,
+        m.speedup_vs(&b),
+        (1.0 - m.access_ratio_vs(&b)) * 100.0,
+        (1.0 - m.activation_ratio_vs(&b)) * 100.0
+    );
+}

@@ -1,0 +1,130 @@
+"""AOT compile path: lower L2 train/predict functions to HLO *text*.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits, for each model in {gcn, sage, gin}:
+    artifacts/train_step_<model>.hlo.txt
+    artifacts/predict_<model>.hlo.txt
+plus ``artifacts/manifest.json`` recording the exact input/output ABI the
+Rust trainer must honour (shapes, dtypes, parameter order, constants).
+
+Run via ``make artifacts`` — python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def input_specs(model, kind, n, f, h, c):
+    """Flat (name, shape) list matching the exported function's signature."""
+    names_shapes = [(nm, sh) for nm, sh in M.param_shapes(model, f, h, c)]
+    if kind == "train_step":
+        names_shapes += [
+            ("adj_raw", (n, n)),
+            ("x", (n, f)),
+            ("mask", (n, f)),
+            ("scale", (1,)),
+            ("labels_onehot", (n, c)),
+            ("train_mask", (n,)),
+        ]
+    else:  # predict
+        names_shapes += [("adj_raw", (n, n)), ("x", (n, f))]
+    return names_shapes
+
+
+def output_specs(model, kind, n, f, h, c):
+    if kind == "train_step":
+        return [(nm, sh) for nm, sh in M.param_shapes(model, f, h, c)] + [
+            ("loss", ())
+        ]
+    return [("logits", (n, c))]
+
+
+def lower_one(model, kind, n, f, h, c, lr):
+    fn = M.make_train_step(model, lr) if kind == "train_step" else M.make_predict(model)
+    specs = [_spec(sh) for _, sh in input_specs(model, kind, n, f, h, c)]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n-nodes", type=int, default=M.N_NODES)
+    ap.add_argument("--n-features", type=int, default=M.N_FEATURES)
+    ap.add_argument("--n-hidden", type=int, default=M.N_HIDDEN)
+    ap.add_argument("--n-classes", type=int, default=M.N_CLASSES)
+    ap.add_argument("--lr", type=float, default=M.LEARNING_RATE)
+    ap.add_argument("--models", nargs="*", default=list(M.MODELS))
+    args = ap.parse_args()
+
+    n, f, h, c = args.n_nodes, args.n_features, args.n_hidden, args.n_classes
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "constants": {
+            "n_nodes": n,
+            "n_features": f,
+            "n_hidden": h,
+            "n_classes": c,
+            "lr": args.lr,
+            "gin_eps": M.GIN_EPS,
+        },
+        "artifacts": [],
+    }
+
+    for model in args.models:
+        for kind in ("train_step", "predict"):
+            fname = f"{kind}_{model}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            text = lower_one(model, kind, n, f, h, c, args.lr)
+            with open(path, "w") as fp:
+                fp.write(text)
+            manifest["artifacts"].append(
+                {
+                    "model": model,
+                    "kind": kind,
+                    "file": fname,
+                    "inputs": [
+                        {"name": nm, "shape": list(sh), "dtype": "f32"}
+                        for nm, sh in input_specs(model, kind, n, f, h, c)
+                    ],
+                    "outputs": [
+                        {"name": nm, "shape": list(sh), "dtype": "f32"}
+                        for nm, sh in output_specs(model, kind, n, f, h, c)
+                    ],
+                    "n_params": len(M.PARAM_SPECS[model]),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as fp:
+        json.dump(manifest, fp, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

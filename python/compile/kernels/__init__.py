@@ -1,0 +1,7 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .aggregate import masked_aggregate, masked_aggregate_jit, BLOCK_N  # noqa: F401
+from .ref import (  # noqa: F401
+    degree_normalize_ref,
+    masked_aggregate_ref,
+    mean_normalize_ref,
+)

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: masked neighbor aggregation.
+
+This is the compute hot-spot of the paper's target workload — the GNN
+aggregation phase — expressed as a Pallas kernel so the whole L2 training
+step lowers into one HLO module. The kernel computes
+
+    out = adj @ (x * mask) * scale
+
+tiled over row-blocks of ``adj`` so each grid step touches one
+[BLOCK_N, N] tile of the adjacency, the full [N, F] feature/mask panel
+(features are the dense-matrix side of GCNTrain's SpMM; the panel is the
+analogue of the accelerator's on-chip dense-tile buffer), and produces one
+[BLOCK_N, F] output tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the feature panel streams
+HBM→VMEM via the BlockSpec index maps; the dropout mask is applied
+element-wise in VMEM (VPU) before the MXU matmul; burst-granular masks zero
+aligned lane groups, mirroring the aligned-burst sparsity LiGNN creates in
+DRAM. ``interpret=True`` everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU perf is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block of the adjacency processed per grid step. 128 matches both the
+# MXU systolic dimension and the f32 VMEM sublane*lane tile multiple.
+BLOCK_N = 128
+
+
+def _masked_aggregate_kernel(adj_ref, x_ref, mask_ref, scale_ref, o_ref):
+    """One grid step: o = adj_block @ (x * mask) * scale.
+
+    adj_ref:   [BLOCK_N, N]  row-block of normalized adjacency
+    x_ref:     [N, F]        full feature panel (resident per step)
+    mask_ref:  [N, F]        keep mask (1.0 / 0.0)
+    scale_ref: [1, 1]        1/(1-alpha) rescale (SMEM-style scalar)
+    o_ref:     [BLOCK_N, F]  output tile
+    """
+    masked = x_ref[...] * mask_ref[...]
+    acc = jnp.dot(adj_ref[...], masked, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * scale_ref[0, 0]
+
+
+def masked_aggregate(adj, x, mask, scale, block_n=BLOCK_N):
+    """Pallas-tiled ``adj @ (x * mask) * scale``.
+
+    Pads N up to a multiple of ``block_n`` when needed (zero rows/cols are
+    exact for this computation). ``scale`` may be a python float or a scalar
+    array.
+
+    Args:
+      adj:  [N, N] f32 normalized adjacency.
+      x:    [N, F] f32 features.
+      mask: [N, F] f32 keep mask.
+      scale: scalar — dropout rescale 1/(1-alpha).
+      block_n: row-block size (must stay MXU-aligned; default 128).
+
+    Returns:
+      [N, F] f32 aggregated features.
+    """
+    n, f = x.shape
+    if adj.shape != (n, n):
+        raise ValueError(f"adj shape {adj.shape} incompatible with x {x.shape}")
+    if mask.shape != (n, f):
+        raise ValueError(f"mask shape {mask.shape} incompatible with x {x.shape}")
+
+    n_pad = (-n) % block_n
+    if n_pad:
+        adj = jnp.pad(adj, ((0, n_pad), (0, n_pad)))
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, n_pad), (0, 0)))
+    np_, fp = x.shape
+
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    grid = (np_ // block_n,)
+
+    out = pl.pallas_call(
+        _masked_aggregate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, np_), lambda i: (i, 0)),  # adj row-block
+            pl.BlockSpec((np_, fp), lambda i: (0, 0)),       # feature panel
+            pl.BlockSpec((np_, fp), lambda i: (0, 0)),       # mask panel
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # scale scalar
+        ],
+        out_specs=pl.BlockSpec((block_n, fp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, fp), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(adj, x, mask, scale_arr)
+
+    return out[:n] if n_pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def masked_aggregate_jit(adj, x, mask, scale, block_n=BLOCK_N):
+    """Jitted wrapper used by the pytest suite."""
+    return masked_aggregate(adj, x, mask, scale, block_n=block_n)

@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the LiGNN kernels.
+
+These are the ground-truth implementations the Pallas kernels in
+``aggregate.py`` are validated against (pytest + hypothesis sweeps in
+``python/tests/``). They are deliberately written in the most obvious way
+possible — no tiling, no tricks — so that a mismatch always indicts the
+kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_aggregate_ref(adj, x, mask, scale):
+    """Neighbor aggregation with a (burst/row-granular) dropout mask.
+
+    Computes ``adj @ (x * mask) * scale`` — the aggregation phase of a GNN
+    layer where LiGNN has dropped part of the feature reads. ``mask`` is the
+    per-(vertex, element) keep mask produced by the Rust dropout generator
+    (element / burst / DRAM-row granularity all reduce to this dense form),
+    and ``scale`` is the compute-unit-side 1/(1-alpha) rescale the paper
+    assigns to the compute engine rather than LiGNN (§4.3).
+
+    Args:
+      adj:   [N, N] float — normalized adjacency (Â = D^-1/2 (A+I) D^-1/2
+             for GCN, row-mean for SAGE, plain A for GIN).
+      x:     [N, F] float — vertex features.
+      mask:  [N, F] float — 1.0 keep / 0.0 drop.
+      scale: scalar float — 1/(1-alpha) dropout rescale.
+
+    Returns:
+      [N, F] aggregated features.
+    """
+    return adj @ (x * mask) * scale
+
+
+def degree_normalize_ref(adj_raw):
+    """Symmetric GCN normalization with self loops: D^-1/2 (A+I) D^-1/2."""
+    n = adj_raw.shape[0]
+    a = adj_raw + jnp.eye(n, dtype=adj_raw.dtype)
+    deg = a.sum(axis=1)
+    d_inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(deg), 0.0)
+    return a * d_inv_sqrt[:, None] * d_inv_sqrt[None, :]
+
+
+def mean_normalize_ref(adj_raw):
+    """Row-mean normalization (GraphSAGE mean aggregator), self excluded."""
+    deg = adj_raw.sum(axis=1)
+    d_inv = jnp.where(deg > 0, 1.0 / deg, 0.0)
+    return adj_raw * d_inv[:, None]

@@ -1,0 +1,72 @@
+# pytest: AOT path — HLO text is parseable-shaped, manifest ABI is coherent,
+# and (when artifacts exist) the emitted files match the current ABI.
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile.aot import input_specs, lower_one, output_specs
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+@pytest.mark.parametrize("kind", ["train_step", "predict"])
+def test_lower_emits_hlo_text(model, kind):
+    text = lower_one(model, kind, 64, 8, 8, 3, 0.05)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # Text interchange only — serialized protos are rejected downstream.
+    assert "\x00" not in text
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+def test_abi_input_output_counts(model):
+    n_params = len(M.PARAM_SPECS[model])
+    ins = input_specs(model, "train_step", 64, 8, 8, 3)
+    outs = output_specs(model, "train_step", 64, 8, 8, 3)
+    assert len(ins) == n_params + 6  # params + adj,x,mask,scale,labels,train_mask
+    assert len(outs) == n_params + 1  # params' + loss
+    pins = input_specs(model, "predict", 64, 8, 8, 3)
+    pouts = output_specs(model, "predict", 64, 8, 8, 3)
+    assert len(pins) == n_params + 2
+    assert pouts == [("logits", (64, 3))]
+
+
+def test_param_count_in_hlo_matches_abi():
+    text = lower_one("gcn", "predict", 32, 4, 4, 2, 0.05)
+    # ENTRY signature must carry exactly n_params + 2 parameters.
+    entry = [l for l in text.splitlines() if l.startswith("ENTRY")][0]
+    assert entry.count("parameter") == 0  # names not in signature line
+    n_expected = len(M.PARAM_SPECS["gcn"]) + 2
+    assert text.count(" = f32[") >= n_expected  # at least the inputs appear
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_current_abi():
+    with open(os.path.join(ART_DIR, "manifest.json")) as fp:
+        man = json.load(fp)
+    consts = man["constants"]
+    n, f, h, c = (
+        consts["n_nodes"],
+        consts["n_features"],
+        consts["n_hidden"],
+        consts["n_classes"],
+    )
+    by_key = {(a["model"], a["kind"]): a for a in man["artifacts"]}
+    for model in M.MODELS:
+        for kind in ("train_step", "predict"):
+            a = by_key[(model, kind)]
+            want = [
+                {"name": nm, "shape": list(sh), "dtype": "f32"}
+                for nm, sh in input_specs(model, kind, n, f, h, c)
+            ]
+            assert a["inputs"] == want, (model, kind)
+            assert os.path.exists(os.path.join(ART_DIR, a["file"]))
+            with open(os.path.join(ART_DIR, a["file"])) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule")

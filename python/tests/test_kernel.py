@@ -1,0 +1,143 @@
+# pytest: Pallas kernel vs pure-jnp ref — the CORE correctness signal.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    BLOCK_N,
+    masked_aggregate,
+    masked_aggregate_jit,
+    masked_aggregate_ref,
+)
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand_case(seed, n, f, density=0.5, alpha=0.5):
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    adj = (jax.random.uniform(k0, (n, n)) < density).astype(jnp.float32)
+    x = jax.random.normal(k1, (n, f), jnp.float32)
+    mask = (jax.random.uniform(k2, (n, f)) >= alpha).astype(jnp.float32)
+    scale = 1.0 / (1.0 - alpha) if alpha < 1.0 else 1.0
+    return adj, x, mask, scale
+
+
+def _check(adj, x, mask, scale, block_n=BLOCK_N):
+    out = masked_aggregate(adj, x, mask, scale, block_n=block_n)
+    ref = masked_aggregate_ref(adj, x, mask, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=RTOL, atol=ATOL)
+
+
+class TestMaskedAggregateBasic:
+    def test_block_aligned(self):
+        _check(*_rand_case(0, 256, 64))
+
+    def test_unaligned_n_pads(self):
+        # N not a multiple of BLOCK_N exercises the zero-pad path.
+        _check(*_rand_case(1, 200, 48))
+
+    def test_single_block(self):
+        _check(*_rand_case(2, BLOCK_N, 32))
+
+    def test_tiny(self):
+        _check(*_rand_case(3, 3, 2))
+
+    def test_mask_all_ones_is_plain_matmul(self):
+        adj, x, _, _ = _rand_case(4, 100, 16)
+        ones = jnp.ones_like(x)
+        out = masked_aggregate(adj, x, ones, 1.0)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(adj @ x), rtol=RTOL, atol=ATOL
+        )
+
+    def test_mask_all_zero_is_zero(self):
+        adj, x, _, _ = _rand_case(5, 64, 8)
+        out = masked_aggregate(adj, x, jnp.zeros_like(x), 2.0)
+        assert np.abs(np.asarray(out)).max() == 0.0
+
+    def test_scale_applied(self):
+        adj, x, mask, _ = _rand_case(6, 64, 8)
+        out1 = np.asarray(masked_aggregate(adj, x, mask, 1.0))
+        out3 = np.asarray(masked_aggregate(adj, x, mask, 3.0))
+        np.testing.assert_allclose(out3, 3.0 * out1, rtol=RTOL, atol=ATOL)
+
+    def test_scale_as_array(self):
+        adj, x, mask, _ = _rand_case(7, 64, 8)
+        out_f = np.asarray(masked_aggregate(adj, x, mask, 2.0))
+        out_a = np.asarray(masked_aggregate(adj, x, mask, jnp.asarray([2.0])))
+        np.testing.assert_allclose(out_a, out_f, rtol=RTOL, atol=ATOL)
+
+    def test_jit_wrapper_matches(self):
+        adj, x, mask, scale = _rand_case(8, 192, 32)
+        out = masked_aggregate_jit(adj, x, mask, jnp.float32(scale))
+        ref = masked_aggregate_ref(adj, x, mask, scale)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=RTOL, atol=ATOL)
+
+    def test_custom_block_size(self):
+        _check(*_rand_case(9, 96, 16), block_n=32)
+
+    def test_empty_graph_no_edges(self):
+        n, f = 64, 16
+        adj = jnp.zeros((n, n), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(10), (n, f))
+        out = masked_aggregate(adj, x, jnp.ones_like(x), 1.0)
+        assert np.abs(np.asarray(out)).max() == 0.0
+
+    def test_shape_mismatch_raises(self):
+        adj, x, mask, scale = _rand_case(11, 32, 8)
+        with pytest.raises(ValueError):
+            masked_aggregate(adj[:16], x, mask, scale)
+        with pytest.raises(ValueError):
+            masked_aggregate(adj, x, mask[:, :4], scale)
+
+
+class TestMaskedAggregateBurstStructure:
+    """Burst/row-granular masks (the shapes LiGNN actually produces)."""
+
+    def test_burst_granular_mask(self):
+        # K=8 elements per burst: mask constant within aligned 8-lane groups.
+        n, f, k = 128, 64, 8
+        adj, x, _, _ = _rand_case(12, n, f)
+        keep = (jax.random.uniform(jax.random.PRNGKey(13), (n, f // k)) >= 0.5)
+        mask = jnp.repeat(keep.astype(jnp.float32), k, axis=1)
+        _check(adj, x, mask, 2.0)
+
+    def test_row_granular_mask(self):
+        # DRAM-row granularity: whole vertices dropped in aligned groups of 8.
+        n, f, g = 128, 32, 8
+        adj, x, _, _ = _rand_case(14, n, f)
+        keep = (jax.random.uniform(jax.random.PRNGKey(15), (n // g, 1)) >= 0.5)
+        mask = jnp.broadcast_to(
+            jnp.repeat(keep.astype(jnp.float32), g, axis=0)[:, :1], (n, f)
+        )
+        _check(adj, x, mask, 2.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    f=st.integers(min_value=1, max_value=96),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    alpha=st.floats(min_value=0.0, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_kernel_matches_ref(n, f, density, alpha, seed):
+    """Property: kernel == oracle across arbitrary shapes/densities/rates."""
+    adj, x, mask, scale = _rand_case(seed, n, f, density, alpha)
+    _check(adj, x, mask, scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block=st.sampled_from([8, 16, 32, 64, 128, 256]),
+    n=st.integers(min_value=1, max_value=200),
+)
+def test_hypothesis_block_size_invariance(block, n):
+    """Property: the block size never changes the result."""
+    adj, x, mask, scale = _rand_case(n, n, 24)
+    a = np.asarray(masked_aggregate(adj, x, mask, scale, block_n=block))
+    b = np.asarray(masked_aggregate_ref(adj, x, mask, scale))
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)

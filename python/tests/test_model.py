@@ -1,0 +1,124 @@
+# pytest: L2 model — shapes, gradients, training dynamics, dropout rescale.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+N, F, H, C = 96, 16, 12, 4
+
+
+@pytest.fixture(scope="module")
+def case():
+    k = jax.random.PRNGKey(42)
+    k0, k1, k2, k3 = jax.random.split(k, 4)
+    adj = (jax.random.uniform(k0, (N, N)) < 0.05).astype(jnp.float32)
+    adj = jnp.maximum(adj, adj.T)  # undirected
+    x = jax.random.normal(k1, (N, F), jnp.float32)
+    labels = jax.random.randint(k2, (N,), 0, C)
+    onehot = jax.nn.one_hot(labels, C, dtype=jnp.float32)
+    train_mask = (jax.random.uniform(k3, (N,)) < 0.5).astype(jnp.float32)
+    return adj, x, onehot, train_mask
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+def test_forward_shapes(model, case):
+    adj, x, onehot, train_mask = case
+    params = M.init_params(model, jax.random.PRNGKey(0), F, H, C)
+    logits = M.forward(model, params, adj, x, jnp.ones_like(x), 1.0)
+    assert logits.shape == (N, C)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+def test_param_shapes_match_specs(model):
+    params = M.init_params(model, jax.random.PRNGKey(1), F, H, C)
+    for p, (name, shape) in zip(params, M.param_shapes(model, F, H, C)):
+        assert p.shape == shape, name
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+def test_train_step_reduces_loss(model, case):
+    adj, x, onehot, train_mask = case
+    step = jax.jit(M.make_train_step(model, lr=0.1))
+    params = M.init_params(model, jax.random.PRNGKey(2), F, H, C)
+    mask = jnp.ones_like(x)
+    scale = jnp.asarray([1.0], jnp.float32)
+    losses = []
+    for _ in range(30):
+        out = step(*params, adj, x, mask, scale, onehot, train_mask)
+        params, loss = list(out[:-1]), out[-1]
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses[0]} -> {losses[-1]}"
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+def test_gradients_finite_under_dropout(model, case):
+    adj, x, onehot, train_mask = case
+    params = M.init_params(model, jax.random.PRNGKey(3), F, H, C)
+    alpha = 0.5
+    mask = (jax.random.uniform(jax.random.PRNGKey(4), (N, F)) >= alpha).astype(
+        jnp.float32
+    )
+    grads = jax.grad(M.loss_fn)(
+        params, model, adj, x, mask, 1.0 / (1.0 - alpha), onehot, train_mask
+    )
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_dropout_rescale_preserves_aggregate_expectation(case):
+    """E[mask * scale] = 1 — the 1/(1-a) rescale keeps aggregation unbiased."""
+    adj, x, _, _ = case
+    alpha = 0.5
+    acc = jnp.zeros((N, F))
+    trials = 200
+    for i in range(trials):
+        m = (jax.random.uniform(jax.random.PRNGKey(i), (N, F)) >= alpha).astype(
+            jnp.float32
+        )
+        acc = acc + m / (1.0 - alpha)
+    mean_mask = acc / trials
+    np.testing.assert_allclose(np.asarray(mean_mask).mean(), 1.0, atol=0.02)
+
+
+def test_masked_cross_entropy_ignores_non_train(case):
+    adj, x, onehot, _ = case
+    logits = jax.random.normal(jax.random.PRNGKey(5), (N, C))
+    m1 = jnp.zeros((N,)).at[:10].set(1.0)
+    l1 = M.masked_cross_entropy(logits, onehot, m1)
+    # Perturbing logits outside the mask must not change the loss.
+    logits2 = logits.at[50:].add(3.0)
+    l2 = M.masked_cross_entropy(logits2, onehot, m1)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_predict_matches_forward_no_dropout(case):
+    adj, x, _, _ = case
+    params = M.init_params("gcn", jax.random.PRNGKey(6), F, H, C)
+    pred = M.make_predict("gcn")
+    (logits,) = pred(*params, adj, x)
+    ref = M.forward("gcn", params, adj, x, jnp.ones_like(x), 1.0)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+def test_train_step_is_pure_sgd(model, case):
+    """step(params) == params - lr * grad — verified against jax.grad."""
+    adj, x, onehot, train_mask = case
+    lr = 0.07
+    step = M.make_train_step(model, lr=lr)
+    params = M.init_params(model, jax.random.PRNGKey(7), F, H, C)
+    mask = jnp.ones_like(x)
+    scale = jnp.asarray([1.0], jnp.float32)
+    out = step(*params, adj, x, mask, scale, onehot, train_mask)
+    new_params = out[:-1]
+    grads = jax.grad(M.loss_fn)(
+        params, model, adj, x, mask, scale, onehot, train_mask
+    )
+    for p, g, npm in zip(params, grads, new_params):
+        np.testing.assert_allclose(
+            np.asarray(npm), np.asarray(p - lr * g), rtol=1e-5, atol=1e-6
+        )

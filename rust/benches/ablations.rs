@@ -1,0 +1,110 @@
+//! Ablations over LiGNN's design choices (DESIGN.md "Key design
+//! decisions"): Algorithm-2 keep criteria, scheduling range, and the
+//! §4.3 mask write-back overhead.
+
+mod common;
+
+use lignn::config::{SimConfig, Variant};
+use lignn::sim::run_sim;
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+use lignn::util::par::{default_threads, par_map};
+
+fn main() {
+    let graph = common::main_graph();
+    let base = SimConfig { graph, variant: Variant::S, alpha: 0.5, ..Default::default() };
+    let mut json_rows = Vec::new();
+
+    // --- criteria C: Any vs ChannelBalance ---
+    let mut cb = base.clone();
+    cb.channel_balance = true;
+    let shared_graph = base.build_graph();
+    let runs = par_map(&[base.clone(), cb], default_threads(), |cfg| {
+        run_sim(cfg, &shared_graph)
+    });
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .zip(["keep-longest (Any)", "channel-balance"])
+        .map(|(m, name)| {
+            vec![
+                name.to_string(),
+                format!("{:.3}ms", m.exec_ns / 1e6),
+                m.dram.activations.to_string(),
+                format!("{:.2}", m.dram.mean_session()),
+            ]
+        })
+        .collect();
+    print_table("Ablation — Algorithm 2 keep criteria (LG-S, α=0.5)", &["criteria", "exec", "activations", "mean session"], &rows);
+    for (m, name) in runs.iter().zip(["any", "channel_balance"]) {
+        json_rows.push(vec![
+            Json::str("criteria"),
+            Json::str(name),
+            Json::num(m.exec_ns),
+            Json::num(m.dram.activations as f64),
+        ]);
+    }
+    // channel balancing must not cost more than a few % end-to-end
+    assert!(runs[1].exec_ns < runs[0].exec_ns * 1.10);
+
+    // --- scheduling range (LG-S trigger interval) ---
+    let ranges = [16usize, 64, 256, 1024, 4096];
+    let cfgs: Vec<SimConfig> = ranges
+        .iter()
+        .map(|&r| {
+            let mut c = base.clone();
+            c.range = r;
+            c
+        })
+        .collect();
+    let runs = par_map(&cfgs, default_threads(), |cfg| run_sim(cfg, &shared_graph));
+    let rows: Vec<Vec<String>> = ranges
+        .iter()
+        .zip(&runs)
+        .map(|(&r, m)| {
+            vec![
+                r.to_string(),
+                format!("{:.3}ms", m.exec_ns / 1e6),
+                m.dram.activations.to_string(),
+                format!("{:.2}", m.dram.mean_session()),
+            ]
+        })
+        .collect();
+    print_table("Ablation — LG-S scheduling range", &["range", "exec", "activations", "mean session"], &rows);
+    for (&r, m) in ranges.iter().zip(&runs) {
+        json_rows.push(vec![
+            Json::str("range"),
+            Json::num(r as f64),
+            Json::num(m.exec_ns),
+            Json::num(m.dram.activations as f64),
+        ]);
+    }
+    // larger scheduling ranges must not hurt locality (the paper's LG-R →
+    // LG-S motivation)
+    assert!(
+        runs.last().unwrap().dram.activations <= runs[0].dram.activations,
+        "locality should improve with range"
+    );
+
+    // --- mask write-back overhead (§4.3) ---
+    let mut no_mask = base.clone();
+    no_mask.mask_writeback = false;
+    let runs = par_map(&[base.clone(), no_mask], default_threads(), |cfg| {
+        run_sim(cfg, &shared_graph)
+    });
+    let overhead = runs[0].exec_ns / runs[1].exec_ns - 1.0;
+    println!(
+        "\nAblation — §4.3 mask write-back: {:.2}% exec overhead ({} extra write bursts)",
+        overhead * 100.0,
+        runs[0].dram.writes - runs[1].dram.writes
+    );
+    json_rows.push(vec![
+        Json::str("mask_writeback"),
+        Json::str("overhead"),
+        Json::num(overhead),
+        Json::num((runs[0].dram.writes - runs[1].dram.writes) as f64),
+    ]);
+    // masks are 1/128 of feature read traffic: overhead must be small
+    assert!(overhead < 0.05, "mask write-back overhead {overhead}");
+
+    common::write_result("ablations", &common::rows_json(&["what", "x", "v1", "v2"], &json_rows));
+}

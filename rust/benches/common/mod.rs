@@ -1,0 +1,56 @@
+//! Shared bench plumbing: fast-mode toggle, result JSON emission.
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::path::PathBuf;
+
+use lignn::config::GraphPreset;
+use lignn::util::json::Json;
+
+/// `LIGNN_FAST=1` shrinks workloads for smoke runs (CI / quick iteration).
+pub fn fast_mode() -> bool {
+    std::env::var("LIGNN_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The evaluation graphs: the paper's trio, or `small` in fast mode.
+pub fn eval_graphs() -> Vec<GraphPreset> {
+    if fast_mode() {
+        vec![GraphPreset::Small]
+    } else {
+        GraphPreset::PAPER_TRIO.to_vec()
+    }
+}
+
+/// Single main evaluation graph (LJ in the paper).
+pub fn main_graph() -> GraphPreset {
+    if fast_mode() {
+        GraphPreset::Small
+    } else {
+        GraphPreset::LjSim
+    }
+}
+
+/// Write a result JSON under `results/` (created on demand).
+pub fn write_result(name: &str, value: &Json) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).expect("mkdir results/");
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, format!("{value}\n")).expect("write result");
+    println!("[results] wrote {}", path.display());
+}
+
+/// Rows → Json array of objects.
+pub fn rows_json(fields: &[&str], rows: &[Vec<Json>]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::Obj(
+                    fields
+                        .iter()
+                        .zip(r.iter())
+                        .map(|(k, v)| (k.to_string(), v.clone()))
+                        .collect(),
+                )
+            })
+            .collect(),
+    )
+}

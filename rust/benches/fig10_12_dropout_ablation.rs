@@ -1,0 +1,87 @@
+//! Figs. 10/11/12 — locality-aware dropout ablation: LG-{A,B,R,S} on
+//! LiveJournal(-sim), GCN, HBM across drop rates — speedup, normalized
+//! actual DRAM access, normalized row activations.
+//!
+//! Paper @ α=0.5: LG-{B,R,S} reach 1.38–1.73× while LG-A barely moves;
+//! access falls linearly for B/R/S; activation order A > B > R > S.
+
+mod common;
+
+use lignn::config::{SimConfig, Variant};
+use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    let alphas = alpha_grid();
+    let graph = common::main_graph();
+    let mut json_rows = Vec::new();
+    let mut at_half = Vec::new();
+
+    for variant in [Variant::A, Variant::B, Variant::R, Variant::S] {
+        let cfg = SimConfig { graph, variant, ..Default::default() };
+        let g = cfg.build_graph();
+        let (_, rows) = normalized_against_no_dropout(&cfg, &g, &alphas);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.1}", r.alpha),
+                    format!("{:.2}", r.speedup),
+                    format!("{:.3}", r.access_ratio),
+                    format!("{:.3}", r.activation_ratio),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Figs 10–12 — {} on {} / GCN / HBM", variant.name(), graph.name()),
+            &["alpha", "speedup", "access", "activation"],
+            &table,
+        );
+        for r in &rows {
+            json_rows.push(vec![
+                Json::str(variant.name()),
+                Json::num(r.alpha),
+                Json::num(r.speedup),
+                Json::num(r.access_ratio),
+                Json::num(r.activation_ratio),
+            ]);
+        }
+        at_half.push((variant, rows[5].speedup, rows[5].access_ratio, rows[5].activation_ratio));
+    }
+
+    let rows: Vec<Vec<String>> = at_half
+        .iter()
+        .map(|(v, s, a, act)| {
+            vec![
+                v.name().to_string(),
+                format!("{s:.2}x"),
+                format!("{a:.3}"),
+                format!("{act:.3}"),
+            ]
+        })
+        .collect();
+    print_table(
+        "@ α=0.5 (paper: LG-B/R/S 1.38–1.73x; activation A > B > R > S)",
+        &["variant", "speedup", "access", "activation"],
+        &rows,
+    );
+    common::write_result(
+        "fig10_12_dropout_ablation",
+        &common::rows_json(&["variant", "alpha", "speedup", "access", "activation"], &json_rows),
+    );
+
+    // Shape assertions (the paper's orderings).
+    let by = |v: Variant| at_half.iter().find(|(x, ..)| *x == v).unwrap().clone();
+    let (_, s_a, acc_a, act_a) = by(Variant::A);
+    let (_, s_b, acc_b, act_b) = by(Variant::B);
+    let (_, s_r, _, act_r) = by(Variant::R);
+    let (_, s_s, _, act_s) = by(Variant::S);
+    assert!(s_a < 1.25, "LG-A speedup should be marginal, got {s_a}");
+    assert!(s_b > s_a && s_r > s_b, "speedup order A < B < R violated");
+    assert!(s_s > s_b, "LG-S should beat LG-B");
+    // B's access ratio ≈ (1−α) on reads, damped toward ~0.6 by the
+    // non-droppable write-back + mask traffic.
+    assert!(acc_b < 0.65 && acc_a > 0.9, "access: B linear, A flat");
+    assert!(act_b < act_a && act_r < act_b && act_s <= act_r * 1.05, "activation order");
+}

@@ -1,0 +1,65 @@
+//! Figs. 13/14 — DRAM-standard exploration: LG-T vs LG-A on DDR4 and
+//! GDDR5 (GCN), reproducing that the HBM results carry over.
+
+mod common;
+
+use lignn::config::{SimConfig, Variant};
+use lignn::dram::DramStandardKind as D;
+use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    let alphas = alpha_grid();
+    let graph = common::main_graph();
+    let mut json_rows = Vec::new();
+
+    for dram in [D::Ddr4, D::Gddr5, D::Hbm] {
+        let mut at_half = Vec::new();
+        for variant in [Variant::A, Variant::T] {
+            let cfg = SimConfig { graph, dram, variant, ..Default::default() };
+            let g = cfg.build_graph();
+            let (_, rows) = normalized_against_no_dropout(&cfg, &g, &alphas);
+            let table: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{:.1}", r.alpha),
+                        format!("{:.2}", r.speedup),
+                        format!("{:.3}", r.access_ratio),
+                        format!("{:.3}", r.activation_ratio),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("Figs 13–14 — {} on {} / {}", variant.name(), dram.name(), graph.name()),
+                &["alpha", "speedup", "access", "activation"],
+                &table,
+            );
+            for r in &rows {
+                json_rows.push(vec![
+                    Json::str(dram.name()),
+                    Json::str(variant.name()),
+                    Json::num(r.alpha),
+                    Json::num(r.speedup),
+                    Json::num(r.access_ratio),
+                    Json::num(r.activation_ratio),
+                ]);
+            }
+            at_half.push((variant, rows[5].speedup, rows[5].activation_ratio));
+        }
+        // adaptability claim: LG-T wins clearly on every standard
+        let t = at_half.iter().find(|(v, ..)| *v == Variant::T).unwrap();
+        let a = at_half.iter().find(|(v, ..)| *v == Variant::A).unwrap();
+        assert!(t.1 > 1.3, "{}: LG-T speedup {}", dram.name(), t.1);
+        assert!(t.1 > a.1, "{}: LG-T must beat LG-A", dram.name());
+        assert!(t.2 < 0.6, "{}: LG-T activation ratio {}", dram.name(), t.2);
+    }
+    common::write_result(
+        "fig13_14_dram_standards",
+        &common::rows_json(
+            &["dram", "variant", "alpha", "speedup", "access", "activation"],
+            &json_rows,
+        ),
+    );
+}

@@ -1,0 +1,242 @@
+//! Figs. 15–19 — the locality-aware merging study (§5.4): LM (merge-only,
+//! `Variant::M`) vs NM (plain engine, LG-A at α=0) on LiveJournal(-sim)
+//! with GCN + HBM, sweeping Access / Capacity / Flen / Range.
+//!
+//! Paper: LM gains 1.43–1.59× vs range/access (Fig 15) and 1.30–1.44× vs
+//! capacity/flen with the peak at flen=512 (Fig 18); LM shifts row-session
+//! sizes right (Fig 16); the access breakdown converts "new" into
+//! "merge" while hits stay put (Figs 17/19).
+
+mod common;
+
+use lignn::config::{SimConfig, Variant};
+use lignn::sim::run_sim;
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+use lignn::util::par::{default_threads, par_map};
+use lignn::Metrics;
+
+fn base() -> SimConfig {
+    SimConfig {
+        graph: common::main_graph(),
+        alpha: 0.0,
+        flen: 512,
+        capacity: 1024,
+        access: 1024,
+        range: 1024,
+        ..Default::default()
+    }
+}
+
+/// Run (NM, LM) for one workload point, in parallel with other points.
+/// The graph is built once and shared (all points use the same preset).
+fn run_pairs(points: Vec<SimConfig>) -> Vec<(Metrics, Metrics)> {
+    let graph = points[0].build_graph();
+    let jobs: Vec<SimConfig> = points
+        .iter()
+        .flat_map(|p| {
+            let mut nm = p.clone();
+            nm.variant = Variant::A;
+            let mut lm = p.clone();
+            lm.variant = Variant::M;
+            [nm, lm]
+        })
+        .collect();
+    let out = par_map(&jobs, default_threads(), |cfg| run_sim(cfg, &graph));
+    out.chunks(2).map(|c| (c[0].clone(), c[1].clone())).collect()
+}
+
+fn breakdown_row(label: String, m: &Metrics) -> Vec<String> {
+    let total = (m.feat_hit + m.feat_new + m.feat_merge + m.feat_dropped).max(1);
+    vec![
+        label,
+        format!("{:.1}%", 100.0 * m.feat_hit as f64 / total as f64),
+        format!("{:.1}%", 100.0 * m.feat_new as f64 / total as f64),
+        format!("{:.1}%", 100.0 * m.feat_merge as f64 / total as f64),
+    ]
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let mut json_rows = Vec::new();
+
+    // ---- Fig 15: speedup vs (range, access), flen=512, capacity=1024 ----
+    let ranges: &[usize] = if fast { &[256] } else { &[64, 256, 1024] };
+    let accesses: &[usize] = if fast { &[256] } else { &[64, 256, 1024] };
+    let mut points = Vec::new();
+    for &range in ranges {
+        for &access in accesses {
+            let mut c = base();
+            c.range = range;
+            c.access = access;
+            points.push(c);
+        }
+    }
+    let pairs = run_pairs(points.clone());
+    let mut rows = Vec::new();
+    for (cfg, (nm, lm)) in points.iter().zip(&pairs) {
+        let speedup = lm.speedup_vs(nm);
+        rows.push(vec![
+            cfg.range.to_string(),
+            cfg.access.to_string(),
+            format!("{speedup:.2}x"),
+            format!("{:.3}", lm.activation_ratio_vs(nm)),
+        ]);
+        json_rows.push(vec![
+            Json::str("fig15"),
+            Json::num(cfg.range as f64),
+            Json::num(cfg.access as f64),
+            Json::num(speedup),
+            Json::num(lm.activation_ratio_vs(nm)),
+        ]);
+        // LM must never lose; at small range×access our baseline already
+        // recovers locality through FR-FCFS, so the win there is modest
+        // (the paper's NM baseline is weaker at these corners).
+        assert!(speedup > 1.0, "LM speedup {speedup} at range={} access={}", cfg.range, cfg.access);
+        if cfg.range >= 1024 && cfg.access >= 1024 {
+            assert!(speedup > 1.3, "center-point LM speedup {speedup}");
+        }
+    }
+    print_table(
+        "Fig 15 — LM over NM speedup (paper: 1.43–1.59x)",
+        &["range", "access", "speedup", "activation ratio"],
+        &rows,
+    );
+
+    // ---- Fig 16: row-session size distribution at the center point ----
+    let pairs16 = run_pairs(vec![base()]);
+    let (nm, lm) = &pairs16[0];
+    let mut rows = Vec::new();
+    for size in 1..=8usize {
+        let n = nm.dram.session_hist.get(size).copied().unwrap_or(0);
+        let l = lm.dram.session_hist.get(size).copied().unwrap_or(0);
+        rows.push(vec![size.to_string(), n.to_string(), l.to_string()]);
+        json_rows.push(vec![
+            Json::str("fig16"),
+            Json::num(size as f64),
+            Json::num(n as f64),
+            Json::num(l as f64),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Fig 16 — row-session size distribution (NM mean {:.2} → LM mean {:.2})",
+            nm.dram.mean_session(),
+            lm.dram.mean_session()
+        ),
+        &["session size", "NM count", "LM count"],
+        &rows,
+    );
+    assert!(lm.dram.mean_session() > nm.dram.mean_session());
+    // size-1 sessions still dominate (the paper admits this too)
+    assert!(lm.dram.session_hist[1] > lm.dram.session_hist[4]);
+
+    // ---- Fig 17: breakdown vs (access, flen), cap/range fixed ----
+    let flens: &[usize] = if fast { &[256] } else { &[128, 512] };
+    let accs: &[usize] = if fast { &[256] } else { &[256, 1024] };
+    let mut points = Vec::new();
+    for &access in accs {
+        for &flen in flens {
+            let mut c = base();
+            c.access = access;
+            c.flen = flen;
+            points.push(c);
+        }
+    }
+    let pairs = run_pairs(points.clone());
+    let mut rows = Vec::new();
+    for (cfg, (nm, lm)) in points.iter().zip(&pairs) {
+        rows.push(breakdown_row(format!("NM a={} f={}", cfg.access, cfg.flen), nm));
+        rows.push(breakdown_row(format!("LM a={} f={}", cfg.access, cfg.flen), lm));
+        json_rows.push(vec![
+            Json::str("fig17"),
+            Json::num(cfg.access as f64),
+            Json::num(cfg.flen as f64),
+            Json::num(nm.feat_merge as f64),
+            Json::num(lm.feat_merge as f64),
+        ]);
+        assert!(lm.feat_merge > nm.feat_merge, "LM must merge more");
+    }
+    print_table("Fig 17 — access breakdown vs (access, flen)", &["config", "hit", "new", "merge"], &rows);
+
+    // ---- Fig 18: speedup vs (capacity, flen) ----
+    let caps: &[usize] = if fast { &[1024] } else { &[256, 1024, 4096] };
+    let flens18: &[usize] = if fast { &[256] } else { &[128, 256, 512] };
+    let mut points = Vec::new();
+    for &capacity in caps {
+        for &flen in flens18 {
+            let mut c = base();
+            c.capacity = capacity;
+            c.flen = flen;
+            points.push(c);
+        }
+    }
+    let pairs = run_pairs(points.clone());
+    let mut rows = Vec::new();
+    for (cfg, (nm, lm)) in points.iter().zip(&pairs) {
+        let speedup = lm.speedup_vs(nm);
+        rows.push(vec![
+            cfg.capacity.to_string(),
+            cfg.flen.to_string(),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(vec![
+            Json::str("fig18"),
+            Json::num(cfg.capacity as f64),
+            Json::num(cfg.flen as f64),
+            Json::num(speedup),
+        ]);
+        assert!(speedup > 1.0, "LM speedup {speedup} at cap={} flen={}", cfg.capacity, cfg.flen);
+    }
+    print_table(
+        "Fig 18 — LM over NM speedup vs (capacity, flen) (paper: 1.30–1.44x)",
+        &["capacity", "flen", "speedup"],
+        &rows,
+    );
+
+    // ---- Fig 19: breakdown vs (capacity, range) ----
+    let caps19: &[usize] = if fast { &[1024] } else { &[256, 4096] };
+    let ranges19: &[usize] = if fast { &[256] } else { &[64, 1024] };
+    let mut points = Vec::new();
+    for &capacity in caps19 {
+        for &range in ranges19 {
+            let mut c = base();
+            c.capacity = capacity;
+            c.range = range;
+            points.push(c);
+        }
+    }
+    let pairs = run_pairs(points.clone());
+    let mut rows = Vec::new();
+    for (cfg, (nm, lm)) in points.iter().zip(&pairs) {
+        rows.push(breakdown_row(format!("NM c={} r={}", cfg.capacity, cfg.range), nm));
+        rows.push(breakdown_row(format!("LM c={} r={}", cfg.capacity, cfg.range), lm));
+        json_rows.push(vec![
+            Json::str("fig19"),
+            Json::num(cfg.capacity as f64),
+            Json::num(cfg.range as f64),
+            Json::num(nm.feat_merge as f64),
+            Json::num(lm.feat_merge as f64),
+        ]);
+        // per-point feature-level classification is noisy at tiny ranges;
+        // require no material regression per point and assert the overall
+        // improvement after the loop.
+        assert!(
+            lm.feat_merge as f64 >= 0.85 * nm.feat_merge as f64,
+            "LM merge {} < NM merge {} at c={} r={}",
+            lm.feat_merge,
+            nm.feat_merge,
+            cfg.capacity,
+            cfg.range
+        );
+    }
+    let nm_total: u64 = pairs.iter().map(|(nm, _)| nm.feat_merge).sum();
+    let lm_total: u64 = pairs.iter().map(|(_, lm)| lm.feat_merge).sum();
+    assert!(lm_total > nm_total, "LM must merge more overall: {lm_total} vs {nm_total}");
+    print_table("Fig 19 — access breakdown vs (capacity, range)", &["config", "hit", "new", "merge"], &rows);
+
+    common::write_result(
+        "fig15_19_merge",
+        &common::rows_json(&["fig", "p1", "p2", "v1", "v2"], &json_rows),
+    );
+}

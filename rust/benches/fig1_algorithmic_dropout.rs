@@ -1,0 +1,84 @@
+//! Fig. 1 — effect of algorithmic dropout (LG-A) on DRAM metrics across
+//! drop rates, with the §3.3 closed-form model alongside (Fig. 1d).
+//!
+//! Setup per the paper: naive traversal, one-level LRU cache of 4K
+//! features, HBM. Desired amount falls linearly with α; actual burst
+//! amount and row activations barely move — the motivation for LiGNN.
+
+mod common;
+
+use lignn::analytic::AlgoDropoutModel;
+use lignn::config::{SimConfig, Variant};
+use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    let alphas = alpha_grid();
+    let mut json_rows = Vec::new();
+    for graph in common::eval_graphs() {
+        let cfg = SimConfig {
+            graph,
+            variant: Variant::A,
+            capacity: 4096, // "LRU cache hosts 4K features"
+            ..Default::default()
+        };
+        let g = cfg.build_graph();
+        let model = AlgoDropoutModel::new(
+            cfg.dram.config().elems_per_burst() as u32,
+            (cfg.flen_bytes() / cfg.dram.config().burst_bytes()) as u32,
+            1,
+        );
+        let (_, rows) = normalized_against_no_dropout(&cfg, &g, &alphas);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.1}", r.alpha),
+                    format!("{:.3}", r.desired_ratio),
+                    format!("{:.3}", r.access_ratio),
+                    format!("{:.3}", r.activation_ratio),
+                    format!("{:.3}", 1.0 / r.speedup),
+                    format!("{:.3}", model.desired_fraction(r.alpha)),
+                    format!("{:.3}", model.actual_fraction(r.alpha)),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Fig. 1 — algorithmic dropout on {} (normalized)", graph.name()),
+            &["alpha", "desired", "actual", "activation", "cycles", "model-desired", "model-actual"],
+            &table,
+        );
+        for r in &rows {
+            json_rows.push(vec![
+                Json::str(graph.name()),
+                Json::num(r.alpha),
+                Json::num(r.desired_ratio),
+                Json::num(r.access_ratio),
+                Json::num(r.activation_ratio),
+                Json::num(1.0 / r.speedup),
+                Json::num(model.actual_fraction(r.alpha)),
+            ]);
+        }
+        // Fig 1's claims at α=0.5: desired ≈ 0.5, actual ≈ 1, activation ≈ 1.
+        let mid = &rows[5];
+        assert!((mid.desired_ratio - 0.5).abs() < 0.05, "desired {}", mid.desired_ratio);
+        assert!(mid.access_ratio > 0.9, "actual {}", mid.access_ratio);
+        assert!(mid.activation_ratio > 0.85, "activation {}", mid.activation_ratio);
+        // Fig 1d: the model must fit the measured actual closely in the
+        // regime it describes (α ≤ 0.7); above that, cache hit-rate shifts
+        // and non-droppable write traffic open a modest gap, exactly as the
+        // paper's own Fig 1(d) shows for the tails.
+        for r in rows.iter().filter(|r| r.alpha <= 0.7) {
+            let m = model.actual_fraction(r.alpha);
+            assert!((m - r.access_ratio).abs() < 0.08, "model mismatch at α={}", r.alpha);
+        }
+    }
+    common::write_result(
+        "fig1_algorithmic_dropout",
+        &common::rows_json(
+            &["graph", "alpha", "desired", "actual", "activation", "cycles", "model_actual"],
+            &json_rows,
+        ),
+    );
+}

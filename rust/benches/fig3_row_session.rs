@@ -1,0 +1,66 @@
+//! Fig. 3 — distribution of burst accesses per DRAM row-open session for
+//! the baseline (LJ, GCN, HBM, aligned features, no dropout).
+//!
+//! The paper's observation: the effective bursts per row open session
+//! (max ~4) is far below the 64 bursts an HBM row can host — graph
+//! irregularity plus parallelism keep sessions short, which is what makes
+//! row-granularity dropout safe.
+
+mod common;
+
+use lignn::config::{SimConfig, Variant};
+use lignn::sim::run_sim;
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    let cfg = SimConfig {
+        graph: common::main_graph(),
+        variant: Variant::A,
+        alpha: 0.0,
+        ..Default::default()
+    };
+    let g = cfg.build_graph();
+    let m = run_sim(&cfg, &g);
+
+    let hist = &m.dram.session_hist;
+    let total: u64 = hist.iter().sum();
+    let bursts_per_row = cfg.dram.config().bursts_per_row();
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut cum = 0u64;
+    for (size, &count) in hist.iter().enumerate().skip(1) {
+        if count == 0 {
+            continue;
+        }
+        cum += count;
+        if size <= 16 || count * 1000 > total {
+            rows.push(vec![
+                size.to_string(),
+                count.to_string(),
+                format!("{:.2}%", 100.0 * count as f64 / total as f64),
+                format!("{:.2}%", 100.0 * cum as f64 / total as f64),
+            ]);
+        }
+        json_rows.push(vec![Json::num(size as f64), Json::num(count as f64)]);
+    }
+    print_table(
+        &format!(
+            "Fig. 3 — bursts per row-open session, {} GCN HBM (row hosts {} bursts; mean {:.2})",
+            cfg.graph.name(),
+            bursts_per_row,
+            m.dram.mean_session()
+        ),
+        &["session size", "count", "share", "cumulative"],
+        &rows,
+    );
+    common::write_result("fig3_row_session", &common::rows_json(&["size", "count"], &json_rows));
+
+    // The paper's claim: sessions are much smaller than a row.
+    let small_sessions: u64 = hist.iter().take(9).sum();
+    assert!(
+        small_sessions as f64 / total as f64 > 0.95,
+        "sessions not concentrated below 8 bursts"
+    );
+    assert!(m.dram.mean_session() < bursts_per_row as f64 / 8.0);
+}

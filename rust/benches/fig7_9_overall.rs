@@ -1,0 +1,102 @@
+//! Figs. 7/8/9 — overall results: LG-T vs LG-A across drop rates on the
+//! three datasets × three models (HBM): speedup, DRAM access amount and
+//! row-activation amount, all normalized to the no-dropout run.
+//!
+//! Paper's headline @ α=0.5: speedup 1.48–3.02×, accesses −34–55%,
+//! activations −59–82%.
+
+mod common;
+
+use lignn::config::{GnnModel, SimConfig, Variant};
+use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    let alphas = alpha_grid();
+    let mut json_rows = Vec::new();
+    let mut headline: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    for graph in common::eval_graphs() {
+        let g = SimConfig { graph, ..Default::default() }.build_graph();
+        for model in GnnModel::ALL {
+            for variant in [Variant::A, Variant::T] {
+                let cfg = SimConfig { graph, model, variant, ..Default::default() };
+                let (_, rows) = normalized_against_no_dropout(&cfg, &g, &alphas);
+                let table: Vec<Vec<String>> = rows
+                    .iter()
+                    .map(|r| {
+                        vec![
+                            format!("{:.1}", r.alpha),
+                            format!("{:.2}", r.speedup),
+                            format!("{:.3}", r.access_ratio),
+                            format!("{:.3}", r.activation_ratio),
+                        ]
+                    })
+                    .collect();
+                print_table(
+                    &format!(
+                        "Figs 7–9 — {} on {} / {} (vs no-dropout)",
+                        variant.name(),
+                        graph.name(),
+                        model.name()
+                    ),
+                    &["alpha", "speedup", "access", "activation"],
+                    &table,
+                );
+                for r in &rows {
+                    json_rows.push(vec![
+                        Json::str(graph.name()),
+                        Json::str(model.name()),
+                        Json::str(variant.name()),
+                        Json::num(r.alpha),
+                        Json::num(r.speedup),
+                        Json::num(r.access_ratio),
+                        Json::num(r.activation_ratio),
+                    ]);
+                }
+                if variant == Variant::T {
+                    let mid = &rows[5]; // α = 0.5
+                    headline.push((
+                        format!("{}/{}", graph.name(), model.name()),
+                        mid.speedup,
+                        1.0 - mid.access_ratio,
+                        1.0 - mid.activation_ratio,
+                    ));
+                }
+            }
+        }
+    }
+
+    let rows: Vec<Vec<String>> = headline
+        .iter()
+        .map(|(k, s, a, act)| {
+            vec![
+                k.clone(),
+                format!("{s:.2}x"),
+                format!("-{:.0}%", a * 100.0),
+                format!("-{:.0}%", act * 100.0),
+            ]
+        })
+        .collect();
+    print_table(
+        "Headline @ α=0.5 (paper: 1.48–3.02x, −34–55%, −59–82%)",
+        &["workload", "speedup", "access", "activation"],
+        &rows,
+    );
+    common::write_result(
+        "fig7_9_overall",
+        &common::rows_json(
+            &["graph", "model", "variant", "alpha", "speedup", "access", "activation"],
+            &json_rows,
+        ),
+    );
+
+    // Shape assertions: LG-T strictly helps at α=0.5 everywhere; LG-A
+    // gains stay marginal.
+    for (k, s, a, act) in &headline {
+        assert!(*s > 1.3, "{k}: speedup {s}");
+        assert!(*a > 0.25, "{k}: access reduction {a}");
+        assert!(*act > 0.4, "{k}: activation reduction {act}");
+    }
+}

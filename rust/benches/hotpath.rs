@@ -1,0 +1,104 @@
+//! Hot-path micro/macro benchmarks — the §Perf instrument. Reports
+//! throughput for each simulator stage and the end-to-end run, so
+//! before/after optimization deltas are measurable.
+
+mod common;
+
+use lignn::cache::LruCache;
+use lignn::config::{GraphPreset, SimConfig, Variant};
+use lignn::dram::{DramModel, DramStandardKind};
+use lignn::lignn::{AddressCalc, Criteria, LignnUnit};
+use lignn::sim::run_sim;
+use lignn::util::benchkit::{print_table, time};
+use lignn::util::json::Json;
+use lignn::util::rng::Pcg64;
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut record = |name: &str, per_s: f64, unit: &str, t_s: f64| {
+        rows.push(vec![
+            name.to_string(),
+            format!("{per_s:.2e} {unit}/s"),
+            format!("{:.3}s", t_s),
+        ]);
+        json.push(vec![Json::str(name), Json::num(per_s), Json::num(t_s)]);
+    };
+
+    // DRAM model raw service throughput (mixed hit/miss stream).
+    {
+        let n = 4_000_000u64;
+        let t = time(3, || {
+            let mut d = DramModel::new(DramStandardKind::Hbm.config());
+            let mut rng = Pcg64::new(1);
+            for _ in 0..n {
+                let addr = (rng.next_u64() % (1u64 << 28)) & !31;
+                d.read_burst(addr, 0);
+            }
+        });
+        record("dram.read_burst(random)", n as f64 / t.best_s, "bursts", t.best_s);
+    }
+    {
+        let n = 4_000_000u64;
+        let t = time(3, || {
+            let mut d = DramModel::new(DramStandardKind::Hbm.config());
+            for i in 0..n {
+                d.read_burst((i * 32) % (1 << 28), 0);
+            }
+        });
+        record("dram.read_burst(sequential)", n as f64 / t.best_s, "bursts", t.best_s);
+    }
+
+    // LRU cache probe throughput.
+    {
+        let n = 8_000_000u64;
+        let t = time(3, || {
+            let mut c = LruCache::new(4096);
+            let mut rng = Pcg64::new(2);
+            for _ in 0..n {
+                c.access(rng.below(65536));
+            }
+        });
+        record("cache.access", n as f64 / t.best_s, "probes", t.best_s);
+    }
+
+    // LiGNN unit (LG-S pipeline: expand + LGT + Algorithm 2).
+    {
+        let n_feats = 200_000u64;
+        let mapping = *DramModel::new(DramStandardKind::Hbm.config()).mapping();
+        let calc = AddressCalc::new(mapping, 1 << 24, 1024);
+        let t = time(3, || {
+            let mut u = LignnUnit::new(Variant::S, calc, 0.5, 1024, Criteria::Any, 3);
+            let mut out = Vec::new();
+            let mut rng = Pcg64::new(4);
+            for _ in 0..n_feats {
+                u.push_feature(rng.below(1 << 17), &mut out);
+                out.clear();
+            }
+        });
+        record("lignn.push_feature(LG-S)", n_feats as f64 / t.best_s, "features", t.best_s);
+    }
+
+    // End-to-end small run per variant.
+    for variant in [Variant::A, Variant::S, Variant::T] {
+        let cfg = SimConfig {
+            graph: GraphPreset::Small,
+            variant,
+            ..Default::default()
+        };
+        let g = cfg.build_graph();
+        let edges = g.num_edges() as f64;
+        let t = time(3, || {
+            let _ = run_sim(&cfg, &g);
+        });
+        record(
+            &format!("run_sim(small, {})", variant.name()),
+            edges / t.best_s,
+            "edges",
+            t.best_s,
+        );
+    }
+
+    print_table("Hot-path throughput", &["stage", "throughput", "best time"], &rows);
+    common::write_result("hotpath", &common::rows_json(&["stage", "per_s", "best_s"], &json));
+}

@@ -1,0 +1,47 @@
+//! Per-model layer shapes: how much aggregation and combination work one
+//! layer-1 epoch costs. Mirrors the L2 JAX models in
+//! `python/compile/model.py` so simulator and training path describe the
+//! same networks.
+
+use crate::config::GnnModel;
+
+/// Work per unit for the first GNN layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerShape {
+    /// Element-wise aggregation ops per edge.
+    pub agg_elems: usize,
+    /// MACs per vertex in the combination phase.
+    pub comb_macs: usize,
+}
+
+impl LayerShape {
+    pub fn layer1(model: GnnModel, flen: usize, hidden: usize) -> LayerShape {
+        match model {
+            // GCN: sum-aggregate flen elems/edge; one dense flen×hidden.
+            GnnModel::Gcn => LayerShape { agg_elems: flen, comb_macs: flen * hidden },
+            // SAGE: mean-aggregate + self path → two dense layers.
+            GnnModel::Sage => LayerShape { agg_elems: flen, comb_macs: 2 * flen * hidden },
+            // GIN: sum-aggregate + 2-layer MLP.
+            GnnModel::Gin => LayerShape {
+                agg_elems: flen,
+                comb_macs: flen * hidden + hidden * hidden,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_python_models() {
+        let s = LayerShape::layer1(GnnModel::Gcn, 64, 32);
+        assert_eq!(s.comb_macs, 64 * 32);
+        let s = LayerShape::layer1(GnnModel::Sage, 64, 32);
+        assert_eq!(s.comb_macs, 2 * 64 * 32);
+        let s = LayerShape::layer1(GnnModel::Gin, 64, 32);
+        assert_eq!(s.comb_macs, 64 * 32 + 32 * 32);
+        assert_eq!(s.agg_elems, 64);
+    }
+}

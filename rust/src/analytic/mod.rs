@@ -1,0 +1,8 @@
+//! Analytic models: the §3.3 closed-form DRAM-metric model (Fig. 1d) and
+//! the §5.2.4 area/power cost model.
+
+pub mod cost;
+pub mod model;
+
+pub use cost::{CostModel, CostReport};
+pub use model::AlgoDropoutModel;

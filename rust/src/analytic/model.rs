@@ -1,0 +1,123 @@
+//! §3.3's closed-form model of algorithmic dropout as seen by DRAM.
+//!
+//! Setup: Q random read requests each covering C continuous columns,
+//! N columns per row, M columns per burst, K elements per burst, dropout
+//! Bernoulli(α).
+//!
+//! * desired amount          = Q·C·(1−α)
+//! * actual (burst) amount   = Q·C·(1−α^K)         — a burst transfers
+//!   unless all K of its elements are dropped,
+//! * row-skip probability    ≤ α^(C·K/M)           — a request skips its
+//!   row only if *every* element it wants there is dropped,
+//! * expected inefficiency   = (1−α^K)/(1−α) = 1+α+…+α^(K−1)
+//!   (how many times more bursts algorithmic dropout moves than an ideal
+//!   locality-aware dropout at the same rate).
+
+
+/// Parameters of the closed-form model.
+#[derive(Debug, Clone, Copy)]
+pub struct AlgoDropoutModel {
+    /// Elements per burst (K).
+    pub k: u32,
+    /// Columns per request (C) — burst-granular columns a feature spans.
+    pub c: u32,
+    /// Columns per burst (M). In our geometry requests are already
+    /// burst-granular, so `c` counts bursts and `m = 1`.
+    pub m: u32,
+}
+
+impl AlgoDropoutModel {
+    pub fn new(k: u32, c: u32, m: u32) -> AlgoDropoutModel {
+        assert!(k > 0 && c > 0 && m > 0);
+        AlgoDropoutModel { k, c, m }
+    }
+
+    /// Fraction of data still desired: 1−α.
+    pub fn desired_fraction(&self, alpha: f64) -> f64 {
+        1.0 - alpha
+    }
+
+    /// Fraction of bursts still transferred: 1−α^K.
+    pub fn actual_fraction(&self, alpha: f64) -> f64 {
+        1.0 - alpha.powi(self.k as i32)
+    }
+
+    /// Upper bound on the probability an entire request's share of a row
+    /// is dropped (row-skip): α^(C·K/M).
+    pub fn row_skip_prob(&self, alpha: f64) -> f64 {
+        alpha.powf(self.c as f64 * self.k as f64 / self.m as f64)
+    }
+
+    /// Fraction of row activations remaining: 1 − α^(CK/M).
+    pub fn activation_fraction(&self, alpha: f64) -> f64 {
+        1.0 - self.row_skip_prob(alpha)
+    }
+
+    /// Burst inefficiency vs ideal locality-aware dropout:
+    /// (1−α^K)/(1−α) = 1+α+…+α^(K−1).
+    pub fn burst_inefficiency(&self, alpha: f64) -> f64 {
+        if alpha >= 1.0 {
+            self.k as f64
+        } else if alpha <= 0.0 {
+            1.0
+        } else {
+            self.actual_fraction(alpha) / (1.0 - alpha)
+        }
+    }
+
+    /// Activation inefficiency vs ideal row-granular dropout:
+    /// (1−α^(CK/M))/(1−α).
+    pub fn activation_inefficiency(&self, alpha: f64) -> f64 {
+        if alpha <= 0.0 {
+            1.0
+        } else {
+            self.activation_fraction(alpha) / (1.0 - alpha)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_series_identity() {
+        let m = AlgoDropoutModel::new(8, 4, 1);
+        let alpha: f64 = 0.5;
+        let series: f64 = (0..8).map(|i| alpha.powi(i)).sum();
+        assert!((m.burst_inefficiency(alpha) - series).abs() < 1e-12);
+    }
+
+    #[test]
+    fn limits() {
+        let m = AlgoDropoutModel::new(8, 4, 1);
+        assert_eq!(m.actual_fraction(0.0), 1.0);
+        assert!((m.actual_fraction(1.0) - 0.0).abs() < 1e-12);
+        assert_eq!(m.desired_fraction(0.0), 1.0);
+        assert_eq!(m.burst_inefficiency(0.0), 1.0);
+        // α→1: inefficiency → K
+        assert!((m.burst_inefficiency(0.999999) - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn actual_decays_much_slower_than_desired() {
+        // the §3.2 observation: at α=0.5 desired halves, actual barely moves
+        let m = AlgoDropoutModel::new(8, 32, 1);
+        assert!(m.desired_fraction(0.5) == 0.5);
+        assert!(m.actual_fraction(0.5) > 0.99);
+        // and rows are essentially never skipped
+        assert!(m.row_skip_prob(0.5) < 1e-70);
+    }
+
+    #[test]
+    fn monotone_in_alpha() {
+        let m = AlgoDropoutModel::new(8, 4, 1);
+        let mut prev = f64::INFINITY;
+        for i in 0..10 {
+            let a = i as f64 / 10.0;
+            let f = m.actual_fraction(a);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Run configuration: everything a simulation / training run needs, in one
+//! struct so figures regenerate bit-identically from a run seed.
+
+mod presets;
+
+pub use presets::{GraphPreset, WorkloadPreset};
+
+
+use crate::dram::standard::DramStandardKind;
+use crate::graph::CsrGraph;
+
+/// LiGNN variant (Table 3 of the paper).
+///
+/// | Variant | Trigger fire | Burst filter | Row filter | LGT | Merge |
+/// |---------|--------------|--------------|------------|-----|-------|
+/// | `A`     | n.a.         | element-wise | n.a.       | n.a.| no    |
+/// | `B`     | n.a.         | yes          | n.a.       | n.a.| no    |
+/// | `R`     | per feature  | optional     | yes        |16×16| no    |
+/// | `S`     | custom range | optional     | yes        |64×32| no    |
+/// | `T`     | custom range | optional     | yes        |64×32| yes   |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Algorithmic (element-wise) dropout baseline — `LG-A`.
+    A,
+    /// Burst-granularity Bernoulli filter — `LG-B`.
+    B,
+    /// Row-granularity dropout, trigger fires per feature — `LG-R`.
+    R,
+    /// Row-granularity dropout over a custom scheduling range — `LG-S`.
+    S,
+    /// `LG-S` plus locality-aware merging (REC) — `LG-T`.
+    T,
+    /// Merge-only (the "LM" configuration of §5.4): REC merger active, no
+    /// dropout at all. Compared against the non-merge "NM" baseline
+    /// (`LG-A` at α=0) in Figs 15–19. Not part of Table 3.
+    M,
+}
+
+impl Variant {
+    /// The Table-3 variants (LG-M is the separate §5.4 merge study).
+    pub const ALL: [Variant; 5] = [Variant::A, Variant::B, Variant::R, Variant::S, Variant::T];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::A => "LG-A",
+            Variant::B => "LG-B",
+            Variant::R => "LG-R",
+            Variant::S => "LG-S",
+            Variant::T => "LG-T",
+            Variant::M => "LM",
+        }
+    }
+
+    /// LGT geometry from Table 3: (rows, entries per row FIFO).
+    pub fn lgt_shape(&self) -> Option<(usize, usize)> {
+        match self {
+            Variant::A | Variant::B | Variant::M => None,
+            Variant::R => Some((16, 16)),
+            Variant::S | Variant::T => Some((64, 32)),
+        }
+    }
+
+    pub fn uses_row_filter(&self) -> bool {
+        matches!(self, Variant::R | Variant::S | Variant::T)
+    }
+
+    pub fn uses_merge(&self) -> bool {
+        matches!(self, Variant::T | Variant::M)
+    }
+
+    /// Paths that bypass the LGT issue their bursts through the engine's
+    /// `Access`-way interleaver (memory-level parallelism). This includes
+    /// the merge-only LM configuration: merging reorders *requests* (same
+    /// row class → adjacent admission), but the engine's concurrency still
+    /// interleaves bursts — only the LGT variants control the actual DRAM
+    /// command order. Adjacent same-row admissions still coalesce per
+    /// channel, which is exactly the partial merging Fig. 16 shows.
+    pub fn interleaves(&self) -> bool {
+        matches!(self, Variant::A | Variant::B | Variant::M)
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_uppercase().as_str() {
+            "A" | "LG-A" => Ok(Variant::A),
+            "B" | "LG-B" => Ok(Variant::B),
+            "R" | "LG-R" => Ok(Variant::R),
+            "S" | "LG-S" => Ok(Variant::S),
+            "T" | "LG-T" => Ok(Variant::T),
+            "M" | "LG-M" | "LM" => Ok(Variant::M),
+            other => Err(format!("unknown variant `{other}` (want A|B|R|S|T|M)")),
+        }
+    }
+}
+
+/// GNN model simulated by the accelerator engine (workload shapes only; the
+/// numeric training path lives in `trainer`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GnnModel {
+    Gcn,
+    Sage,
+    Gin,
+}
+
+impl GnnModel {
+    pub const ALL: [GnnModel; 3] = [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GnnModel::Gcn => "GCN",
+            GnnModel::Sage => "GraphSAGE",
+            GnnModel::Gin => "GIN",
+        }
+    }
+}
+
+impl std::str::FromStr for GnnModel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Ok(GnnModel::Gcn),
+            "sage" | "graphsage" => Ok(GnnModel::Sage),
+            "gin" => Ok(GnnModel::Gin),
+            other => Err(format!("unknown model `{other}` (want gcn|sage|gin)")),
+        }
+    }
+}
+
+/// One simulation run, fully specified. Defaults reproduce the paper's main
+/// setup: LJ-like graph, GCN, HBM, α=0.5, LG-T.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Which synthetic graph stands in for the paper's dataset.
+    pub graph: GraphPreset,
+    /// GNN model workload (layer shapes / traversal).
+    pub model: GnnModel,
+    /// DRAM standard under test.
+    pub dram: DramStandardKind,
+    /// LiGNN variant.
+    pub variant: Variant,
+    /// Dropout probability α ∈ [0, 1).
+    pub alpha: f64,
+    /// Feature vector length in f32 elements ("Flen").
+    pub flen: usize,
+    /// On-chip feature-buffer capacity in number of features ("Capacity").
+    pub capacity: usize,
+    /// Concurrent outstanding feature reads ("Access") — the engine's
+    /// memory-level parallelism. The default (32) calibrates the baseline
+    /// row-open-session distribution to Fig. 3's (sessions of 1–4 bursts);
+    /// the §5.4 merge study sweeps this explicitly.
+    pub access: usize,
+    /// Scheduling range for LG-S/T triggers, in feature requests ("Range").
+    pub range: usize,
+    /// Hidden dimension of the combination phase (compute model).
+    pub hidden: usize,
+    /// Keep-side criteria `C` for Algorithm 2 (`any` | `channel-balance`).
+    pub channel_balance: bool,
+    /// Model §4.3's dropout-mask write-back (1 bit/element, sequential,
+    /// good locality) in the DRAM traffic.
+    pub mask_writeback: bool,
+    /// Simulate the backward-pass aggregation too (Â^T·∂L/∂H: a second
+    /// irregular read phase over the transposed edge list, reusing the
+    /// forward mask — LiGNN drops nothing new there, §4.3). Off by
+    /// default: the paper's figures measure the forward aggregation.
+    pub backward: bool,
+    /// Capture the DRAM burst trace to this path (see `sim::trace`).
+    pub trace_path: Option<String>,
+    /// RNG seed — every stochastic component derives its stream from this.
+    pub seed: u64,
+    /// Base byte address of the feature matrix in DRAM (power-of-2 aligned,
+    /// §4.2's alignment requirement).
+    pub feat_base: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            graph: GraphPreset::LjSim,
+            model: GnnModel::Gcn,
+            dram: DramStandardKind::Hbm,
+            variant: Variant::T,
+            alpha: 0.5,
+            flen: 256,
+            capacity: 4096,
+            access: 32,
+            range: 1024,
+            hidden: 64,
+            channel_balance: false,
+            mask_writeback: true,
+            backward: false,
+            trace_path: None,
+            seed: 0x11_C0DE,
+            feat_base: 1 << 24, // 16 MiB — 4KB-aligned as §4.2 assumes
+        }
+    }
+}
+
+impl SimConfig {
+    /// Instantiate the graph for this run (deterministic from `seed`).
+    pub fn build_graph(&self) -> CsrGraph {
+        self.graph.build(self.seed)
+    }
+
+    /// Feature vector size in bytes (f32 elements).
+    pub fn flen_bytes(&self) -> u64 {
+        (self.flen * 4) as u64
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.alpha) {
+            return Err(format!("alpha must be in [0,1), got {}", self.alpha));
+        }
+        if self.flen == 0 || !self.flen.is_multiple_of(2) {
+            return Err(format!("flen must be positive and even, got {}", self.flen));
+        }
+        if self.access == 0 || self.range == 0 || self.capacity == 0 {
+            return Err("access/range/capacity must be positive".into());
+        }
+        if self.feat_base & (self.feat_base.wrapping_sub(1)) != 0 {
+            return Err("feat_base must be a power of two (alignment, §4.2)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in Variant::ALL {
+            let s = v.name();
+            assert_eq!(s.parse::<Variant>().unwrap(), v);
+        }
+        assert!("LG-X".parse::<Variant>().is_err());
+    }
+
+    #[test]
+    fn variant_table3_shapes() {
+        assert_eq!(Variant::A.lgt_shape(), None);
+        assert_eq!(Variant::B.lgt_shape(), None);
+        assert_eq!(Variant::R.lgt_shape(), Some((16, 16)));
+        assert_eq!(Variant::S.lgt_shape(), Some((64, 32)));
+        assert_eq!(Variant::T.lgt_shape(), Some((64, 32)));
+        assert!(Variant::T.uses_merge());
+        assert!(!Variant::S.uses_merge());
+    }
+
+    #[test]
+    fn model_parse() {
+        assert_eq!("graphsage".parse::<GnnModel>().unwrap(), GnnModel::Sage);
+        assert!("mlp".parse::<GnnModel>().is_err());
+    }
+
+    #[test]
+    fn default_config_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_alpha() {
+        let mut c = SimConfig::default();
+        c.alpha = 1.0;
+        assert!(c.validate().is_err());
+        c.alpha = -0.1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unaligned_base() {
+        let mut c = SimConfig::default();
+        c.feat_base = 3 << 20;
+        assert!(c.validate().is_err());
+    }
+
+}

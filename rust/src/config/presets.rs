@@ -1,0 +1,160 @@
+//! Graph & workload presets.
+//!
+//! The paper evaluates on LiveJournal (4.8M vertices), Orkut (3.1M) and
+//! Papers100M (111M). Those datasets (and testbed-scale DRAM sweeps over
+//! them) are not available here, so each is replaced by an R-MAT graph
+//! scaled down but matched in *sparsity regime* and *irregularity
+//! character* (power-law degrees, self-similar community structure — the
+//! properties that determine DRAM row-reuse distance distributions). See
+//! DESIGN.md "Substitutions" for the argument; `benches/table2_irregularity`
+//! verifies the η / ξ statistics.
+
+
+use crate::graph::{generate, CsrGraph};
+
+/// Named synthetic graphs standing in for the paper's datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphPreset {
+    /// LiveJournal stand-in: 2^16 vertices, avg degree ~14.
+    LjSim,
+    /// Orkut stand-in: 2^15 vertices, avg degree ~38 (denser).
+    OrSim,
+    /// Papers100M stand-in: 2^17 vertices, avg degree ~14.
+    PaSim,
+    /// Small R-MAT for examples / fast sweeps: 2^14 vertices, deg ~12.
+    Small,
+    /// Tiny R-MAT for unit tests: 2^10 vertices, deg ~8.
+    Tiny,
+    /// Planted-partition graph for the accuracy experiment (Table 5):
+    /// 1024 vertices, 8 communities.
+    Planted,
+}
+
+impl GraphPreset {
+    pub const PAPER_TRIO: [GraphPreset; 3] =
+        [GraphPreset::LjSim, GraphPreset::OrSim, GraphPreset::PaSim];
+
+    /// Short name used in figure rows (matches the paper's LJ/OR/PA).
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphPreset::LjSim => "LJ-sim",
+            GraphPreset::OrSim => "OR-sim",
+            GraphPreset::PaSim => "PA-sim",
+            GraphPreset::Small => "small",
+            GraphPreset::Tiny => "tiny",
+            GraphPreset::Planted => "planted",
+        }
+    }
+
+    /// (log2 #vertices, average degree, rmat (a,b,c) skew).
+    fn rmat_params(&self) -> (u32, f64, (f64, f64, f64)) {
+        match self {
+            // Skews chosen to land ξ (mean index distance) ≈ |V|/6, the
+            // regime Table 2 reports for the real graphs.
+            // Sizes chosen so the full figure suite regenerates in tens of
+            // minutes on a single core; ratios are scale-stable (verified
+            // against 2× larger instances — see DESIGN.md).
+            GraphPreset::LjSim => (16, 14.0, (0.57, 0.19, 0.19)),
+            GraphPreset::OrSim => (15, 38.0, (0.57, 0.19, 0.19)),
+            GraphPreset::PaSim => (17, 14.0, (0.55, 0.2, 0.2)),
+            GraphPreset::Small => (14, 12.0, (0.57, 0.19, 0.19)),
+            GraphPreset::Tiny => (10, 8.0, (0.57, 0.19, 0.19)),
+            GraphPreset::Planted => unreachable!("planted uses its own generator"),
+        }
+    }
+
+    /// Build the graph (deterministic in `seed`).
+    pub fn build(&self, seed: u64) -> CsrGraph {
+        match self {
+            GraphPreset::Planted => {
+                generate::planted_partition(1024, 8, 0.02, 0.002, seed)
+            }
+            _ => {
+                let (log_n, deg, (a, b, c)) = self.rmat_params();
+                let n = 1u64 << log_n;
+                let edges = (n as f64 * deg) as u64;
+                generate::rmat(log_n, edges, a, b, c, seed)
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for GraphPreset {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "lj" | "lj-sim" | "livejournal" => Ok(GraphPreset::LjSim),
+            "or" | "or-sim" | "orkut" => Ok(GraphPreset::OrSim),
+            "pa" | "pa-sim" | "papers100m" => Ok(GraphPreset::PaSim),
+            "small" => Ok(GraphPreset::Small),
+            "tiny" => Ok(GraphPreset::Tiny),
+            "planted" => Ok(GraphPreset::Planted),
+            other => Err(format!("unknown graph preset `{other}`")),
+        }
+    }
+}
+
+/// Parameter points for the merge-analysis experiments (§5.4): the paper
+/// varies Access, Capacity, Flen and Range around a (1024, 1024, 512, 1024)
+/// center.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadPreset {
+    pub access: usize,
+    pub capacity: usize,
+    pub flen: usize,
+    pub range: usize,
+}
+
+impl WorkloadPreset {
+    /// §5.4.2's fixed point: Flen=512, Capacity=1024, Range=1024, Access=1024.
+    pub const MERGE_CENTER: WorkloadPreset = WorkloadPreset {
+        access: 1024,
+        capacity: 1024,
+        flen: 512,
+        range: 1024,
+    };
+
+    pub fn apply(&self, cfg: &mut crate::config::SimConfig) {
+        cfg.access = self.access;
+        cfg.capacity = self.capacity;
+        cfg.flen = self.flen;
+        cfg.range = self.range;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build_deterministically() {
+        let g1 = GraphPreset::Tiny.build(7);
+        let g2 = GraphPreset::Tiny.build(7);
+        assert_eq!(g1.num_vertices(), g2.num_vertices());
+        assert_eq!(g1.num_edges(), g2.num_edges());
+        assert_eq!(g1.targets(), g2.targets());
+    }
+
+    #[test]
+    fn preset_sizes() {
+        let g = GraphPreset::Tiny.build(1);
+        assert_eq!(g.num_vertices(), 1024);
+        // ~8 avg degree, minus dedup/self-loop losses
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(avg > 4.0 && avg < 9.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn planted_builds() {
+        let g = GraphPreset::Planted.build(3);
+        assert_eq!(g.num_vertices(), 1024);
+        assert!(g.num_edges() > 0);
+    }
+
+    #[test]
+    fn preset_parse() {
+        assert_eq!("lj".parse::<GraphPreset>().unwrap(), GraphPreset::LjSim);
+        assert_eq!("orkut".parse::<GraphPreset>().unwrap(), GraphPreset::OrSim);
+        assert!("xx".parse::<GraphPreset>().is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Per-bank row-buffer state machine.
+//!
+//! A bank is either closed or holds one open row (open-page policy). The
+//! controller consults `Bank` for the earliest cycle a command may issue
+//! and records row-open *sessions* — the consecutive bursts served between
+//! an ACT and the following PRE, the quantity Fig. 3 / Fig. 16 histogram.
+
+/// Outcome of routing one read to a bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowOutcome {
+    /// The addressed row was already open.
+    Hit,
+    /// Another row was open — PRE + ACT required.
+    Conflict,
+    /// Bank was closed — ACT required.
+    Closed,
+}
+
+#[derive(Debug, Clone)]
+pub struct Bank {
+    /// Currently open row, if any.
+    pub open_row: Option<u32>,
+    /// Earliest cycle the next column command may issue on this bank.
+    pub ready_at: u64,
+    /// Cycle of the last ACT (for tRAS).
+    pub act_at: u64,
+    /// Bursts served in the current open-row session.
+    pub session_bursts: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Bank { open_row: None, ready_at: 0, act_at: 0, session_bursts: 0 }
+    }
+}
+
+impl Bank {
+    /// Classify an access to `row`.
+    pub fn outcome(&self, row: u32) -> RowOutcome {
+        match self.open_row {
+            Some(r) if r == row => RowOutcome::Hit,
+            Some(_) => RowOutcome::Conflict,
+            None => RowOutcome::Closed,
+        }
+    }
+
+    /// Close the current session (conflict PRE or end-of-sim flush),
+    /// returning its burst count if a session was open.
+    pub fn close_session(&mut self) -> Option<u64> {
+        if self.open_row.take().is_some() {
+            let n = self.session_bursts;
+            self.session_bursts = 0;
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    /// Open `row` at cycle `act_cycle`.
+    pub fn open(&mut self, row: u32, act_cycle: u64) {
+        debug_assert!(self.open_row.is_none(), "open() on non-closed bank");
+        self.open_row = Some(row);
+        self.act_at = act_cycle;
+        self.session_bursts = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_transitions() {
+        let mut b = Bank::default();
+        assert_eq!(b.outcome(5), RowOutcome::Closed);
+        b.open(5, 10);
+        assert_eq!(b.outcome(5), RowOutcome::Hit);
+        assert_eq!(b.outcome(6), RowOutcome::Conflict);
+    }
+
+    #[test]
+    fn session_accounting() {
+        let mut b = Bank::default();
+        assert_eq!(b.close_session(), None);
+        b.open(3, 0);
+        b.session_bursts = 7;
+        assert_eq!(b.close_session(), Some(7));
+        assert_eq!(b.open_row, None);
+        assert_eq!(b.session_bursts, 0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Physical address ⇄ DRAM location mapping.
+//!
+//! §2.2: "The index of each hierarchy is directly specified by bits in a
+//! given address". Modern NN platforms use *small interleaving* — channel
+//! bits sit just above the burst offset so consecutive bursts stripe across
+//! channels, maximizing bandwidth while keeping row-level locality.
+//!
+//! Bit layout (LSB → MSB):
+//!
+//! ```text
+//! | burst offset | channel | column | bank group | bank | rank | row |
+//! ```
+//!
+//! The REC hasher (§4.2) is a consumer of this module: with power-of-2
+//! alignment, "two neighbors share a DRAM row" reduces to equality of
+//! `row_key(feature_address(v))`, a pure bit-slice of the vertex index —
+//! exactly the paper's `v & ~7` example, but derived from the real mapping
+//! so the merger and the DRAM model can never disagree.
+
+
+use super::standard::DramConfig;
+
+/// Decoded DRAM location of a physical address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loc {
+    pub channel: u32,
+    pub rank: u32,
+    pub bankgroup: u32,
+    pub bank: u32,
+    pub row: u32,
+    /// Burst-granular column index within the row.
+    pub col: u32,
+}
+
+/// Bit-slicing address mapping for one DRAM configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressMapping {
+    offset_bits: u32,
+    ch_bits: u32,
+    col_bits: u32,
+    bg_bits: u32,
+    ba_bits: u32,
+    ra_bits: u32,
+    row_bits: u32,
+    burst_bytes: u64,
+}
+
+fn log2_exact(x: u64, what: &str) -> u32 {
+    assert!(x.is_power_of_two(), "{what} = {x} must be a power of two");
+    x.trailing_zeros()
+}
+
+impl AddressMapping {
+    pub fn new(cfg: &DramConfig) -> AddressMapping {
+        let burst_bytes = cfg.burst_bytes();
+        AddressMapping {
+            offset_bits: log2_exact(burst_bytes, "burst_bytes"),
+            ch_bits: log2_exact(cfg.channels as u64, "channels"),
+            col_bits: log2_exact(cfg.bursts_per_row(), "bursts_per_row"),
+            bg_bits: log2_exact(cfg.bankgroups as u64, "bankgroups"),
+            ba_bits: log2_exact(cfg.banks_per_group as u64, "banks_per_group"),
+            ra_bits: log2_exact(cfg.ranks as u64, "ranks"),
+            row_bits: log2_exact(cfg.rows_per_bank as u64, "rows_per_bank"),
+            burst_bytes,
+        }
+    }
+
+    pub fn burst_bytes(&self) -> u64 {
+        self.burst_bytes
+    }
+
+    /// Total addressable bytes under this mapping.
+    pub fn capacity_bytes(&self) -> u64 {
+        1u64
+            << (self.offset_bits
+                + self.ch_bits
+                + self.col_bits
+                + self.bg_bits
+                + self.ba_bits
+                + self.ra_bits
+                + self.row_bits)
+    }
+
+    fn field(addr: u64, shift: &mut u32, bits: u32) -> u32 {
+        let v = ((addr >> *shift) & ((1u64 << bits) - 1)) as u32;
+        *shift += bits;
+        v
+    }
+
+    /// Decode a physical address (wraps modulo capacity).
+    pub fn decode(&self, addr: u64) -> Loc {
+        let mut shift = self.offset_bits;
+        let a = addr;
+        let channel = Self::field(a, &mut shift, self.ch_bits);
+        let col = Self::field(a, &mut shift, self.col_bits);
+        let bankgroup = Self::field(a, &mut shift, self.bg_bits);
+        let bank = Self::field(a, &mut shift, self.ba_bits);
+        let rank = Self::field(a, &mut shift, self.ra_bits);
+        let row = ((a >> shift) & ((1u64 << self.row_bits) - 1)) as u32;
+        Loc { channel, rank, bankgroup, bank, row, col }
+    }
+
+    /// Unique key of the (channel, rank, bankgroup, bank, row) tuple — the
+    /// row-equivalence class the LGT and the REC hasher group by. Two
+    /// addresses with equal keys hit the same row buffer.
+    pub fn row_key(&self, addr: u64) -> u64 {
+        pack_key(&self.decode(addr))
+    }
+
+    /// Align an address down to its burst boundary.
+    pub fn burst_align(&self, addr: u64) -> u64 {
+        addr & !(self.burst_bytes - 1)
+    }
+
+    /// Burst-aligned addresses covering `[addr, addr+len)` — the "actual
+    /// accesses" a feature-read request expands to (Algorithm 1's
+    /// per-burst loop).
+    pub fn bursts_for_range(&self, addr: u64, len: u64) -> BurstRange {
+        let start = self.burst_align(addr);
+        let end = addr + len;
+        BurstRange { next: start, end, step: self.burst_bytes }
+    }
+
+    /// Number of index bits a vertex-feature array consumes per DRAM row:
+    /// with `flen_bytes` per vertex (power of two), `2^k` consecutive
+    /// vertices share each (channel-interleaved) row group.
+    pub fn vertices_per_row_group(&self, flen_bytes: u64) -> u64 {
+        // A row group is one row replicated across all channels (the
+        // channel bits are below the column bits, so consecutive addresses
+        // fill all channels' same-numbered row before moving on).
+        let row_group_bytes = (1u64 << (self.offset_bits + self.ch_bits + self.col_bits)) as u64;
+        (row_group_bytes / flen_bytes).max(1)
+    }
+}
+
+/// Pack a decoded location's row identity into the canonical row key.
+#[inline]
+pub fn pack_key(l: &Loc) -> u64 {
+    (l.row as u64) << 16
+        | (l.rank as u64) << 12
+        | (l.bank as u64) << 8
+        | (l.bankgroup as u64) << 4
+        | l.channel as u64
+}
+
+/// Iterator over burst-aligned addresses of a byte range.
+pub struct BurstRange {
+    next: u64,
+    end: u64,
+    step: u64,
+}
+
+impl Iterator for BurstRange {
+    type Item = u64;
+    fn next(&mut self) -> Option<u64> {
+        if self.next < self.end {
+            let a = self.next;
+            self.next += self.step;
+            Some(a)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::standard::DramStandardKind;
+
+    fn hbm_map() -> AddressMapping {
+        AddressMapping::new(&DramStandardKind::Hbm.config())
+    }
+
+    #[test]
+    fn decode_fields_roundtrip() {
+        let m = hbm_map();
+        // HBM: 32B burst (5 offset bits), 8 ch (3), 64 bursts/row (6 col
+        // bits), 4 bg (2), 4 banks (2), 1 rank (0), 16K rows (14).
+        let l0 = m.decode(0);
+        assert_eq!(l0, Loc { channel: 0, rank: 0, bankgroup: 0, bank: 0, row: 0, col: 0 });
+        // +32B → next channel
+        assert_eq!(m.decode(32).channel, 1);
+        // +256B → wraps channels, next column
+        let l = m.decode(256);
+        assert_eq!((l.channel, l.col), (0, 1));
+        // one full row group = 32B × 8ch × 64cols = 16 KiB → next bankgroup
+        let l = m.decode(16 * 1024);
+        assert_eq!((l.col, l.bankgroup), (0, 1));
+    }
+
+    #[test]
+    fn row_key_groups_rows() {
+        let m = hbm_map();
+        // Same channel+row, different column → same key.
+        assert_eq!(m.row_key(0), m.row_key(256));
+        // Different channel → different key.
+        assert_ne!(m.row_key(0), m.row_key(32));
+        // Different bankgroup → different key.
+        assert_ne!(m.row_key(0), m.row_key(16 * 1024));
+    }
+
+    #[test]
+    fn bursts_for_range_covers() {
+        let m = hbm_map();
+        // 1 KiB feature starting mid-burst needs 33 bursts (alignment).
+        let v: Vec<u64> = m.bursts_for_range(16, 1024).collect();
+        assert_eq!(v.len(), 33);
+        assert_eq!(v[0], 0);
+        assert_eq!(v[32], 1024);
+        // Aligned 1 KiB feature needs exactly 32 bursts.
+        let v: Vec<u64> = m.bursts_for_range(1024, 1024).collect();
+        assert_eq!(v.len(), 32);
+        assert!(v.iter().all(|a| a % 32 == 0));
+    }
+
+    #[test]
+    fn paper_v_and_7_example() {
+        // §4.2: flen=256 f32 (1 KiB), 4 KiB-aligned base → vertices sharing
+        // a row group are exactly v with equal v >> 4 here (16 KiB group /
+        // 1 KiB feature = 16 vertices per row group — the paper's v&~7 is
+        // the same construction under its 8 KiB row-group HBM variant).
+        let m = hbm_map();
+        let flen_bytes = 1024u64;
+        let base = 1u64 << 24;
+        let per_group = m.vertices_per_row_group(flen_bytes);
+        assert_eq!(per_group, 16);
+        let key = |v: u64| m.row_key(base + v * flen_bytes);
+        assert_eq!(key(0), key(15));
+        assert_ne!(key(0), key(16));
+        assert_eq!(key(16), key(31));
+    }
+
+    #[test]
+    fn ddr4_capacity() {
+        let m = AddressMapping::new(&DramStandardKind::Ddr4.config());
+        // 2ch × 16 banks × 64K rows × 8KB rows = 16 GiB
+        assert_eq!(m.capacity_bytes(), 16u64 << 30);
+    }
+
+    #[test]
+    fn all_standards_map() {
+        for k in [
+            DramStandardKind::Ddr3,
+            DramStandardKind::Ddr4,
+            DramStandardKind::Gddr5,
+            DramStandardKind::Gddr6,
+            DramStandardKind::Lpddr4,
+            DramStandardKind::Lpddr5,
+            DramStandardKind::Hbm,
+            DramStandardKind::Hbm2,
+        ] {
+            let m = AddressMapping::new(&k.config());
+            let a = 0x1234_5678u64 % m.capacity_bytes();
+            let l = m.decode(a);
+            assert!((l.channel as usize) < k.config().channels);
+            // burst-aligned addresses in the same burst share a decode
+            assert_eq!(m.decode(m.burst_align(a)).col, l.col);
+        }
+    }
+}

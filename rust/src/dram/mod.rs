@@ -1,0 +1,20 @@
+//! Cycle-level DRAM model — the Ramulator substitute.
+//!
+//! Models the hierarchy the paper's §2.2 describes: channel → rank → bank
+//! group → bank → row → column, with a row buffer per bank, open-page
+//! policy, FR-FCFS-lite scheduling within the accelerator's outstanding-
+//! request window, and per-standard timing/energy from Table 4.
+//!
+//! The metrics the paper reports all fall out of this model: burst count
+//! (the minimal DRAM transaction), row activations (the locality signal),
+//! row-open-session sizes (Fig. 3 / Fig. 16), and service time.
+
+pub mod bank;
+pub mod controller;
+pub mod energy;
+pub mod mapping;
+pub mod standard;
+
+pub use controller::{DramCounters, DramModel};
+pub use mapping::{AddressMapping, Loc};
+pub use standard::{DramConfig, DramStandardKind};

@@ -1,0 +1,322 @@
+//! DRAM standards — Table 4 of the paper, plus the timing/energy detail the
+//! cycle model needs.
+//!
+//! The geometry columns (columns/row, column size, burst length) are taken
+//! verbatim from Table 4. Timings are representative JEDEC-class values in
+//! device clock cycles; energies are representative per-operation estimates
+//! (pJ) in line with published DRAM power sheets. The paper's results are
+//! ratios against a same-standard baseline, which these values preserve.
+
+
+/// The DRAM standards of Table 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DramStandardKind {
+    Ddr3,
+    Ddr4,
+    Gddr5,
+    Gddr6,
+    Lpddr4,
+    Lpddr5,
+    Hbm,
+    Hbm2,
+}
+
+impl DramStandardKind {
+    /// The three standards the paper evaluates (§5.1.2).
+    pub const EVALUATED: [DramStandardKind; 3] = [
+        DramStandardKind::Hbm,
+        DramStandardKind::Ddr4,
+        DramStandardKind::Gddr5,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DramStandardKind::Ddr3 => "DDR3",
+            DramStandardKind::Ddr4 => "DDR4",
+            DramStandardKind::Gddr5 => "GDDR5",
+            DramStandardKind::Gddr6 => "GDDR6",
+            DramStandardKind::Lpddr4 => "LPDDR4",
+            DramStandardKind::Lpddr5 => "LPDDR5",
+            DramStandardKind::Hbm => "HBM",
+            DramStandardKind::Hbm2 => "HBM2",
+        }
+    }
+
+    pub fn config(&self) -> DramConfig {
+        DramConfig::of(*self)
+    }
+}
+
+impl std::str::FromStr for DramStandardKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ddr3" => Ok(DramStandardKind::Ddr3),
+            "ddr4" => Ok(DramStandardKind::Ddr4),
+            "gddr5" => Ok(DramStandardKind::Gddr5),
+            "gddr6" => Ok(DramStandardKind::Gddr6),
+            "lpddr4" => Ok(DramStandardKind::Lpddr4),
+            "lpddr5" => Ok(DramStandardKind::Lpddr5),
+            "hbm" => Ok(DramStandardKind::Hbm),
+            "hbm2" => Ok(DramStandardKind::Hbm2),
+            other => Err(format!("unknown DRAM standard `{other}`")),
+        }
+    }
+}
+
+/// Command timings in device clock cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    /// ACT → RD.
+    pub t_rcd: u64,
+    /// PRE → ACT.
+    pub t_rp: u64,
+    /// RD → first data (CAS latency).
+    pub t_cl: u64,
+    /// ACT → PRE minimum.
+    pub t_ras: u64,
+    /// RD → RD same bank group (column-to-column).
+    pub t_ccd: u64,
+    /// Data-bus occupancy of one burst.
+    pub t_bl: u64,
+    /// ACT → ACT different banks, same channel.
+    pub t_rrd: u64,
+    /// Four-activate window: at most 4 ACTs per rolling `t_faw` cycles.
+    pub t_faw: u64,
+    /// Average refresh interval (REF cadence).
+    pub t_refi: u64,
+    /// Refresh cycle time (channel stalls this long per REF).
+    pub t_rfc: u64,
+}
+
+/// Per-operation energy estimates (pJ).
+#[derive(Debug, Clone, Copy)]
+pub struct Energy {
+    /// One ACT+PRE pair.
+    pub act_pj: f64,
+    /// One read burst.
+    pub rd_pj: f64,
+}
+
+/// Full standard description: Table-4 geometry + timing + energy.
+#[derive(Debug, Clone, Copy)]
+pub struct DramConfig {
+    pub kind: DramStandardKind,
+    /// Device/command clock in MHz (data rate is 2× for DDR-style buses).
+    pub freq_mhz: u64,
+    pub channels: usize,
+    pub ranks: usize,
+    pub bankgroups: usize,
+    pub banks_per_group: usize,
+    pub rows_per_bank: usize,
+    /// Table 4 "Columns Per Row".
+    pub columns_per_row: usize,
+    /// Table 4 "Column Size (bits)".
+    pub column_bits: usize,
+    /// Table 4 "Burst" (columns transferred per read command).
+    pub burst_length: usize,
+    pub timing: Timing,
+    pub energy: Energy,
+}
+
+impl DramConfig {
+    pub fn of(kind: DramStandardKind) -> DramConfig {
+        use DramStandardKind::*;
+        match kind {
+            // Geometry straight from Table 4; timings representative of
+            // mid-bin parts of each standard.
+            Ddr3 => DramConfig {
+                kind,
+                freq_mhz: 800,
+                channels: 2,
+                ranks: 1,
+                bankgroups: 1,
+                banks_per_group: 8,
+                rows_per_bank: 1 << 16,
+                columns_per_row: 1024,
+                column_bits: 64,
+                burst_length: 8,
+                timing: Timing { t_rcd: 11, t_rp: 11, t_cl: 11, t_ras: 28, t_ccd: 4, t_bl: 4, t_rrd: 5, t_faw: 20, t_refi: 3120, t_rfc: 256 },
+                energy: Energy { act_pj: 2400.0, rd_pj: 1800.0 },
+            },
+            Ddr4 => DramConfig {
+                kind,
+                freq_mhz: 1200,
+                channels: 2,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                rows_per_bank: 1 << 16,
+                columns_per_row: 1024,
+                column_bits: 64,
+                burst_length: 8,
+                timing: Timing { t_rcd: 16, t_rp: 16, t_cl: 16, t_ras: 39, t_ccd: 6, t_bl: 4, t_rrd: 6, t_faw: 26, t_refi: 4680, t_rfc: 420 },
+                energy: Energy { act_pj: 2000.0, rd_pj: 1500.0 },
+            },
+            Gddr5 => DramConfig {
+                kind,
+                freq_mhz: 1750,
+                channels: 4,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                rows_per_bank: 1 << 14,
+                columns_per_row: 1024,
+                column_bits: 32,
+                burst_length: 8,
+                timing: Timing { t_rcd: 18, t_rp: 18, t_cl: 18, t_ras: 42, t_ccd: 3, t_bl: 4, t_rrd: 8, t_faw: 32, t_refi: 6825, t_rfc: 490 },
+                energy: Energy { act_pj: 1400.0, rd_pj: 900.0 },
+            },
+            Gddr6 => DramConfig {
+                kind,
+                freq_mhz: 2000,
+                channels: 8,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                rows_per_bank: 1 << 14,
+                columns_per_row: 1024,
+                column_bits: 32,
+                burst_length: 16,
+                timing: Timing { t_rcd: 22, t_rp: 22, t_cl: 22, t_ras: 50, t_ccd: 4, t_bl: 8, t_rrd: 9, t_faw: 36, t_refi: 7800, t_rfc: 560 },
+                energy: Energy { act_pj: 1300.0, rd_pj: 1000.0 },
+            },
+            Lpddr4 => DramConfig {
+                kind,
+                freq_mhz: 1600,
+                channels: 2,
+                ranks: 1,
+                bankgroups: 1,
+                banks_per_group: 8,
+                rows_per_bank: 1 << 15,
+                columns_per_row: 1024,
+                column_bits: 64,
+                burst_length: 16,
+                timing: Timing { t_rcd: 29, t_rp: 32, t_cl: 28, t_ras: 67, t_ccd: 8, t_bl: 8, t_rrd: 10, t_faw: 40, t_refi: 6240, t_rfc: 448 },
+                energy: Energy { act_pj: 1600.0, rd_pj: 1100.0 },
+            },
+            Lpddr5 => DramConfig {
+                kind,
+                freq_mhz: 3200,
+                channels: 2,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                rows_per_bank: 1 << 15,
+                columns_per_row: 1024,
+                column_bits: 64,
+                burst_length: 16,
+                timing: Timing { t_rcd: 36, t_rp: 38, t_cl: 40, t_ras: 84, t_ccd: 8, t_bl: 8, t_rrd: 12, t_faw: 64, t_refi: 12480, t_rfc: 900 },
+                energy: Energy { act_pj: 1400.0, rd_pj: 900.0 },
+            },
+            Hbm => DramConfig {
+                kind,
+                freq_mhz: 500,
+                channels: 8,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                rows_per_bank: 1 << 14,
+                columns_per_row: 128,
+                column_bits: 128,
+                burst_length: 2,
+                timing: Timing { t_rcd: 7, t_rp: 7, t_cl: 7, t_ras: 17, t_ccd: 2, t_bl: 1, t_rrd: 4, t_faw: 10, t_refi: 1950, t_rfc: 130 },
+                energy: Energy { act_pj: 900.0, rd_pj: 350.0 },
+            },
+            Hbm2 => DramConfig {
+                kind,
+                freq_mhz: 1000,
+                channels: 8,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                rows_per_bank: 1 << 14,
+                columns_per_row: 64,
+                column_bits: 128,
+                burst_length: 2,
+                timing: Timing { t_rcd: 14, t_rp: 14, t_cl: 14, t_ras: 34, t_ccd: 2, t_bl: 1, t_rrd: 4, t_faw: 16, t_refi: 3900, t_rfc: 260 },
+                energy: Energy { act_pj: 800.0, rd_pj: 300.0 },
+            },
+        }
+    }
+
+    /// Bytes moved by one burst read.
+    pub fn burst_bytes(&self) -> u64 {
+        (self.burst_length * self.column_bits / 8) as u64
+    }
+
+    /// Row size in bytes.
+    pub fn row_bytes(&self) -> u64 {
+        (self.columns_per_row * self.column_bits / 8) as u64
+    }
+
+    /// Number of bursts a full row holds (Fig. 3's "bursts per row" axis).
+    pub fn bursts_per_row(&self) -> u64 {
+        (self.columns_per_row / self.burst_length) as u64
+    }
+
+    /// Device clock period in nanoseconds.
+    pub fn tck_ns(&self) -> f64 {
+        1000.0 / self.freq_mhz as f64
+    }
+
+    pub fn banks_per_channel(&self) -> usize {
+        self.ranks * self.bankgroups * self.banks_per_group
+    }
+
+    /// f32 elements per burst — the paper's `K` (§3.3).
+    pub fn elems_per_burst(&self) -> usize {
+        self.burst_bytes() as usize / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_geometry() {
+        let ddr4 = DramConfig::of(DramStandardKind::Ddr4);
+        assert_eq!(ddr4.row_bytes(), 8192); // 1K cols × 64b
+        assert_eq!(ddr4.burst_bytes(), 64); // 8 × 64b
+        assert_eq!(ddr4.bursts_per_row(), 128);
+
+        let hbm = DramConfig::of(DramStandardKind::Hbm);
+        assert_eq!(hbm.row_bytes(), 2048); // 128 cols × 128b
+        assert_eq!(hbm.burst_bytes(), 32); // 2 × 128b
+        // Fig. 3's "64 bursts per row" on HBM:
+        assert_eq!(hbm.bursts_per_row(), 64);
+        assert_eq!(hbm.elems_per_burst(), 8); // K = 8 f32 per burst
+    }
+
+    #[test]
+    fn all_standards_have_sane_timing() {
+        for kind in [
+            DramStandardKind::Ddr3,
+            DramStandardKind::Ddr4,
+            DramStandardKind::Gddr5,
+            DramStandardKind::Gddr6,
+            DramStandardKind::Lpddr4,
+            DramStandardKind::Lpddr5,
+            DramStandardKind::Hbm,
+            DramStandardKind::Hbm2,
+        ] {
+            let c = DramConfig::of(kind);
+            assert!(c.timing.t_ras >= c.timing.t_rcd, "{kind:?}");
+            assert!(c.timing.t_faw >= c.timing.t_rrd, "{kind:?}");
+            assert!(c.timing.t_refi > 10 * c.timing.t_rfc, "{kind:?}");
+            assert!(c.timing.t_bl >= 1, "{kind:?}");
+            assert!(c.burst_bytes().is_power_of_two(), "{kind:?}");
+            assert!(c.row_bytes().is_power_of_two(), "{kind:?}");
+            assert!(c.channels.is_power_of_two(), "{kind:?}");
+            assert!(c.tck_ns() > 0.0);
+        }
+    }
+
+    #[test]
+    fn parse_standard() {
+        assert_eq!("hbm".parse::<DramStandardKind>().unwrap(), DramStandardKind::Hbm);
+        assert_eq!("GDDR5".parse::<DramStandardKind>().unwrap(), DramStandardKind::Gddr5);
+        assert!("hbm3".parse::<DramStandardKind>().is_err());
+    }
+}

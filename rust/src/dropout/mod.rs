@@ -1,0 +1,191 @@
+//! Dropout mask generation at the three granularities the paper compares.
+//!
+//! * **Element** — classic algorithmic dropout: i.i.d. Bernoulli(α) per
+//!   (vertex, feature-element). What LG-A does.
+//! * **Burst** — one Bernoulli(α) decision per aligned K-element group
+//!   (K = elements per DRAM burst): LiGNN's burst filter as seen by the
+//!   model. Dropping a burst zeroes K contiguous elements.
+//! * **Row** — one decision per DRAM *row group*: all feature elements of
+//!   the vertices sharing a row are kept or dropped together (LiGNN's row
+//!   integrity policy as seen by the model).
+//!
+//! The same generator feeds (a) the simulator's LG-A element filter and
+//! (b) the training path (Table 5), where masks become dense `[N, F]`
+//! inputs to the AOT train step. Granularity geometry is derived from the
+//! *actual* DRAM mapping so hardware and learning experiments agree.
+
+use crate::util::rng::Pcg64;
+
+use crate::dram::AddressMapping;
+
+/// Mask granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    Element,
+    /// K elements per decision (K = DRAM burst / 4 bytes).
+    Burst { k: usize },
+    /// All elements of `group` consecutive aligned vertices per decision.
+    Row { group: usize },
+}
+
+impl Granularity {
+    /// Burst granularity for a given DRAM mapping.
+    pub fn burst_of(mapping: &AddressMapping) -> Granularity {
+        Granularity::Burst { k: (mapping.burst_bytes() / 4) as usize }
+    }
+
+    /// Row-group granularity for a given DRAM mapping and feature size.
+    pub fn row_of(mapping: &AddressMapping, flen_bytes: u64) -> Granularity {
+        Granularity::Row { group: mapping.vertices_per_row_group(flen_bytes) as usize }
+    }
+}
+
+/// Deterministic mask generator (one PCG stream per epoch).
+pub struct MaskGen {
+    seed: u64,
+}
+
+impl MaskGen {
+    pub fn new(seed: u64) -> MaskGen {
+        MaskGen { seed }
+    }
+
+    /// Dense `[n, flen]` row-major keep-mask (1.0 keep / 0.0 drop) for
+    /// `epoch`, i.i.d. across epochs.
+    pub fn mask(&self, n: usize, flen: usize, alpha: f64, gran: Granularity, epoch: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(self.seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut m = vec![1.0f32; n * flen];
+        if alpha <= 0.0 {
+            return m;
+        }
+        match gran {
+            Granularity::Element => {
+                for v in m.iter_mut() {
+                    if rng.chance(alpha) {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Granularity::Burst { k } => {
+                let k = k.max(1);
+                for row in 0..n {
+                    let base = row * flen;
+                    let mut e = 0;
+                    while e < flen {
+                        if rng.chance(alpha) {
+                            let hi = (e + k).min(flen);
+                            for x in &mut m[base + e..base + hi] {
+                                *x = 0.0;
+                            }
+                        }
+                        e += k;
+                    }
+                }
+            }
+            Granularity::Row { group } => {
+                let group = group.max(1);
+                let mut g = 0;
+                while g < n {
+                    if rng.chance(alpha) {
+                        let hi = (g + group).min(n);
+                        for x in &mut m[g * flen..hi * flen] {
+                            *x = 0.0;
+                        }
+                    }
+                    g += group;
+                }
+            }
+        }
+        m
+    }
+
+    /// The compute-side rescale factor 1/(1-α) (§4.3: applied by the
+    /// compute unit, not by LiGNN).
+    pub fn scale(alpha: f64) -> f32 {
+        if alpha >= 1.0 {
+            0.0
+        } else {
+            (1.0 / (1.0 - alpha)) as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drop_rate(m: &[f32]) -> f64 {
+        m.iter().filter(|&&x| x == 0.0).count() as f64 / m.len() as f64
+    }
+
+    #[test]
+    fn element_rate_converges() {
+        let g = MaskGen::new(1);
+        let m = g.mask(200, 100, 0.5, Granularity::Element, 0);
+        assert!((drop_rate(&m) - 0.5).abs() < 0.02, "{}", drop_rate(&m));
+    }
+
+    #[test]
+    fn burst_mask_is_k_aligned() {
+        let g = MaskGen::new(2);
+        let k = 8;
+        let (n, f) = (64, 64);
+        let m = g.mask(n, f, 0.5, Granularity::Burst { k }, 0);
+        for row in 0..n {
+            for b in 0..f / k {
+                let chunk = &m[row * f + b * k..row * f + (b + 1) * k];
+                assert!(
+                    chunk.iter().all(|&x| x == chunk[0]),
+                    "burst {b} of row {row} not uniform"
+                );
+            }
+        }
+        assert!((drop_rate(&m) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn row_mask_groups_vertices() {
+        let g = MaskGen::new(3);
+        let group = 8;
+        let (n, f) = (128, 16);
+        let m = g.mask(n, f, 0.5, Granularity::Row { group }, 0);
+        for gi in 0..n / group {
+            let lo = gi * group * f;
+            let hi = lo + group * f;
+            let first = m[lo];
+            assert!(m[lo..hi].iter().all(|&x| x == first), "group {gi} mixed");
+        }
+        assert!((drop_rate(&m) - 0.5).abs() < 0.15); // only 16 groups
+    }
+
+    #[test]
+    fn alpha_zero_keeps_all() {
+        let g = MaskGen::new(4);
+        let m = g.mask(16, 16, 0.0, Granularity::Element, 0);
+        assert!(m.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn epochs_differ_deterministically() {
+        let g = MaskGen::new(5);
+        let a0 = g.mask(32, 32, 0.5, Granularity::Element, 0);
+        let a0b = g.mask(32, 32, 0.5, Granularity::Element, 0);
+        let a1 = g.mask(32, 32, 0.5, Granularity::Element, 1);
+        assert_eq!(a0, a0b);
+        assert_ne!(a0, a1);
+    }
+
+    #[test]
+    fn scale_matches_formula() {
+        assert_eq!(MaskGen::scale(0.0), 1.0);
+        assert_eq!(MaskGen::scale(0.5), 2.0);
+        assert_eq!(MaskGen::scale(1.0), 0.0);
+    }
+
+    #[test]
+    fn flen_not_multiple_of_k() {
+        let g = MaskGen::new(6);
+        let m = g.mask(10, 12, 0.9, Granularity::Burst { k: 8 }, 0);
+        assert_eq!(m.len(), 120); // no panic, tail chunk handled
+    }
+}

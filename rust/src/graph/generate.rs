@@ -1,0 +1,152 @@
+//! Synthetic graph generators (deterministic in the seed).
+//!
+//! `rmat` produces the power-law, self-similar graphs that stand in for the
+//! paper's LiveJournal / Orkut / Papers100M datasets; `planted_partition`
+//! produces the labeled community graph the accuracy experiment (Table 5)
+//! trains on. Both use PCG64 so every figure regenerates bit-identically.
+
+use crate::util::rng::Pcg64;
+
+use super::CsrGraph;
+
+/// R-MAT generator (Chakrabarti et al.): recursively pick a quadrant with
+/// probabilities (a, b, c, d=1-a-b-c), with ±10% per-level noise on `a` to
+/// avoid degenerate striping. Produces `num_edges` directed edges over
+/// `2^log_n` vertices (self-loops/duplicates removed by CSR construction).
+pub fn rmat(log_n: u32, num_edges: u64, a: f64, b: f64, c: f64, seed: u64) -> CsrGraph {
+    assert!(log_n <= 31, "log_n too large");
+    assert!(a + b + c < 1.0 + 1e-9, "quadrant probabilities must sum <= 1");
+    let n = 1usize << log_n;
+    let mut rng = Pcg64::new(seed ^ 0x524D_4154); // "RMAT"
+    let mut edges = Vec::with_capacity(num_edges as usize);
+    for _ in 0..num_edges {
+        let (mut src, mut dst) = (0u32, 0u32);
+        for _level in 0..log_n {
+            // jitter keeps the degree distribution heavy-tailed but not
+            // exactly nested (standard R-MAT practice)
+            let noise = 0.9 + 0.2 * rng.f64();
+            let aa = (a * noise).min(0.95);
+            let r: f64 = rng.f64();
+            let (sbit, dbit) = if r < aa {
+                (0, 0)
+            } else if r < aa + b {
+                (0, 1)
+            } else if r < aa + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            src = (src << 1) | sbit;
+            dst = (dst << 1) | dbit;
+        }
+        edges.push((src, dst));
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Planted-partition (stochastic block model) graph with `classes` equal
+/// communities: intra-community edge probability `p_in`, inter `p_out`.
+/// Undirected (both directions inserted). Labels are attached to the graph.
+pub fn planted_partition(
+    n: usize,
+    classes: usize,
+    p_in: f64,
+    p_out: f64,
+    seed: u64,
+) -> CsrGraph {
+    assert!(classes > 0 && n >= classes);
+    let mut rng = Pcg64::new(seed ^ 0x5042_4C4B); // "PBLK"
+    let labels: Vec<u16> = (0..n).map(|v| (v % classes) as u16).collect();
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            let p = if labels[u as usize] == labels[v as usize] {
+                p_in
+            } else {
+                p_out
+            };
+            if rng.chance(p) {
+                edges.push((u, v));
+                edges.push((v, u));
+            }
+        }
+    }
+    let mut g = CsrGraph::from_edges(n, &edges);
+    g.set_labels(labels);
+    g
+}
+
+/// Uniform Erdős–Rényi G(n, m) — used by tests as a no-locality control.
+pub fn erdos_renyi(n: usize, num_edges: u64, seed: u64) -> CsrGraph {
+    let mut rng = Pcg64::new(seed ^ 0x4552_444F); // "ERDO"
+    let edges: Vec<(u32, u32)> = (0..num_edges)
+        .map(|_| (rng.below(n as u32), rng.below(n as u32)))
+        .collect();
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_is_deterministic() {
+        let g1 = rmat(10, 4096, 0.57, 0.19, 0.19, 42);
+        let g2 = rmat(10, 4096, 0.57, 0.19, 0.19, 42);
+        assert_eq!(g1.targets(), g2.targets());
+        let g3 = rmat(10, 4096, 0.57, 0.19, 0.19, 43);
+        assert_ne!(g1.targets(), g3.targets());
+    }
+
+    #[test]
+    fn rmat_degree_skew() {
+        // R-MAT must be heavy-tailed: max degree far above average.
+        let g = rmat(12, 32768, 0.57, 0.19, 0.19, 1);
+        let n = g.num_vertices();
+        let avg = g.num_edges() as f64 / n as f64;
+        let max = (0..n as u32).map(|v| g.in_degree(v)).max().unwrap();
+        assert!(
+            (max as f64) > 10.0 * avg,
+            "max degree {max} not >> avg {avg}"
+        );
+    }
+
+    #[test]
+    fn rmat_vertices_in_range() {
+        let g = rmat(8, 1000, 0.6, 0.15, 0.15, 5);
+        assert_eq!(g.num_vertices(), 256);
+        for &t in g.targets() {
+            assert!((t as usize) < 256);
+        }
+    }
+
+    #[test]
+    fn planted_partition_prefers_intra() {
+        let g = planted_partition(200, 4, 0.3, 0.01, 9);
+        let labels = g.labels().unwrap().to_vec();
+        let (mut intra, mut inter) = (0usize, 0usize);
+        for (d, s) in g.edge_iter() {
+            if labels[d as usize] == labels[s as usize] {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        assert!(intra > inter, "intra {intra} <= inter {inter}");
+    }
+
+    #[test]
+    fn planted_partition_is_undirected() {
+        let g = planted_partition(64, 4, 0.2, 0.05, 11);
+        for (d, s) in g.edge_iter() {
+            assert!(g.neighbors(s).binary_search(&d).is_ok());
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_size() {
+        let g = erdos_renyi(128, 1000, 3);
+        assert_eq!(g.num_vertices(), 128);
+        assert!(g.num_edges() > 800); // some dup/self-loop loss
+    }
+}

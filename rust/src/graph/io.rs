@@ -1,0 +1,174 @@
+//! Graph file I/O: SNAP-style edge lists and a binary CSR cache.
+//!
+//! The evaluation uses synthetic stand-ins, but a downstream user with the
+//! real LiveJournal / Orkut edge lists (SNAP format: one `src dst` pair
+//! per line, `#` comments) can run every experiment on them:
+//!
+//! ```text
+//! lignn simulate --graph-file soc-LiveJournal1.txt ...
+//! ```
+//!
+//! Large graphs parse once and are cached next to the source file as
+//! `<file>.csr` (little-endian: magic, n, m, offsets, targets).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::CsrGraph;
+
+const MAGIC: u64 = 0x4C49_474E_4353_5231; // "LIGNCSR1"
+
+/// Parse a SNAP-style edge list (`src dst` per line; `#`/`%` comments,
+/// whitespace-separated). Vertex ids are compacted to `0..n`.
+pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
+    let f = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let reader = BufReader::new(f);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (a, b) = (it.next(), it.next());
+        let (Some(a), Some(b)) = (a, b) else {
+            return Err(anyhow!("{path:?}:{} malformed line: {t}", lineno + 1));
+        };
+        let src: u32 = a.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let dst: u32 = b.parse().with_context(|| format!("line {}", lineno + 1))?;
+        max_id = max_id.max(src).max(dst);
+        edges.push((src, dst));
+    }
+    if edges.is_empty() {
+        return Err(anyhow!("{path:?}: no edges"));
+    }
+    Ok(CsrGraph::from_edges(max_id as usize + 1, &edges))
+}
+
+/// Write the binary CSR cache.
+pub fn write_csr(path: &Path, g: &CsrGraph) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &o in g.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &t in g.targets() {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary CSR cache.
+pub fn read_csr(path: &Path) -> Result<CsrGraph> {
+    let f = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    if read_u64(&mut r)? != MAGIC {
+        return Err(anyhow!("{path:?}: not a lignn CSR cache"));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let mut offsets = vec![0u64; n + 1];
+    for o in offsets.iter_mut() {
+        r.read_exact(&mut u64buf)?;
+        *o = u64::from_le_bytes(u64buf);
+    }
+    let mut targets = vec![0u32; m];
+    let mut u32buf = [0u8; 4];
+    for t in targets.iter_mut() {
+        r.read_exact(&mut u32buf)?;
+        *t = u32::from_le_bytes(u32buf);
+    }
+    CsrGraph::from_parts(offsets, targets)
+        .map_err(|e| anyhow!("{path:?}: corrupt CSR cache: {e}"))
+}
+
+/// Load a graph from any supported file: `.csr` caches load directly;
+/// anything else parses as an edge list and writes the cache beside it.
+pub fn load(path: &Path) -> Result<CsrGraph> {
+    if path.extension().map(|e| e == "csr").unwrap_or(false) {
+        return read_csr(path);
+    }
+    let cache = path.with_extension("csr");
+    if cache.exists() {
+        if let Ok(g) = read_csr(&cache) {
+            return Ok(g);
+        }
+    }
+    let g = read_edge_list(path)?;
+    // best-effort cache write
+    let _ = write_csr(&cache, &g);
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lignn-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let p = tmp("g1.txt");
+        std::fs::write(&p, "# comment\n0 1\n1 2\n2 0\n\n% other comment\n1 0\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "0 zebra\n").unwrap();
+        assert!(read_edge_list(&p).is_err());
+        let p2 = tmp("empty.txt");
+        std::fs::write(&p2, "# nothing\n").unwrap();
+        assert!(read_edge_list(&p2).is_err());
+    }
+
+    #[test]
+    fn csr_cache_roundtrip() {
+        let g = crate::graph::generate::rmat(8, 2000, 0.57, 0.19, 0.19, 5);
+        let p = tmp("g2.csr");
+        write_csr(&p, &g).unwrap();
+        let back = read_csr(&p).unwrap();
+        assert_eq!(back.offsets(), g.offsets());
+        assert_eq!(back.targets(), g.targets());
+    }
+
+    #[test]
+    fn load_builds_and_reuses_cache() {
+        let p = tmp("g3.txt");
+        std::fs::write(&p, "0 1\n1 2\n").unwrap();
+        let cache = p.with_extension("csr");
+        let _ = std::fs::remove_file(&cache);
+        let g1 = load(&p).unwrap();
+        assert!(cache.exists(), "cache should be written");
+        let g2 = load(&p).unwrap(); // second load hits the cache
+        assert_eq!(g1.targets(), g2.targets());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("notcsr.csr");
+        std::fs::write(&p, vec![0u8; 64]).unwrap();
+        assert!(read_csr(&p).is_err());
+    }
+}

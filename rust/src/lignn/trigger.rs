@@ -1,0 +1,91 @@
+//! Trigger `F` (Algorithm 1) — decides when `locality_ordering_output`
+//! runs.
+//!
+//! The trigger is "notified with relevant information such as the size of
+//! the LGT (or its items), elapsed time, or compute engine utilization".
+//! Two firing disciplines cover the paper's variants:
+//!
+//! * `PerFeature` — fires after every feature read request (LG-R),
+//! * `Range(n)` — fires after `n` feature requests (LG-S/T's "custom
+//!   interval like certain number of features").
+//!
+//! Independent of the discipline, LGT *pressure* (a capacity bound hit)
+//! always forces a fire — hardware cannot buffer past its CAM/FIFO sizes.
+
+/// Firing discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Fire on every feature read request (LG-R).
+    PerFeature,
+    /// Fire every `n` feature read requests (LG-S / LG-T).
+    Range(usize),
+}
+
+/// Trigger state machine.
+#[derive(Debug)]
+pub struct TriggerState {
+    trigger: Trigger,
+    features_since_fire: usize,
+    bursts_since_fire: usize,
+}
+
+impl TriggerState {
+    pub fn new(trigger: Trigger) -> TriggerState {
+        TriggerState { trigger, features_since_fire: 0, bursts_since_fire: 0 }
+    }
+
+    /// Notify: one feature request arrived, expanding to `bursts` bursts
+    /// (post-filter). Returns `true` if the trigger fires.
+    pub fn on_feature(&mut self, bursts: usize) -> bool {
+        self.features_since_fire += 1;
+        self.bursts_since_fire += bursts;
+        match self.trigger {
+            Trigger::PerFeature => true,
+            Trigger::Range(n) => self.features_since_fire >= n,
+        }
+    }
+
+    /// Bursts accumulated since the last fire — Algorithm 2's desired
+    /// output size `n` (steady state: drain as much as arrived).
+    pub fn output_budget(&self) -> usize {
+        self.bursts_since_fire.max(1)
+    }
+
+    /// Reset after a fire (any cause, including pressure).
+    pub fn fired(&mut self) {
+        self.features_since_fire = 0;
+        self.bursts_since_fire = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_feature_fires_every_time() {
+        let mut t = TriggerState::new(Trigger::PerFeature);
+        assert!(t.on_feature(32));
+        assert_eq!(t.output_budget(), 32);
+        t.fired();
+        assert!(t.on_feature(8));
+        assert_eq!(t.output_budget(), 8);
+    }
+
+    #[test]
+    fn range_fires_at_interval() {
+        let mut t = TriggerState::new(Trigger::Range(3));
+        assert!(!t.on_feature(4));
+        assert!(!t.on_feature(4));
+        assert!(t.on_feature(4));
+        assert_eq!(t.output_budget(), 12);
+        t.fired();
+        assert!(!t.on_feature(4));
+    }
+
+    #[test]
+    fn budget_floor_is_one() {
+        let t = TriggerState::new(Trigger::Range(8));
+        assert_eq!(t.output_budget(), 1);
+    }
+}

@@ -1,0 +1,295 @@
+//! `lignn` — launcher for the LiGNN reproduction.
+//!
+//! Subcommands:
+//!   simulate     one simulator run, printed as a summary line or JSON
+//!   sweep        α sweep normalized against the no-dropout baseline
+//!   train        end-to-end PJRT training with burst/row dropout masks
+//!   table5       the full Table-5 accuracy grid
+//!   graph-stats  Table-2 irregularity statistics of the graph presets
+//!   report-cost  §5.2.4 area/power estimates for each variant
+//!   analytic     §3.3 closed-form model across α
+//!
+//! Run `lignn <cmd> --help-flags` to see each command's flags.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use lignn::analytic::{AlgoDropoutModel, CostModel};
+use lignn::config::{GraphPreset, SimConfig, Variant};
+use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
+use lignn::sim::run_sim;
+use lignn::trainer::{train, Dataset, MaskKind, TrainConfig};
+use lignn::util::benchkit::print_table;
+use lignn::util::cli::Args;
+use lignn::util::json::Json;
+
+fn sim_config(a: &Args) -> Result<SimConfig> {
+    let mut cfg = SimConfig::default();
+    cfg.graph = a.get_or("graph", "lj").parse().map_err(anyhow::Error::msg)?;
+    cfg.model = a.get_or("model", "gcn").parse().map_err(anyhow::Error::msg)?;
+    cfg.dram = a.get_or("dram", "hbm").parse().map_err(anyhow::Error::msg)?;
+    cfg.variant = a.get_or("variant", "T").parse().map_err(anyhow::Error::msg)?;
+    cfg.alpha = a.parse_or("alpha", cfg.alpha).map_err(anyhow::Error::msg)?;
+    cfg.flen = a.parse_or("flen", cfg.flen).map_err(anyhow::Error::msg)?;
+    cfg.capacity = a.parse_or("capacity", cfg.capacity).map_err(anyhow::Error::msg)?;
+    cfg.access = a.parse_or("access", cfg.access).map_err(anyhow::Error::msg)?;
+    cfg.range = a.parse_or("range", cfg.range).map_err(anyhow::Error::msg)?;
+    cfg.seed = a.parse_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.channel_balance = a.has("channel-balance");
+    if a.has("no-mask-writeback") {
+        cfg.mask_writeback = false;
+    }
+    cfg.backward = a.has("backward");
+    cfg.trace_path = a.get("trace").map(str::to_string);
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+/// Resolve the run graph: `--graph-file <path>` (SNAP edge list or .csr
+/// cache) overrides the synthetic preset.
+fn load_graph(a: &Args, cfg: &SimConfig) -> Result<lignn::graph::CsrGraph> {
+    match a.get("graph-file") {
+        Some(path) => lignn::graph::io::load(std::path::Path::new(path)),
+        None => Ok(cfg.build_graph()),
+    }
+}
+
+fn metrics_json(m: &lignn::Metrics) -> Json {
+    Json::obj(vec![
+        ("variant", Json::str(m.variant.clone())),
+        ("graph", Json::str(m.graph.clone())),
+        ("model", Json::str(m.model.clone())),
+        ("dram", Json::str(m.dram_standard.clone())),
+        ("alpha", Json::num(m.alpha)),
+        ("exec_ns", Json::num(m.exec_ns)),
+        ("mem_ns", Json::num(m.mem_ns)),
+        ("compute_ns", Json::num(m.compute_ns)),
+        ("bursts", Json::num(m.dram.total_bursts() as f64)),
+        ("reads", Json::num(m.dram.reads as f64)),
+        ("writes", Json::num(m.dram.writes as f64)),
+        ("activations", Json::num(m.dram.activations as f64)),
+        ("row_hits", Json::num(m.dram.row_hits as f64)),
+        ("mean_session", Json::num(m.dram.mean_session())),
+        ("energy_pj", Json::num(m.energy.total_pj)),
+        ("cache_hits", Json::num(m.cache_hits as f64)),
+        ("cache_misses", Json::num(m.cache_misses as f64)),
+        ("desired_elems", Json::num(m.unit.desired_elems as f64)),
+        ("feat_hit", Json::num(m.feat_hit as f64)),
+        ("feat_new", Json::num(m.feat_new as f64)),
+        ("feat_merge", Json::num(m.feat_merge as f64)),
+        ("feat_dropped", Json::num(m.feat_dropped as f64)),
+    ])
+}
+
+fn cmd_simulate(a: &Args) -> Result<()> {
+    let cfg = sim_config(a)?;
+    let graph = load_graph(a, &cfg)?;
+    let m = run_sim(&cfg, &graph);
+    if a.has("json") {
+        println!("{}", metrics_json(&m));
+    } else {
+        println!("{}", m.summary());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let cfg = sim_config(a)?;
+    let graph = load_graph(a, &cfg)?;
+    let (_, rows) = normalized_against_no_dropout(&cfg, &graph, &alpha_grid());
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.1}", r.alpha),
+                format!("{:.3}", r.speedup),
+                format!("{:.3}", r.access_ratio),
+                format!("{:.3}", r.activation_ratio),
+                format!("{:.3}", r.desired_ratio),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "{} on {} / {} / {} (normalized to no-dropout)",
+            cfg.variant.name(),
+            cfg.graph.name(),
+            cfg.model.name(),
+            cfg.dram.name()
+        ),
+        &["alpha", "speedup", "access", "activation", "desired"],
+        &table,
+    );
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        model: a.get_or("model", "gcn").to_string(),
+        alpha: a.parse_or("alpha", 0.5).map_err(anyhow::Error::msg)?,
+        mask: a.get_or("mask", "burst").parse().map_err(anyhow::Error::msg)?,
+        epochs: a.parse_or("epochs", 200).map_err(anyhow::Error::msg)?,
+        seed: a.parse_or("seed", 0xACC0_DEu64).map_err(anyhow::Error::msg)?,
+    };
+    let ds = Dataset::planted(1024, 64, 8, 7);
+    let r = train(Path::new(a.get_or("artifacts", "artifacts")), &cfg, &ds)?;
+    println!(
+        "{} α={} mask={:?}: final loss {:.4}, train acc {:.3}, test acc {:.3}",
+        cfg.model,
+        cfg.alpha,
+        cfg.mask,
+        r.losses.last().copied().unwrap_or(f32::NAN),
+        r.train_accuracy,
+        r.test_accuracy
+    );
+    Ok(())
+}
+
+fn cmd_table5(a: &Args) -> Result<()> {
+    let model = a.get_or("model", "gcn").to_string();
+    let epochs = a.parse_or("epochs", 200).map_err(anyhow::Error::msg)?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts")).to_path_buf();
+    let ds = Dataset::planted(1024, 64, 8, 7);
+    let mut rows = Vec::new();
+    for mask in [MaskKind::Element, MaskKind::Burst, MaskKind::Row] {
+        for alpha in [0.0, 0.1, 0.2, 0.5] {
+            let cfg = TrainConfig { model: model.clone(), alpha, mask, epochs, seed: 0xACC0_DE };
+            let r = train(&dir, &cfg, &ds)?;
+            rows.push(vec![
+                format!("{mask:?}"),
+                format!("{alpha:.1}"),
+                format!("{:.3}", r.test_accuracy),
+                format!("{:.4}", r.losses.last().unwrap()),
+            ]);
+        }
+    }
+    print_table(
+        &format!("Table 5 — accuracy under burst/row dropout ({model}, {epochs} epochs)"),
+        &["mask", "alpha", "test-acc", "final-loss"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_graph_stats(_a: &Args) -> Result<()> {
+    let mut rows = Vec::new();
+    for preset in [
+        GraphPreset::LjSim,
+        GraphPreset::OrSim,
+        GraphPreset::PaSim,
+        GraphPreset::Small,
+        GraphPreset::Tiny,
+    ] {
+        let g = preset.build(SimConfig::default().seed);
+        let s = g.stats();
+        rows.push(vec![
+            preset.name().to_string(),
+            format!("{:.1e}", s.num_vertices as f64),
+            format!("{:.1e}", s.num_edges as f64),
+            format!("{:.1e}", s.density),
+            format!("{:.1e}", s.xi_arithmetic),
+            format!("{:.1e}", s.xi_geometric),
+        ]);
+    }
+    print_table(
+        "Table 2 — graph irregularity (synthetic stand-ins)",
+        &["graph", "|V|", "|E|", "1-eta", "xi_A", "xi_G"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_report_cost(_a: &Args) -> Result<()> {
+    let model = CostModel::default();
+    let mut rows = Vec::new();
+    for v in [Variant::B, Variant::R, Variant::S, Variant::T, Variant::M] {
+        let (area, power) = model.variant_cost(v);
+        let lgt = v
+            .lgt_shape()
+            .map(|(r, d)| format!("{r}x{d}"))
+            .unwrap_or_else(|| "-".into());
+        rows.push(vec![
+            v.name().to_string(),
+            lgt,
+            if v.uses_merge() { "yes" } else { "no" }.into(),
+            format!("{area:.4}"),
+            format!("{power:.1}"),
+        ]);
+    }
+    print_table(
+        "§5.2.4 — area/power cost model (TSMC-12nm-calibrated estimates)",
+        &["variant", "LGT", "merge", "area mm^2", "power mW"],
+        &rows,
+    );
+    println!("reference: GCNTrain ≈ 0.9 mm^2 / 143 mW (28 nm, from the paper)");
+    Ok(())
+}
+
+fn cmd_analytic(a: &Args) -> Result<()> {
+    let k = a.parse_or("k", 8u32).map_err(anyhow::Error::msg)?;
+    let c = a.parse_or("c", 32u32).map_err(anyhow::Error::msg)?;
+    let model = AlgoDropoutModel::new(k, c, 1);
+    let rows: Vec<Vec<String>> = alpha_grid()
+        .iter()
+        .map(|&alpha| {
+            vec![
+                format!("{alpha:.1}"),
+                format!("{:.3}", model.desired_fraction(alpha)),
+                format!("{:.3}", model.actual_fraction(alpha)),
+                format!("{:.3}", model.activation_fraction(alpha)),
+                format!("{:.2}", model.burst_inefficiency(alpha)),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("§3.3 closed-form model (K={k}, C={c})"),
+        &["alpha", "desired", "actual", "activation", "inefficiency"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_trace_replay(a: &Args) -> Result<()> {
+    let path = a.get("trace").ok_or_else(|| anyhow!("need --trace <file>"))?;
+    let dram: lignn::dram::DramStandardKind =
+        a.get_or("dram", "hbm").parse().map_err(anyhow::Error::msg)?;
+    let model = lignn::dram::DramModel::new(dram.config());
+    let (c, busy) = lignn::sim::trace::replay(std::path::Path::new(path), model)?;
+    println!(
+        "replayed {} bursts on {}: activations={} row_hits={} refreshes={} busy={} cycles ({:.3} ms)",
+        c.total_bursts(),
+        dram.name(),
+        c.activations,
+        c.row_hits,
+        c.refreshes,
+        busy,
+        busy as f64 * dram.config().tck_ns() / 1e6,
+    );
+    println!("mean row-open session: {:.2} bursts", c.mean_session());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("train") => cmd_train(&args),
+        Some("table5") => cmd_table5(&args),
+        Some("graph-stats") => cmd_graph_stats(&args),
+        Some("report-cost") => cmd_report_cost(&args),
+        Some("analytic") => cmd_analytic(&args),
+        Some("trace-replay") => cmd_trace_replay(&args),
+        Some(other) => Err(anyhow!("unknown command `{other}`")),
+        None => {
+            println!(
+                "lignn — locality-aware dropout & merge for GNN training\n\
+                 commands: simulate | sweep | train | table5 | graph-stats | report-cost | analytic | trace-replay\n\
+                 common flags: --graph lj|or|pa|small|tiny --model gcn|sage|gin \\\n\
+                 --dram hbm|ddr4|gddr5 --variant A|B|R|S|T|M --alpha 0.5 --json"
+            );
+            Ok(())
+        }
+    }
+}

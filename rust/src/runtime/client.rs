@@ -1,0 +1,162 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts and execute them.
+//!
+//! The interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly. Python runs only at `make artifacts`; this module is the whole
+//! request-path story.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A loaded artifact directory: PJRT CPU client + compiled executables,
+/// compiled lazily per (model, kind) and cached.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    compiled: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `dir` (usually `artifacts/`), reading its manifest.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, model: &str, kind: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .find(model, kind)
+            .ok_or_else(|| anyhow!("no artifact for ({model}, {kind}) — run `make artifacts`"))
+    }
+
+    fn ensure_compiled(&mut self, model: &str, kind: &str) -> Result<()> {
+        let key = (model.to_string(), kind.to_string());
+        if self.compiled.contains_key(&key) {
+            return Ok(());
+        }
+        let spec = self.spec(model, kind)?.clone();
+        let path = self.manifest.artifact_path(&self.dir, &spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        self.compiled.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute `(model, kind)` on host literals; returns the flattened
+    /// tuple outputs (aot.py lowers with `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        model: &str,
+        kind: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self.spec(model, kind)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "({model}, {kind}) expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        self.ensure_compiled(model, kind)?;
+        let exe = self
+            .compiled
+            .get(&(model.to_string(), kind.to_string()))
+            .expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing ({model}, {kind}): {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result: {e:?}"))
+            .context("output should be a tuple (return_tuple=True)")
+    }
+}
+
+/// Build an f32 literal of `shape` from a host vector (row-major).
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        return Err(anyhow!("shape {shape:?} wants {n} elements, got {}", data.len()));
+    }
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Read an f32 literal back into a host vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn open_and_execute_predict() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::open(&artifacts_dir()).unwrap();
+        let c = rt.manifest().constants.clone();
+        let spec = rt.spec("gcn", "predict").unwrap().clone();
+        // zero params + zero graph → logits must be all zeros and finite.
+        let inputs: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .map(|t| literal_f32(&vec![0.0f32; t.num_elements()], &t.shape).unwrap())
+            .collect();
+        let out = rt.execute("gcn", "predict", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(logits.len(), c.n_nodes * c.n_classes);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,190 @@
+//! `artifacts/manifest.json` — the ABI contract emitted by `aot.py`.
+//!
+//! The manifest records, for every AOT-lowered HLO module, the exact input
+//! and output tensor order/shapes the Rust trainer must honour. Parsed with
+//! the in-tree JSON reader (`util::json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub constants: Constants,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constants {
+    pub n_nodes: usize,
+    pub n_features: usize,
+    pub n_hidden: usize,
+    pub n_classes: usize,
+    pub lr: f64,
+    pub gin_eps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub model: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: field_str(v, "name")?,
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                .collect::<Result<Vec<_>>>()?,
+            dtype: field_str(v, "dtype")?,
+        })
+    }
+}
+
+fn field_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string field `{key}`"))
+}
+
+fn field_num(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field `{key}`"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let c = v.get("constants").ok_or_else(|| anyhow!("missing constants"))?;
+        let constants = Constants {
+            n_nodes: field_num(c, "n_nodes")? as usize,
+            n_features: field_num(c, "n_features")? as usize,
+            n_hidden: field_num(c, "n_hidden")? as usize,
+            n_classes: field_num(c, "n_classes")? as usize,
+            lr: field_num(c, "lr")?,
+            gin_eps: field_num(c, "gin_eps")?,
+        };
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    model: field_str(a, "model")?,
+                    kind: field_str(a, "kind")?,
+                    file: field_str(a, "file")?,
+                    inputs: a
+                        .get("inputs")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("missing inputs"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("missing outputs"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    n_params: field_num(a, "n_params")? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { constants, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn find(&self, model: &str, kind: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.model == model && a.kind == kind)
+    }
+
+    pub fn artifact_path(&self, dir: &Path, spec: &ArtifactSpec) -> PathBuf {
+        dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "constants": {"n_nodes": 8, "n_features": 4, "n_hidden": 4,
+                      "n_classes": 2, "lr": 0.05, "gin_eps": 0.1},
+        "artifacts": [{
+            "model": "gcn", "kind": "predict", "file": "p.hlo.txt",
+            "inputs": [{"name": "w1", "shape": [4, 4], "dtype": "f32"}],
+            "outputs": [{"name": "logits", "shape": [8, 2], "dtype": "f32"}],
+            "n_params": 4
+        }]
+    }"#;
+
+    #[test]
+    fn parses_manifest_json() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.constants.n_nodes, 8);
+        assert!((m.constants.lr - 0.05).abs() < 1e-12);
+        let a = m.find("gcn", "predict").unwrap();
+        assert_eq!(a.inputs[0].num_elements(), 16);
+        assert_eq!(a.outputs[0].shape, vec![8, 2]);
+        assert!(m.find("gcn", "train_step").is_none());
+    }
+
+    #[test]
+    fn scalar_num_elements_is_one() {
+        let t = TensorSpec { name: "loss".into(), shape: vec![], dtype: "f32".into() };
+        assert_eq!(t.num_elements(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("[]").is_err());
+        let missing_inputs = SAMPLE.replace("inputs", "inpts");
+        assert!(Manifest::parse(&missing_inputs).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("gcn", "train_step").is_some());
+            assert!(m.find("gcn", "predict").is_some());
+            for a in &m.artifacts {
+                assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

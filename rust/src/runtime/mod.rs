@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them
+//! from the Rust request path (python is compile-time only).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{literal_f32, to_vec_f32, Runtime};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,146 @@
+//! Run metrics — everything the paper's figures report, in one struct.
+
+
+use crate::dram::controller::DramCounters;
+use crate::dram::energy::EnergyReport;
+use crate::lignn::UnitStats;
+
+/// Full result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Run labels (for figure rows).
+    pub variant: String,
+    pub graph: String,
+    pub model: String,
+    pub dram_standard: String,
+    pub alpha: f64,
+
+    /// End-to-end execution time estimate in nanoseconds:
+    /// `max(mem_ns, compute_ns)` (aggregation overlaps memory).
+    pub exec_ns: f64,
+    /// DRAM busy span.
+    pub mem_ns: f64,
+    /// Engine compute span.
+    pub compute_ns: f64,
+
+    /// LiGNN-side accounting (desired/actual, filter vs row drops).
+    pub unit: UnitStats,
+    /// DRAM-side counters (bursts, activations, sessions, energy).
+    pub dram: DramCounters,
+    pub energy: EnergyReport,
+
+    /// On-chip feature-buffer behaviour.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+
+    /// Feature-read breakdown (§5.4.3): served on-chip / opened a DRAM row
+    /// / merged into an open row / entirely dropped.
+    pub feat_hit: u64,
+    pub feat_new: u64,
+    pub feat_merge: u64,
+    pub feat_dropped: u64,
+}
+
+impl Metrics {
+    /// Speedup of `self` relative to `base` (same workload).
+    pub fn speedup_vs(&self, base: &Metrics) -> f64 {
+        base.exec_ns / self.exec_ns
+    }
+
+    /// Actual DRAM access amount normalized to `base` (Figs 8/11/14).
+    pub fn access_ratio_vs(&self, base: &Metrics) -> f64 {
+        self.dram.total_bursts() as f64 / base.dram.total_bursts() as f64
+    }
+
+    /// Row-activation amount normalized to `base` (Figs 9/12/14).
+    pub fn activation_ratio_vs(&self, base: &Metrics) -> f64 {
+        self.dram.activations as f64 / base.dram.activations as f64
+    }
+
+    /// Desired data amount normalized to `base` (Fig 1's "desired").
+    pub fn desired_ratio_vs(&self, base: &Metrics) -> f64 {
+        self.unit.desired_elems as f64 / base.unit.desired_elems as f64
+    }
+
+    /// Cache hit rate over feature reads.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} {} {} α={:.1}: exec={:.3}ms mem={:.3}ms compute={:.3}ms \
+             bursts={} acts={} mean_session={:.2} hit/new/merge/drop={}/{}/{}/{}",
+            self.variant,
+            self.graph,
+            self.model,
+            self.dram_standard,
+            self.alpha,
+            self.exec_ns / 1e6,
+            self.mem_ns / 1e6,
+            self.compute_ns / 1e6,
+            self.dram.total_bursts(),
+            self.dram.activations,
+            self.dram.mean_session(),
+            self.feat_hit,
+            self.feat_new,
+            self.feat_merge,
+            self.feat_dropped,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::standard::DramStandardKind;
+
+    fn dummy(exec_ns: f64, bursts: u64, acts: u64) -> Metrics {
+        let mut dram = DramCounters::default();
+        dram.reads = bursts;
+        dram.activations = acts;
+        let energy = EnergyReport::from_counters(&DramStandardKind::Hbm.config(), &dram);
+        Metrics {
+            variant: "LG-T".into(),
+            graph: "tiny".into(),
+            model: "GCN".into(),
+            dram_standard: "HBM".into(),
+            alpha: 0.5,
+            exec_ns,
+            mem_ns: exec_ns,
+            compute_ns: 0.0,
+            unit: UnitStats::default(),
+            dram,
+            energy,
+            cache_hits: 10,
+            cache_misses: 30,
+            feat_hit: 10,
+            feat_new: 20,
+            feat_merge: 5,
+            feat_dropped: 5,
+        }
+    }
+
+    #[test]
+    fn ratios() {
+        let base = dummy(1000.0, 100, 50);
+        let fast = dummy(500.0, 60, 10);
+        assert_eq!(fast.speedup_vs(&base), 2.0);
+        assert!((fast.access_ratio_vs(&base) - 0.6).abs() < 1e-9);
+        assert!((fast.activation_ratio_vs(&base) - 0.2).abs() < 1e-9);
+        assert!((base.cache_hit_rate() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_contains_labels() {
+        let m = dummy(1000.0, 1, 1);
+        let s = m.summary();
+        assert!(s.contains("LG-T") && s.contains("GCN") && s.contains("HBM"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulation engine: drivers, metrics and sweep helpers.
+
+pub mod driver;
+pub mod frfcfs;
+pub mod metrics;
+pub mod runs;
+pub mod trace;
+
+pub use driver::run_sim;
+pub use metrics::Metrics;
+pub use runs::{alpha_sweep, normalized_against_no_dropout};

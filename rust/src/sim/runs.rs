@@ -1,0 +1,109 @@
+//! High-level sweep helpers shared by benches, examples and the CLI:
+//! every figure is "run a sweep, normalize against the no-dropout run".
+
+use crate::config::{SimConfig, Variant};
+use crate::graph::CsrGraph;
+
+use super::driver::run_sim;
+use super::metrics::Metrics;
+
+/// The α grid the paper sweeps (0.0 .. 0.9 in 0.1 steps; α=1 excluded as
+/// degenerate).
+pub fn alpha_grid() -> Vec<f64> {
+    (0..10).map(|i| i as f64 / 10.0).collect()
+}
+
+/// Run `base_cfg` for each α in `alphas` (parallel across α).
+pub fn alpha_sweep(base_cfg: &SimConfig, graph: &CsrGraph, alphas: &[f64]) -> Vec<Metrics> {
+    crate::util::par::par_map(alphas, crate::util::par::default_threads(), |&alpha| {
+        let mut cfg = base_cfg.clone();
+        cfg.alpha = alpha;
+        run_sim(&cfg, graph)
+    })
+}
+
+/// The non-dropout reference run (α=0, LG-A degenerates to a pure
+/// pass-through) that Figs 7–14 normalize against.
+pub fn no_dropout_reference(base_cfg: &SimConfig, graph: &CsrGraph) -> Metrics {
+    let mut cfg = base_cfg.clone();
+    cfg.alpha = 0.0;
+    cfg.variant = Variant::A;
+    run_sim(&cfg, graph)
+}
+
+/// Normalized rows (speedup, access ratio, activation ratio) against the
+/// no-dropout reference.
+pub fn normalized_against_no_dropout(
+    base_cfg: &SimConfig,
+    graph: &CsrGraph,
+    alphas: &[f64],
+) -> (Metrics, Vec<NormalizedRow>) {
+    let reference = no_dropout_reference(base_cfg, graph);
+    let rows = alpha_sweep(base_cfg, graph, alphas)
+        .into_iter()
+        .map(|m| NormalizedRow {
+            alpha: m.alpha,
+            speedup: m.speedup_vs(&reference),
+            access_ratio: m.access_ratio_vs(&reference),
+            activation_ratio: m.activation_ratio_vs(&reference),
+            desired_ratio: m.desired_ratio_vs(&reference),
+            metrics: m,
+        })
+        .collect();
+    (reference, rows)
+}
+
+/// One normalized figure row.
+#[derive(Debug, Clone)]
+pub struct NormalizedRow {
+    pub alpha: f64,
+    pub speedup: f64,
+    pub access_ratio: f64,
+    pub activation_ratio: f64,
+    pub desired_ratio: f64,
+    pub metrics: Metrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GraphPreset;
+
+    fn tiny_cfg(variant: Variant) -> SimConfig {
+        SimConfig {
+            graph: GraphPreset::Tiny,
+            variant,
+            flen: 64,
+            capacity: 256,
+            range: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn alpha_grid_shape() {
+        let g = alpha_grid();
+        assert_eq!(g.len(), 10);
+        assert_eq!(g[0], 0.0);
+        assert!((g[9] - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalization_is_one_at_alpha_zero() {
+        let cfg = tiny_cfg(Variant::A);
+        let graph = cfg.build_graph();
+        let (_, rows) = normalized_against_no_dropout(&cfg, &graph, &[0.0]);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-9);
+        assert!((rows[0].access_ratio - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_order_matches_alphas() {
+        let cfg = tiny_cfg(Variant::S);
+        let graph = cfg.build_graph();
+        let rows = alpha_sweep(&cfg, &graph, &[0.2, 0.5]);
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].alpha - 0.2).abs() < 1e-12);
+        assert!((rows[1].alpha - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,139 @@
+//! DRAM command trace capture & replay.
+//!
+//! `TraceWriter` records every burst transaction the simulator issues
+//! (`R/W address cycle`) to a text file for external analysis (e.g.
+//! feeding a reference Ramulator run, plotting row reuse distances).
+//! `replay` drives the DRAM model from such a file — useful both for
+//! regression-pinning a request stream and for evaluating LiGNN against
+//! traces captured elsewhere.
+//!
+//! Format: one transaction per line, `R <hex addr>` or `W <hex addr>`,
+//! `#` comments. Issue order is the stream order.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::dram::{DramCounters, DramModel};
+
+/// Buffered trace file writer.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    records: u64,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        let f = File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "# lignn DRAM burst trace v1: R|W <hex addr>")?;
+        Ok(TraceWriter { out, records: 0 })
+    }
+
+    pub fn read(&mut self, addr: u64) -> Result<()> {
+        writeln!(self.out, "R {addr:x}")?;
+        self.records += 1;
+        Ok(())
+    }
+
+    pub fn write(&mut self, addr: u64) -> Result<()> {
+        writeln!(self.out, "W {addr:x}")?;
+        self.records += 1;
+        Ok(())
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Replay a trace file against a fresh DRAM model; returns its counters
+/// and the final busy time in device cycles.
+pub fn replay(path: &Path, mut dram: DramModel) -> Result<(DramCounters, u64)> {
+    let f = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let (op, addr) = t
+            .split_once(' ')
+            .ok_or_else(|| anyhow!("{path:?}:{}: malformed", lineno + 1))?;
+        let addr = u64::from_str_radix(addr.trim(), 16)
+            .with_context(|| format!("{path:?}:{}", lineno + 1))?;
+        match op {
+            "R" => {
+                dram.read_burst(addr, 0);
+            }
+            "W" => {
+                dram.write_burst(addr, 0);
+            }
+            other => return Err(anyhow!("{path:?}:{}: bad op `{other}`", lineno + 1)),
+        }
+    }
+    dram.flush_sessions();
+    let busy = dram.busy_until();
+    Ok((dram.counters.clone(), busy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramStandardKind;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lignn-trace-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn capture_and_replay_match_live_run() {
+        let path = tmp("t1.trace");
+        let addrs: Vec<u64> = (0..500u64).map(|i| (i * 7919) % (1 << 24) & !31).collect();
+
+        // live run
+        let mut live = DramModel::new(DramStandardKind::Hbm.config());
+        let mut w = TraceWriter::create(&path).unwrap();
+        for &a in &addrs {
+            live.read_burst(a, 0);
+            w.read(a).unwrap();
+        }
+        live.flush_sessions();
+        w.finish().unwrap();
+
+        // replay
+        let (counters, busy) =
+            replay(&path, DramModel::new(DramStandardKind::Hbm.config())).unwrap();
+        assert_eq!(counters.reads, live.counters.reads);
+        assert_eq!(counters.activations, live.counters.activations);
+        assert_eq!(counters.row_hits, live.counters.row_hits);
+        assert_eq!(busy, live.busy_until());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("t2.trace");
+        std::fs::write(&path, "R xyz\n").unwrap();
+        assert!(replay(&path, DramModel::new(DramStandardKind::Hbm.config())).is_err());
+        std::fs::write(&path, "X 1f\n").unwrap();
+        assert!(replay(&path, DramModel::new(DramStandardKind::Hbm.config())).is_err());
+    }
+
+    #[test]
+    fn mixed_ops_and_comments() {
+        let path = tmp("t3.trace");
+        std::fs::write(&path, "# hdr\nR 20\nW 40\n\nR 60\n").unwrap();
+        let (c, _) = replay(&path, DramModel::new(DramStandardKind::Hbm.config())).unwrap();
+        assert_eq!(c.reads, 2);
+        assert_eq!(c.writes, 1);
+    }
+}

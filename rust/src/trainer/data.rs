@@ -1,0 +1,115 @@
+//! Synthetic labeled dataset for the accuracy experiment (Table 5): a
+//! planted-partition graph with class-separable Gaussian-ish features —
+//! the scaled stand-in for the paper's PyG/DGL citation-graph study (see
+//! DESIGN.md "Substitutions").
+
+use crate::graph::{generate, CsrGraph};
+use crate::util::rng::Pcg64;
+
+/// Dense training dataset matching the AOT artifact shapes.
+pub struct Dataset {
+    pub n: usize,
+    pub f: usize,
+    pub c: usize,
+    /// Row-major dense 0/1 adjacency `[n, n]` (dst-major, like the CSR).
+    pub adj: Vec<f32>,
+    /// Features `[n, f]`.
+    pub x: Vec<f32>,
+    /// One-hot labels `[n, c]`.
+    pub onehot: Vec<f32>,
+    /// Class index per vertex.
+    pub labels: Vec<u16>,
+    /// 1.0 = train vertex, 0.0 = test vertex.
+    pub train_mask: Vec<f32>,
+    pub graph: CsrGraph,
+}
+
+impl Dataset {
+    /// Build the standard Table-5 dataset: planted partition over `n`
+    /// vertices and `c` classes, features = class centroid + noise,
+    /// 50/50 train/test split. Deterministic in `seed`.
+    pub fn planted(n: usize, f: usize, c: usize, seed: u64) -> Dataset {
+        let graph = generate::planted_partition(n, c, 0.02, 0.002, seed);
+        let labels = graph.labels().expect("planted graph has labels").to_vec();
+        let mut rng = Pcg64::new(seed ^ 0x6461_7461); // "data"
+
+        // Class centroids in feature space, separated but noisy enough
+        // that the graph structure genuinely helps (GNN > MLP regime).
+        let centroids: Vec<f32> = (0..c * f).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let noise_scale = 1.0f32;
+        let mut x = vec![0.0f32; n * f];
+        for v in 0..n {
+            let class = labels[v] as usize;
+            for j in 0..f {
+                let noise = (rng.f64() * 2.0 - 1.0) as f32 * noise_scale;
+                x[v * f + j] = centroids[class * f + j] + noise;
+            }
+        }
+
+        let mut onehot = vec![0.0f32; n * c];
+        for v in 0..n {
+            onehot[v * c + labels[v] as usize] = 1.0;
+        }
+
+        let train_mask: Vec<f32> = (0..n).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+        let adj = graph.to_dense_adj();
+
+        Dataset { n, f, c, adj, x, onehot, labels, train_mask, graph }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_consistent() {
+        let ds = Dataset::planted(128, 16, 4, 3);
+        assert_eq!(ds.adj.len(), 128 * 128);
+        assert_eq!(ds.x.len(), 128 * 16);
+        assert_eq!(ds.onehot.len(), 128 * 4);
+        assert_eq!(ds.labels.len(), 128);
+        let trains = ds.train_mask.iter().filter(|&&m| m == 1.0).count();
+        assert!(trains > 32 && trains < 96, "{trains}");
+    }
+
+    #[test]
+    fn onehot_matches_labels() {
+        let ds = Dataset::planted(64, 8, 4, 9);
+        for v in 0..64 {
+            let row = &ds.onehot[v * 4..(v + 1) * 4];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert_eq!(row[ds.labels[v] as usize], 1.0);
+        }
+    }
+
+    #[test]
+    fn features_cluster_by_class() {
+        // same-class feature vectors are closer on average than cross-class
+        let ds = Dataset::planted(200, 16, 4, 11);
+        let dist = |a: usize, b: usize| -> f32 {
+            (0..ds.f)
+                .map(|j| (ds.x[a * ds.f + j] - ds.x[b * ds.f + j]).powi(2))
+                .sum::<f32>()
+        };
+        let (mut same, mut diff) = ((0.0, 0u32), (0.0, 0u32));
+        for a in 0..100 {
+            for b in (a + 1)..100 {
+                if ds.labels[a] == ds.labels[b] {
+                    same = (same.0 + dist(a, b), same.1 + 1);
+                } else {
+                    diff = (diff.0 + dist(a, b), diff.1 + 1);
+                }
+            }
+        }
+        assert!(same.0 / same.1 as f32 + 0.1 < diff.0 / diff.1 as f32);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Dataset::planted(64, 8, 4, 5);
+        let b = Dataset::planted(64, 8, 4, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.train_mask, b.train_mask);
+    }
+}

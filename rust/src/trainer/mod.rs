@@ -1,0 +1,234 @@
+//! Training path: drive the AOT train-step artifacts with LiGNN-shaped
+//! dropout masks — the Table-5 accuracy experiment and the end-to-end
+//! example.
+//!
+//! The whole numeric model (forward, loss, SGD) lives in the HLO artifact;
+//! Rust owns data generation (planted-partition graph + class-separable
+//! features), mask generation at element/burst/DRAM-row granularity (from
+//! the same address mapping the simulator uses), the epoch loop, and
+//! accuracy evaluation. Python never runs here.
+
+pub mod data;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::dram::{AddressMapping, DramStandardKind};
+use crate::dropout::{Granularity, MaskGen};
+use crate::runtime::{literal_f32, to_vec_f32, Runtime};
+use crate::util::rng::Pcg64;
+
+pub use data::Dataset;
+
+/// Mask granularity selector for training (Table 5 rows + the element
+/// baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskKind {
+    /// Algorithmic element-wise dropout (the accuracy baseline).
+    Element,
+    /// LiGNN burst dropout: aligned K-element groups.
+    Burst,
+    /// LiGNN row dropout: aligned vertex groups sharing a DRAM row.
+    Row,
+}
+
+impl std::str::FromStr for MaskKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "element" => Ok(MaskKind::Element),
+            "burst" => Ok(MaskKind::Burst),
+            "row" => Ok(MaskKind::Row),
+            other => Err(format!("unknown mask kind `{other}`")),
+        }
+    }
+}
+
+/// One training run's configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub alpha: f64,
+    pub mask: MaskKind,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "gcn".into(),
+            alpha: 0.5,
+            mask: MaskKind::Burst,
+            epochs: 200,
+            seed: 0xACC0_DE,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub losses: Vec<f32>,
+    pub train_accuracy: f64,
+    pub test_accuracy: f64,
+}
+
+/// Glorot-uniform parameter init matching `model.init_params` in python.
+fn init_param(rng: &mut Pcg64, shape: &[usize]) -> Vec<f32> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if shape.len() == 2 {
+        let limit = (6.0 / (shape[0] + shape[1]) as f64).sqrt();
+        (0..n).map(|_| ((rng.f64() * 2.0 - 1.0) * limit) as f32).collect()
+    } else {
+        vec![0.0f32; n]
+    }
+}
+
+/// Granularity geometry for `kind`, derived from the HBM mapping — the
+/// same bit-slicing the simulator's REC hasher uses, so "a DRAM row" means
+/// the identical thing in both experiments.
+pub fn granularity_of(kind: MaskKind, n_features: usize) -> Granularity {
+    let mapping = AddressMapping::new(&DramStandardKind::Hbm.config());
+    match kind {
+        MaskKind::Element => Granularity::Element,
+        MaskKind::Burst => Granularity::burst_of(&mapping),
+        MaskKind::Row => Granularity::row_of(&mapping, (n_features * 4) as u64),
+    }
+}
+
+/// Train one model per `cfg` against the artifacts in `dir`, on `ds`.
+pub fn train(dir: &Path, cfg: &TrainConfig, ds: &Dataset) -> Result<TrainResult> {
+    let mut rt = Runtime::open(dir)?;
+    let consts = rt.manifest().constants.clone();
+    if ds.n != consts.n_nodes || ds.f != consts.n_features || ds.c != consts.n_classes {
+        return Err(anyhow!(
+            "dataset ({}, {}, {}) does not match artifacts ({}, {}, {})",
+            ds.n, ds.f, ds.c, consts.n_nodes, consts.n_features, consts.n_classes
+        ));
+    }
+    let spec = rt.spec(&cfg.model, "train_step")?.clone();
+    let n_params = spec.n_params;
+
+    // Parameters in ABI order.
+    let mut rng = Pcg64::new(cfg.seed ^ 0x7061_7261); // "para"
+    let mut params: Vec<Vec<f32>> = spec.inputs[..n_params]
+        .iter()
+        .map(|t| init_param(&mut rng, &t.shape))
+        .collect();
+    let param_shapes: Vec<Vec<usize>> =
+        spec.inputs[..n_params].iter().map(|t| t.shape.clone()).collect();
+
+    // Static inputs.
+    let adj = literal_f32(&ds.adj, &[ds.n, ds.n])?;
+    let x = literal_f32(&ds.x, &[ds.n, ds.f])?;
+    let labels = literal_f32(&ds.onehot, &[ds.n, ds.c])?;
+    let train_mask = literal_f32(&ds.train_mask, &[ds.n])?;
+    let scale = literal_f32(&[MaskGen::scale(cfg.alpha)], &[1])?;
+
+    let gran = granularity_of(cfg.mask, ds.f);
+    let maskgen = MaskGen::new(cfg.seed ^ 0x6D61_736B); // "mask"
+
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    for epoch in 0..cfg.epochs {
+        let mask_host = maskgen.mask(ds.n, ds.f, cfg.alpha, gran, epoch as u64);
+        let mask = literal_f32(&mask_host, &[ds.n, ds.f])?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(n_params + 6);
+        for (p, shape) in params.iter().zip(&param_shapes) {
+            inputs.push(literal_f32(p, shape)?);
+        }
+        inputs.push(adj.clone());
+        inputs.push(x.clone());
+        inputs.push(mask);
+        inputs.push(scale.clone());
+        inputs.push(labels.clone());
+        inputs.push(train_mask.clone());
+
+        let out = rt.execute(&cfg.model, "train_step", &inputs)?;
+        if out.len() != n_params + 1 {
+            return Err(anyhow!("train_step returned {} outputs", out.len()));
+        }
+        for (i, lit) in out[..n_params].iter().enumerate() {
+            params[i] = to_vec_f32(lit)?;
+        }
+        let loss = to_vec_f32(&out[n_params])?[0];
+        if !loss.is_finite() {
+            return Err(anyhow!("loss diverged at epoch {epoch}: {loss}"));
+        }
+        losses.push(loss);
+    }
+
+    // Evaluation (no dropout).
+    let mut inputs: Vec<xla::Literal> = Vec::with_capacity(n_params + 2);
+    for (p, shape) in params.iter().zip(&param_shapes) {
+        inputs.push(literal_f32(p, shape)?);
+    }
+    inputs.push(adj);
+    inputs.push(x);
+    let out = rt.execute(&cfg.model, "predict", &inputs)?;
+    let logits = to_vec_f32(&out[0])?;
+
+    let accuracy = |mask_val: f32| {
+        let (mut correct, mut total) = (0usize, 0usize);
+        for v in 0..ds.n {
+            if ds.train_mask[v] != mask_val {
+                continue;
+            }
+            let row = &logits[v * ds.c..(v + 1) * ds.c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred == ds.labels[v] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    };
+
+    Ok(TrainResult {
+        losses,
+        train_accuracy: accuracy(1.0),
+        test_accuracy: accuracy(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_kind_parse() {
+        assert_eq!("burst".parse::<MaskKind>().unwrap(), MaskKind::Burst);
+        assert_eq!("ROW".parse::<MaskKind>().unwrap(), MaskKind::Row);
+        assert!("bit".parse::<MaskKind>().is_err());
+    }
+
+    #[test]
+    fn granularities_match_hbm_geometry() {
+        // HBM burst = 32 B = 8 f32; row group = 16 KiB.
+        assert_eq!(granularity_of(MaskKind::Burst, 64), Granularity::Burst { k: 8 });
+        // 64 f32 = 256 B per vertex → 64 vertices share a row group.
+        assert_eq!(granularity_of(MaskKind::Row, 64), Granularity::Row { group: 64 });
+        assert_eq!(granularity_of(MaskKind::Element, 64), Granularity::Element);
+    }
+
+    #[test]
+    fn init_param_ranges() {
+        let mut rng = Pcg64::new(1);
+        let w = init_param(&mut rng, &[64, 64]);
+        let limit = (6.0f64 / 128.0).sqrt() as f32;
+        assert!(w.iter().all(|&x| x.abs() <= limit));
+        assert!(w.iter().any(|&x| x != 0.0));
+        let b = init_param(&mut rng, &[64]);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+}

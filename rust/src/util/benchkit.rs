@@ -1,0 +1,83 @@
+//! Tiny bench harness for the `harness = false` bench targets: wall-clock
+//! timing with warmup + repeats, plus aligned table printing for the
+//! paper-figure rows.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmarked closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub best_s: f64,
+    pub mean_s: f64,
+    pub reps: usize,
+}
+
+/// Time `f` with one warmup call and `reps` measured repetitions.
+pub fn time<F: FnMut()>(reps: usize, mut f: F) -> Timing {
+    f(); // warmup
+    let mut total = 0.0;
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        best = best.min(dt);
+    }
+    Timing { best_s: best, mean_s: total / reps.max(1) as f64, reps: reps.max(1) }
+}
+
+/// Print an aligned table: header + rows of equal arity.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+}
+
+/// Format a ratio as e.g. "1.48x".
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format a percentage like "34%".
+pub fn pct(x: f64) -> String {
+    format!("{:.0}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_runs_reps() {
+        let mut count = 0;
+        let t = time(3, || count += 1);
+        assert_eq!(count, 4); // warmup + 3
+        assert_eq!(t.reps, 3);
+        assert!(t.best_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(ratio(1.479), "1.48x");
+        assert_eq!(pct(0.34), "34%");
+    }
+}

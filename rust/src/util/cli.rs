@@ -1,0 +1,94 @@
+//! Tiny `--flag value` argument parser for the launcher binary.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one positional subcommand + `--key value` flags
+/// (and bare `--key` booleans).
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag".into());
+                }
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                out.flags.insert(name.to_string(), val);
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument `{a}`"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| format!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(argv("simulate --alpha 0.5 --variant T --json")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("alpha"), Some("0.5"));
+        assert_eq!(a.get("variant"), Some("T"));
+        assert!(a.has("json"));
+        assert_eq!(a.parse_or("alpha", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv("run")).unwrap();
+        assert_eq!(a.get_or("graph", "lj"), "lj");
+        assert_eq!(a.parse_or("seed", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(argv("a b")).is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::parse(argv("x --alpha zebra")).unwrap();
+        assert!(a.parse_or("alpha", 0.0).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Dependency-light utility substrates.
+//!
+//! The offline build environment carries only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, serde, rayon, criterion,
+//! clap) are re-implemented here at the scale this project needs — each
+//! with its own unit tests:
+//!
+//! * [`rng`]  — PCG64-class deterministic RNG (splitmix-seeded xoshiro256**),
+//! * [`json`] — minimal JSON parse/serialize (manifest + results I/O),
+//! * [`par`]  — scoped-thread parallel map,
+//! * [`benchkit`] — timing harness for `cargo bench` targets,
+//! * [`cli`]  — tiny flag parser for the launcher.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;

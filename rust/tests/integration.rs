@@ -1,0 +1,207 @@
+//! Cross-module integration tests: simulator invariants across variants,
+//! the paper's qualitative orderings, and (when artifacts exist) the full
+//! PJRT training path.
+
+use std::path::{Path, PathBuf};
+
+use lignn::analytic::AlgoDropoutModel;
+use lignn::config::{GnnModel, GraphPreset, SimConfig, Variant};
+use lignn::dram::DramStandardKind;
+use lignn::sim::runs::{alpha_sweep, no_dropout_reference};
+use lignn::sim::run_sim;
+use lignn::trainer::{train, Dataset, MaskKind, TrainConfig};
+use lignn::Metrics;
+
+fn small_cfg(variant: Variant, alpha: f64) -> SimConfig {
+    SimConfig {
+        graph: GraphPreset::Small,
+        variant,
+        alpha,
+        flen: 256,
+        capacity: 1024,
+        access: 32,
+        range: 512,
+        ..Default::default()
+    }
+}
+
+fn run(variant: Variant, alpha: f64) -> Metrics {
+    let cfg = small_cfg(variant, alpha);
+    let g = cfg.build_graph();
+    run_sim(&cfg, &g)
+}
+
+#[test]
+fn variant_ordering_at_half_droprate() {
+    // The paper's ablation ordering at α=0.5: exec A > B > R ≳ S ≳ T.
+    let a = run(Variant::A, 0.5);
+    let b = run(Variant::B, 0.5);
+    let r = run(Variant::R, 0.5);
+    let s = run(Variant::S, 0.5);
+    let t = run(Variant::T, 0.5);
+    assert!(a.exec_ns > b.exec_ns, "A !> B");
+    assert!(b.exec_ns > r.exec_ns, "B !> R");
+    assert!(s.exec_ns <= r.exec_ns * 1.05, "S ≫ R");
+    assert!(t.exec_ns <= s.exec_ns * 1.05, "T ≫ S");
+    // activations follow the same order, more sharply (R's LGT grouping
+    // cuts them well below the burst-only filter's)
+    assert!(b.dram.activations < a.dram.activations);
+    assert!((r.dram.activations as f64) < 0.7 * b.dram.activations as f64);
+}
+
+#[test]
+fn desired_amount_tracks_analytic_model() {
+    // LG-A's desired fraction is 1-α, its actual fraction 1-α^K (K=8 on
+    // HBM) — the §3.3 model, measured through the whole simulator.
+    let reference = run(Variant::A, 0.0);
+    let model = AlgoDropoutModel::new(8, 32, 1);
+    for alpha in [0.2, 0.5, 0.8] {
+        let m = run(Variant::A, alpha);
+        let desired = m.unit.desired_elems as f64 / reference.unit.desired_elems as f64;
+        assert!(
+            (desired - model.desired_fraction(alpha)).abs() < 0.02,
+            "α={alpha}: desired {desired}"
+        );
+        let kept = m.unit.bursts_kept as f64 / m.unit.bursts_in as f64;
+        assert!(
+            (kept - model.actual_fraction(alpha)).abs() < 0.02,
+            "α={alpha}: kept {kept}"
+        );
+    }
+}
+
+#[test]
+fn row_variants_scale_linearly_with_alpha() {
+    let cfg = small_cfg(Variant::S, 0.0);
+    let g = cfg.build_graph();
+    let reference = no_dropout_reference(&cfg, &g);
+    let rows = alpha_sweep(&cfg, &g, &[0.2, 0.4, 0.6, 0.8]);
+    for m in &rows {
+        let kept = m.dram.reads as f64 / reference.dram.reads as f64;
+        assert!(
+            (kept - (1.0 - m.alpha)).abs() < 0.08,
+            "α={}: read ratio {kept} not ≈ {}",
+            m.alpha,
+            1.0 - m.alpha
+        );
+    }
+}
+
+#[test]
+fn every_variant_and_model_runs_on_every_standard() {
+    // no panics, sane invariants everywhere
+    for dram in DramStandardKind::EVALUATED {
+        for model in GnnModel::ALL {
+            for variant in [Variant::A, Variant::T] {
+                let cfg = SimConfig {
+                    graph: GraphPreset::Tiny,
+                    dram,
+                    model,
+                    variant,
+                    flen: 64,
+                    capacity: 128,
+                    access: 16,
+                    range: 64,
+                    ..Default::default()
+                };
+                let g = cfg.build_graph();
+                let m = run_sim(&cfg, &g);
+                assert!(m.exec_ns > 0.0);
+                assert_eq!(
+                    m.unit.bursts_in,
+                    m.unit.bursts_kept + m.unit.bursts_filter_dropped + m.unit.bursts_row_dropped
+                );
+                assert!(m.dram.row_hits + m.dram.activations >= m.dram.reads);
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_preserves_request_count() {
+    // LM never drops: same feature-read demand as the baseline.
+    let nm = run(Variant::A, 0.0);
+    let lm = run(Variant::M, 0.0);
+    assert_eq!(
+        nm.cache_hits + nm.cache_misses,
+        lm.cache_hits + lm.cache_misses
+    );
+    assert_eq!(lm.unit.bursts_kept, lm.unit.bursts_in);
+    assert_eq!(lm.feat_dropped, 0);
+}
+
+#[test]
+fn energy_tracks_activations() {
+    let a = run(Variant::A, 0.5);
+    let t = run(Variant::T, 0.5);
+    assert!(t.energy.total_pj < a.energy.total_pj);
+    assert!(t.energy.activation_share < a.energy.activation_share + 0.05);
+}
+
+// ---------------------------------------------------------------------
+// PJRT training path (requires `make artifacts`)
+// ---------------------------------------------------------------------
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn training_loss_decreases_all_models() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let ds = Dataset::planted(1024, 64, 8, 7);
+    for model in ["gcn", "sage", "gin"] {
+        let cfg = TrainConfig {
+            model: model.into(),
+            alpha: 0.0,
+            mask: MaskKind::Element,
+            epochs: 25,
+            seed: 1,
+        };
+        let r = train(&dir, &cfg, &ds).unwrap();
+        assert!(
+            r.losses.last().unwrap() < &(r.losses[0] - 0.05),
+            "{model}: loss did not fall: {:?} -> {:?}",
+            r.losses[0],
+            r.losses.last()
+        );
+    }
+}
+
+#[test]
+fn burst_and_row_dropout_keep_accuracy() {
+    // Table 5's claim at reduced scale: α=0.5 burst/row dropout stays
+    // within a few points of no-dropout accuracy.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let ds = Dataset::planted(1024, 64, 8, 7);
+    let acc = |mask: MaskKind, alpha: f64| {
+        let cfg = TrainConfig { model: "gcn".into(), alpha, mask, epochs: 120, seed: 2 };
+        train(&dir, &cfg, &ds).unwrap().test_accuracy
+    };
+    let base = acc(MaskKind::Element, 0.0);
+    let burst = acc(MaskKind::Burst, 0.5);
+    let row = acc(MaskKind::Row, 0.5);
+    assert!(base > 0.8, "baseline accuracy too low: {base}");
+    assert!(burst > base - 0.08, "burst dropout hurt: {base} -> {burst}");
+    assert!(row > base - 0.10, "row dropout hurt: {base} -> {row}");
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let ds = Dataset::planted(1024, 64, 8, 7);
+    let cfg = TrainConfig { model: "gcn".into(), alpha: 0.3, mask: MaskKind::Burst, epochs: 5, seed: 3 };
+    let a = train(&dir, &cfg, &ds).unwrap();
+    let b = train(&dir, &cfg, &ds).unwrap();
+    assert_eq!(a.losses, b.losses);
+}

@@ -1,0 +1,266 @@
+//! Randomized property tests (seeded, deterministic): structural
+//! invariants of every substrate under arbitrary operation sequences.
+//! These play the role proptest would — many random cases per property,
+//! shrunk by hand to small generators.
+
+use lignn::accel::Interleaver;
+use lignn::cache::LruCache;
+use lignn::dram::{AddressMapping, DramModel, DramStandardKind};
+use lignn::dropout::{Granularity, MaskGen};
+use lignn::lignn::{AddressCalc, Burst, Criteria, Lgt, RecMerger, RowPolicy};
+use lignn::lignn::Edge;
+use lignn::util::rng::Pcg64;
+
+const ALL_STANDARDS: [DramStandardKind; 8] = [
+    DramStandardKind::Ddr3,
+    DramStandardKind::Ddr4,
+    DramStandardKind::Gddr5,
+    DramStandardKind::Gddr6,
+    DramStandardKind::Lpddr4,
+    DramStandardKind::Lpddr5,
+    DramStandardKind::Hbm,
+    DramStandardKind::Hbm2,
+];
+
+fn burst(row_key: u64, src: u32, seq: u32) -> Burst {
+    Burst { addr: row_key << 12 | (src as u64) << 5, row_key, src, seq, effective: 8 }
+}
+
+#[test]
+fn prop_mapping_decode_fields_in_range() {
+    for kind in ALL_STANDARDS {
+        let cfg = kind.config();
+        let m = AddressMapping::new(&cfg);
+        let mut rng = Pcg64::new(kind as u64);
+        for _ in 0..5_000 {
+            let addr = rng.next_u64() % m.capacity_bytes();
+            let l = m.decode(addr);
+            assert!((l.channel as usize) < cfg.channels, "{kind:?}");
+            assert!((l.rank as usize) < cfg.ranks);
+            assert!((l.bankgroup as usize) < cfg.bankgroups);
+            assert!((l.bank as usize) < cfg.banks_per_group);
+            assert!((l.row as usize) < cfg.rows_per_bank);
+            assert!((l.col as u64) < cfg.bursts_per_row());
+            // burst_align is idempotent and preserves the decode
+            let a = m.burst_align(addr);
+            assert_eq!(m.burst_align(a), a);
+            assert_eq!(m.decode(a), l);
+        }
+    }
+}
+
+#[test]
+fn prop_mapping_row_key_is_row_identity() {
+    for kind in [DramStandardKind::Hbm, DramStandardKind::Ddr4] {
+        let m = AddressMapping::new(&kind.config());
+        let mut rng = Pcg64::new(7 + kind as u64);
+        for _ in 0..5_000 {
+            let a = rng.next_u64() % m.capacity_bytes();
+            let b = rng.next_u64() % m.capacity_bytes();
+            let (la, lb) = (m.decode(a), m.decode(b));
+            let same_row = la.channel == lb.channel
+                && la.rank == lb.rank
+                && la.bankgroup == lb.bankgroup
+                && la.bank == lb.bank
+                && la.row == lb.row;
+            assert_eq!(m.row_key(a) == m.row_key(b), same_row);
+        }
+    }
+}
+
+#[test]
+fn prop_bursts_for_range_exact_cover() {
+    let m = AddressMapping::new(&DramStandardKind::Hbm.config());
+    let bb = 32u64;
+    let mut rng = Pcg64::new(11);
+    for _ in 0..2_000 {
+        let addr = rng.next_u64() % (1 << 30);
+        let len = 1 + (rng.next_u64() % 4096);
+        let v: Vec<u64> = m.bursts_for_range(addr, len).collect();
+        let expected = ((addr + len).div_ceil(bb) - addr / bb) as usize;
+        assert_eq!(v.len(), expected, "addr={addr} len={len}");
+        assert!(v[0] <= addr && addr < v[0] + bb);
+        let last = *v.last().unwrap();
+        assert!(last < addr + len && addr + len <= last + bb);
+    }
+}
+
+#[test]
+fn prop_lru_matches_reference_model() {
+    // Reference: Vec-based LRU (O(n) but obviously correct).
+    let cap = 8;
+    let mut fast = LruCache::new(cap);
+    let mut slow: Vec<u32> = Vec::new();
+    let mut rng = Pcg64::new(13);
+    for _ in 0..20_000 {
+        let key = rng.below(32);
+        let hit_fast = fast.access(key);
+        let hit_slow = slow.contains(&key);
+        slow.retain(|&k| k != key);
+        slow.push(key);
+        if slow.len() > cap {
+            slow.remove(0);
+        }
+        assert_eq!(hit_fast, hit_slow, "key {key}");
+        assert_eq!(fast.len(), slow.len());
+    }
+}
+
+#[test]
+fn prop_lgt_conserves_bursts() {
+    let mut rng = Pcg64::new(17);
+    for round in 0..200 {
+        let rows = 1 + rng.below(16) as usize;
+        let depth = 1 + rng.below(16) as usize;
+        let mut lgt = Lgt::new(rows, depth);
+        let mut inserted = 0u64;
+        let mut rejected = 0u64;
+        for i in 0..200u32 {
+            let key = rng.below(rows as u32 * 2) as u64;
+            if matches!(lgt.insert(burst(key, i, round)), lignn::lignn::lgt::Insert::Full) {
+                rejected += 1;
+            } else {
+                inserted += 1;
+            }
+        }
+        assert_eq!(lgt.len() as u64, inserted);
+        let sizes: usize = lgt.queue_sizes().map(|(_, n)| n).sum();
+        assert_eq!(sizes, lgt.len());
+        let drained = lgt.drain_all();
+        assert_eq!(drained.len() as u64, inserted);
+        assert!(lgt.is_empty());
+        let _ = rejected;
+    }
+}
+
+#[test]
+fn prop_row_policy_conservation_and_delta_bound() {
+    let mut rng = Pcg64::new(19);
+    for _ in 0..100 {
+        let alpha = rng.f64() * 0.9;
+        let mut policy = RowPolicy::new(Criteria::Any);
+        let (mut kept, mut dropped) = (0u64, 0u64);
+        for round in 0..50u64 {
+            let mut lgt = Lgt::new(32, 32);
+            let n_rows = 1 + rng.below(20);
+            let mut total = 0;
+            for r in 0..n_rows {
+                let len = 1 + rng.below(8);
+                for s in 0..len {
+                    lgt.insert(burst((round * 100 + r as u64) << 8, s, 0));
+                    total += 1;
+                }
+            }
+            let sel = policy.select(&mut lgt, total, alpha, &mut rng.clone());
+            assert_eq!(sel.kept.len() + sel.dropped.len() + lgt.len(), total);
+            kept += sel.kept.len() as u64;
+            dropped += sel.dropped.len() as u64;
+            // δ must stay bounded by the largest single move
+            assert!(policy.delta().abs() < 40.0, "δ diverged: {}", policy.delta());
+        }
+        if kept + dropped > 500 {
+            let frac = dropped as f64 / (kept + dropped) as f64;
+            assert!(
+                (frac - alpha).abs() < 0.12,
+                "α={alpha:.2} realized {frac:.2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_interleaver_conserves_and_keeps_per_feature_order() {
+    let mut rng = Pcg64::new(23);
+    for _ in 0..100 {
+        let window = 1 + rng.below(16) as usize;
+        let mut il = Interleaver::new(window);
+        let mut out = Vec::new();
+        let mut pushed = 0usize;
+        let n_feats = 1 + rng.below(40);
+        for f in 0..n_feats {
+            let n = 1 + rng.below(12) as usize;
+            let bursts: Vec<Burst> = (0..n).map(|i| burst(f as u64, i as u32, f)).collect();
+            pushed += n;
+            il.push(bursts, &mut out);
+        }
+        il.flush(&mut out);
+        assert_eq!(out.len(), pushed);
+        // within one feature (seq), src order must be preserved
+        for f in 0..n_feats {
+            let srcs: Vec<u32> = out.iter().filter(|b| b.seq == f).map(|b| b.src).collect();
+            assert!(srcs.windows(2).all(|w| w[0] < w[1]), "feature {f} reordered");
+        }
+    }
+}
+
+#[test]
+fn prop_rec_groups_are_row_homogeneous() {
+    let mapping = AddressMapping::new(&DramStandardKind::Hbm.config());
+    let calc = AddressCalc::new(mapping, 1 << 24, 1024);
+    let mut rng = Pcg64::new(29);
+    for _ in 0..50 {
+        let range = 1 + rng.below(64) as usize;
+        let max_rows = 1 + rng.below(32) as usize;
+        let mut m = RecMerger::new(calc, range, max_rows);
+        let mut groups = Vec::new();
+        for i in 0..500u32 {
+            groups.extend(m.push(Edge { dst: i, src: rng.below(4096) }));
+        }
+        groups.extend(m.flush());
+        for g in &groups {
+            let h0 = calc.rec_hash(g[0].src);
+            assert!(g.iter().all(|e| calc.rec_hash(e.src) == h0), "mixed group");
+        }
+        assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), 500);
+    }
+}
+
+#[test]
+fn prop_dram_counter_identities() {
+    let mut rng = Pcg64::new(31);
+    for kind in [DramStandardKind::Hbm, DramStandardKind::Ddr4, DramStandardKind::Gddr5] {
+        let mut d = DramModel::new(kind.config());
+        let n = 20_000u64;
+        for _ in 0..n {
+            let addr = rng.next_u64() % (1 << 29);
+            d.read_burst(addr, 0);
+        }
+        let c = &d.counters;
+        assert_eq!(c.reads, n);
+        assert_eq!(c.activations, c.row_conflicts + c.row_closed);
+        assert_eq!(c.reads, c.row_hits + c.activations);
+        d.flush_sessions();
+        let sessions: u64 = d.counters.session_hist.iter().sum();
+        assert_eq!(sessions, d.counters.activations, "{kind:?}");
+        let bursts_in_sessions: u64 = d
+            .counters
+            .session_hist
+            .iter()
+            .enumerate()
+            .map(|(s, &cnt)| s as u64 * cnt)
+            .sum();
+        assert_eq!(bursts_in_sessions, n, "{kind:?}");
+    }
+}
+
+#[test]
+fn prop_mask_rate_converges_all_granularities() {
+    let gen = MaskGen::new(37);
+    for gran in [
+        Granularity::Element,
+        Granularity::Burst { k: 8 },
+        Granularity::Row { group: 4 },
+    ] {
+        for alpha in [0.1, 0.5, 0.9] {
+            // average over epochs so even the coarse Row granularity has
+            // enough independent decisions (512 groups × 4 epochs)
+            let mut rate = 0.0;
+            for epoch in 0..4 {
+                let m = gen.mask(2048, 64, alpha, gran, epoch);
+                rate += m.iter().filter(|&&x| x == 0.0).count() as f64 / m.len() as f64;
+            }
+            rate /= 4.0;
+            assert!((rate - alpha).abs() < 0.05, "{gran:?} α={alpha}: {rate}");
+        }
+    }
+}
