@@ -3,7 +3,7 @@
 //! row-activation reduction) — the paper's abstract numbers.
 
 use lignn::config::{GraphPreset, SimConfig, Variant};
-use lignn::sim::run_sim;
+use lignn::sim::{run_sim, SweepPlan, SweepRunner};
 
 fn main() {
     let mut cfg = SimConfig {
@@ -31,10 +31,14 @@ fn main() {
         graph.num_edges()
     );
 
-    for variant in [Variant::A, Variant::B, Variant::R, Variant::S, Variant::T] {
-        let mut c = cfg.clone();
-        c.variant = variant;
-        let m = run_sim(&c, &graph);
+    // All five Table-3 variants as one sweep plan: the runner shares the
+    // graph across points and recycles per-worker burst buffers.
+    let plan = SweepPlan::variants(
+        &cfg,
+        &[Variant::A, Variant::B, Variant::R, Variant::S, Variant::T],
+    );
+    let results = SweepRunner::new(&graph).run(&plan);
+    for m in &results {
         println!("{}", m.summary());
     }
 
@@ -42,9 +46,8 @@ fn main() {
     base.variant = Variant::A;
     base.alpha = 0.0;
     let b = run_sim(&base, &graph);
-    let mut t = cfg.clone();
-    t.variant = Variant::T;
-    let m = run_sim(&t, &graph);
+    // LG-T at cfg.alpha already ran as the sweep's last point — reuse it.
+    let m = results.into_iter().last().expect("plan was non-empty");
     println!(
         "\nLG-T @ α={:.1} vs non-dropout: speedup {:.2}x, DRAM access -{:.0}%, row activation -{:.0}%",
         cfg.alpha,

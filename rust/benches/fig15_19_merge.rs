@@ -10,10 +10,9 @@
 mod common;
 
 use lignn::config::{SimConfig, Variant};
-use lignn::sim::run_sim;
+use lignn::sim::{SweepPlan, SweepRunner};
 use lignn::util::benchkit::print_table;
 use lignn::util::json::Json;
-use lignn::util::par::{default_threads, par_map};
 use lignn::Metrics;
 
 fn base() -> SimConfig {
@@ -29,20 +28,21 @@ fn base() -> SimConfig {
 }
 
 /// Run (NM, LM) for one workload point, in parallel with other points.
-/// The graph is built once and shared (all points use the same preset).
+/// The graph is built once and shared across the whole plan by the sweep
+/// runner (all points use the same preset), with per-worker burst
+/// buffers recycled between points.
 fn run_pairs(points: Vec<SimConfig>) -> Vec<(Metrics, Metrics)> {
     let graph = points[0].build_graph();
-    let jobs: Vec<SimConfig> = points
-        .iter()
-        .flat_map(|p| {
-            let mut nm = p.clone();
-            nm.variant = Variant::A;
-            let mut lm = p.clone();
-            lm.variant = Variant::M;
-            [nm, lm]
-        })
-        .collect();
-    let out = par_map(&jobs, default_threads(), |cfg| run_sim(cfg, &graph));
+    let mut plan = SweepPlan::new();
+    for p in &points {
+        let mut nm = p.clone();
+        nm.variant = Variant::A;
+        plan.push(nm);
+        let mut lm = p.clone();
+        lm.variant = Variant::M;
+        plan.push(lm);
+    }
+    let out = SweepRunner::new(&graph).run(&plan);
     out.chunks(2).map(|c| (c[0].clone(), c[1].clone())).collect()
 }
 

@@ -8,7 +8,8 @@
 mod common;
 
 use lignn::config::{GnnModel, SimConfig, Variant};
-use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
+use lignn::sim::runs::alpha_grid;
+use lignn::sim::SweepRunner;
 use lignn::util::benchkit::print_table;
 use lignn::util::json::Json;
 
@@ -18,11 +19,14 @@ fn main() {
     let mut headline: Vec<(String, f64, f64, f64)> = Vec::new();
 
     for graph in common::eval_graphs() {
+        // One graph instance per dataset, shared by every (model, variant,
+        // α) point through the sweep runner.
         let g = SimConfig { graph, ..Default::default() }.build_graph();
+        let runner = SweepRunner::new(&g);
         for model in GnnModel::ALL {
             for variant in [Variant::A, Variant::T] {
                 let cfg = SimConfig { graph, model, variant, ..Default::default() };
-                let (_, rows) = normalized_against_no_dropout(&cfg, &g, &alphas);
+                let (_, rows) = runner.normalized(&cfg, &alphas);
                 let table: Vec<Vec<String>> = rows
                     .iter()
                     .map(|r| {

@@ -8,7 +8,7 @@ use lignn::cache::LruCache;
 use lignn::config::{GraphPreset, SimConfig, Variant};
 use lignn::dram::{DramModel, DramStandardKind};
 use lignn::lignn::{AddressCalc, Criteria, LignnUnit};
-use lignn::sim::run_sim;
+use lignn::sim::{run_sim, SweepRunner};
 use lignn::util::benchkit::{print_table, time};
 use lignn::util::json::Json;
 use lignn::util::rng::Pcg64;
@@ -97,6 +97,40 @@ fn main() {
             "edges",
             t.best_s,
         );
+    }
+
+    // Multi-layer engine: the 2-layer schedule through the same wrapper.
+    {
+        let cfg = SimConfig {
+            graph: GraphPreset::Small,
+            variant: Variant::T,
+            layers: 2,
+            ..Default::default()
+        };
+        let g = cfg.build_graph();
+        let edges = g.num_edges() as f64;
+        let t = time(3, || {
+            let _ = run_sim(&cfg, &g);
+        });
+        record("run_sim(small, LG-T, layers=2)", 2.0 * edges / t.best_s, "edges", t.best_s);
+    }
+
+    // Sweep executor: 10-point backward α sweep — one shared transpose,
+    // per-worker recycled burst buffers.
+    {
+        let cfg = SimConfig {
+            graph: GraphPreset::Small,
+            variant: Variant::T,
+            backward: true,
+            ..Default::default()
+        };
+        let g = cfg.build_graph();
+        let alphas: Vec<f64> = (0..10).map(|i| i as f64 / 10.0).collect();
+        let points = alphas.len() as f64;
+        let t = time(3, || {
+            let _ = SweepRunner::new(&g).alpha_sweep(&cfg, &alphas);
+        });
+        record("sweep(small, 10x backward)", points / t.best_s, "points", t.best_s);
     }
 
     print_table("Hot-path throughput", &["stage", "throughput", "best time"], &rows);

@@ -3,7 +3,7 @@
 
 mod presets;
 
-pub use presets::{GraphPreset, WorkloadPreset};
+pub use presets::{GraphPreset, SchedulePreset, WorkloadPreset};
 
 
 use crate::dram::standard::DramStandardKind;
@@ -153,8 +153,20 @@ pub struct SimConfig {
     pub access: usize,
     /// Scheduling range for LG-S/T triggers, in feature requests ("Range").
     pub range: usize,
-    /// Hidden dimension of the combination phase (compute model).
+    /// Hidden dimension of the combination phase (compute model). Also
+    /// the element count of intermediate features read by layer-2+
+    /// aggregations (`layers ≥ 2` runs), so it must be a power of two
+    /// when multi-layer simulation is on.
     pub hidden: usize,
+    /// Aggregation layers simulated per epoch (≥ 1). Layer 1 streams the
+    /// raw feature matrix; layers 2+ read the previous layer's
+    /// intermediates from the write-back region at `hidden` elements per
+    /// vertex — reproducing the paper's "layer 1 dominates" premise as a
+    /// measurable result (`Metrics::layer_reads`).
+    pub layers: usize,
+    /// Training epochs simulated back-to-back (≥ 1). Each epoch repeats
+    /// the full layer schedule (plus the optional backward phase).
+    pub epochs: usize,
     /// Keep-side criteria `C` for Algorithm 2 (`any` | `channel-balance`).
     pub channel_balance: bool,
     /// Model §4.3's dropout-mask write-back (1 bit/element, sequential,
@@ -187,6 +199,8 @@ impl Default for SimConfig {
             access: 32,
             range: 1024,
             hidden: 64,
+            layers: 1,
+            epochs: 1,
             channel_balance: false,
             mask_writeback: true,
             backward: false,
@@ -220,6 +234,32 @@ impl SimConfig {
         }
         if self.feat_base & (self.feat_base.wrapping_sub(1)) != 0 {
             return Err("feat_base must be a power of two (alignment, §4.2)".into());
+        }
+        if self.layers == 0 || self.epochs == 0 {
+            return Err(format!(
+                "layers/epochs must be ≥ 1, got {}/{}",
+                self.layers, self.epochs
+            ));
+        }
+        if self.layers > 1 {
+            if !self.hidden.is_power_of_two() {
+                return Err(format!(
+                    "multi-layer runs address intermediates by `hidden`, which must be a power of two (§4.2 alignment), got {}",
+                    self.hidden
+                ));
+            }
+            // The intermediate region sits at feat_base + capacity/2; it
+            // is row-group aligned only when feat_base itself is, so
+            // reject here rather than panic inside the engine.
+            let group = crate::dram::AddressMapping::new(&self.dram.config()).row_group_bytes();
+            if self.feat_base % group != 0 {
+                return Err(format!(
+                    "multi-layer runs need feat_base aligned to the {}-byte row group of {} (got {:#x})",
+                    group,
+                    self.dram.name(),
+                    self.feat_base
+                ));
+            }
         }
         Ok(())
     }
@@ -276,4 +316,35 @@ mod tests {
         assert!(c.validate().is_err());
     }
 
+    #[test]
+    fn validate_layers_epochs() {
+        let mut c = SimConfig::default();
+        c.layers = 0;
+        assert!(c.validate().is_err());
+        c.layers = 2;
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+        c.epochs = 3;
+        assert!(c.validate().is_ok());
+        // layer-2+ intermediates are addressed by `hidden` → power of two
+        c.hidden = 100;
+        assert!(c.validate().is_err());
+        c.layers = 1;
+        assert!(c.validate().is_ok(), "single-layer runs never read by hidden");
+    }
+
+    #[test]
+    fn validate_multi_layer_base_alignment() {
+        // A 4 KiB base is a valid power of two for single-layer runs but
+        // smaller than HBM's 16 KiB row group, so the multi-layer
+        // intermediate region would be misaligned — validate must catch
+        // it instead of the engine panicking mid-run.
+        let mut c = SimConfig::default();
+        c.feat_base = 4096;
+        assert!(c.validate().is_ok());
+        c.layers = 2;
+        assert!(c.validate().is_err());
+        c.feat_base = 1 << 24;
+        assert!(c.validate().is_ok());
+    }
 }

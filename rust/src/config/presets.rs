@@ -122,9 +122,44 @@ impl WorkloadPreset {
     }
 }
 
+/// Epoch-schedule presets for the `SimEngine` lifecycle knobs
+/// (`layers` / `epochs` / `backward`).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulePreset {
+    pub layers: usize,
+    pub epochs: usize,
+    pub backward: bool,
+}
+
+impl SchedulePreset {
+    /// The paper's measurement: one forward layer-1 aggregation epoch.
+    pub const PAPER_FORWARD: SchedulePreset =
+        SchedulePreset { layers: 1, epochs: 1, backward: false };
+
+    /// A full-batch 2-layer training step (GNNear-style workload):
+    /// forward through both layers plus the transposed gradient phase.
+    pub const TWO_LAYER_TRAINING: SchedulePreset =
+        SchedulePreset { layers: 2, epochs: 1, backward: true };
+
+    pub fn apply(&self, cfg: &mut crate::config::SimConfig) {
+        cfg.layers = self.layers;
+        cfg.epochs = self.epochs;
+        cfg.backward = self.backward;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn schedule_presets_validate() {
+        for p in [SchedulePreset::PAPER_FORWARD, SchedulePreset::TWO_LAYER_TRAINING] {
+            let mut cfg = crate::config::SimConfig::default();
+            p.apply(&mut cfg);
+            cfg.validate().unwrap();
+        }
+    }
 
     #[test]
     fn presets_build_deterministically() {

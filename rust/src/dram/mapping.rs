@@ -121,15 +121,20 @@ impl AddressMapping {
         BurstRange { next: start, end, step: self.burst_bytes }
     }
 
+    /// Bytes spanned by one row group: one row replicated across all
+    /// channels (the channel bits are below the column bits, so
+    /// consecutive addresses fill all channels' same-numbered row before
+    /// moving on). Base addresses aligned to this span preserve the
+    /// row-equivalence bit-slice property §4.2 relies on.
+    pub fn row_group_bytes(&self) -> u64 {
+        1u64 << (self.offset_bits + self.ch_bits + self.col_bits)
+    }
+
     /// Number of index bits a vertex-feature array consumes per DRAM row:
     /// with `flen_bytes` per vertex (power of two), `2^k` consecutive
     /// vertices share each (channel-interleaved) row group.
     pub fn vertices_per_row_group(&self, flen_bytes: u64) -> u64 {
-        // A row group is one row replicated across all channels (the
-        // channel bits are below the column bits, so consecutive addresses
-        // fill all channels' same-numbered row before moving on).
-        let row_group_bytes = (1u64 << (self.offset_bits + self.ch_bits + self.col_bits)) as u64;
-        (row_group_bytes / flen_bytes).max(1)
+        (self.row_group_bytes() / flen_bytes).max(1)
     }
 }
 

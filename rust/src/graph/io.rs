@@ -15,7 +15,8 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::fail;
+use crate::util::error::{Context, Result};
 
 use super::CsrGraph;
 
@@ -37,7 +38,7 @@ pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
         let mut it = t.split_whitespace();
         let (a, b) = (it.next(), it.next());
         let (Some(a), Some(b)) = (a, b) else {
-            return Err(anyhow!("{path:?}:{} malformed line: {t}", lineno + 1));
+            return Err(fail!("{path:?}:{} malformed line: {t}", lineno + 1));
         };
         let src: u32 = a.parse().with_context(|| format!("line {}", lineno + 1))?;
         let dst: u32 = b.parse().with_context(|| format!("line {}", lineno + 1))?;
@@ -45,7 +46,7 @@ pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
         edges.push((src, dst));
     }
     if edges.is_empty() {
-        return Err(anyhow!("{path:?}: no edges"));
+        return Err(fail!("{path:?}: no edges"));
     }
     Ok(CsrGraph::from_edges(max_id as usize + 1, &edges))
 }
@@ -76,7 +77,7 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
         Ok(u64::from_le_bytes(u64buf))
     };
     if read_u64(&mut r)? != MAGIC {
-        return Err(anyhow!("{path:?}: not a lignn CSR cache"));
+        return Err(fail!("{path:?}: not a lignn CSR cache"));
     }
     let n = read_u64(&mut r)? as usize;
     let m = read_u64(&mut r)? as usize;
@@ -92,7 +93,7 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
         *t = u32::from_le_bytes(u32buf);
     }
     CsrGraph::from_parts(offsets, targets)
-        .map_err(|e| anyhow!("{path:?}: corrupt CSR cache: {e}"))
+        .map_err(|e| fail!("{path:?}: corrupt CSR cache: {e}"))
 }
 
 /// Load a graph from any supported file: `.csr` caches load directly;

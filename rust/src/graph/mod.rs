@@ -1,5 +1,8 @@
 //! Graph substrate: CSR storage, synthetic generators, irregularity stats.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
 pub mod generate;
 pub mod io;
 pub mod stats;
@@ -12,7 +15,11 @@ pub use stats::GraphStats;
 /// features vertex `v` aggregates (`N_v^-` in the paper's notation) — the
 /// exact traversal the aggregation phase performs and the address stream
 /// LiGNN sees.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// The backward-pass transpose is a pure function of the graph, so it is
+/// cached lazily ([`CsrGraph::transposed`]): a sweep that shares one
+/// graph across points pays the O(E) rebuild exactly once.
+#[derive(Debug)]
 pub struct CsrGraph {
     /// `offsets[v]..offsets[v+1]` indexes `targets` for vertex `v`.
     offsets: Vec<u64>,
@@ -20,7 +27,37 @@ pub struct CsrGraph {
     targets: Vec<u32>,
     /// Optional community labels (planted-partition graphs).
     labels: Option<Vec<u16>>,
+    /// Lazily computed transpose (thread-safe; shared by every
+    /// backward-enabled run on this instance).
+    transposed: OnceLock<Box<CsrGraph>>,
+    /// Debug hook: O(E) transpose computations performed through this
+    /// instance (sweep tests assert it stays at 1).
+    transpose_computed: AtomicU64,
 }
+
+impl Clone for CsrGraph {
+    fn clone(&self) -> CsrGraph {
+        // The clone starts with a cold transpose cache and a fresh
+        // counter — cache state is an optimization, not identity.
+        CsrGraph {
+            offsets: self.offsets.clone(),
+            targets: self.targets.clone(),
+            labels: self.labels.clone(),
+            transposed: OnceLock::new(),
+            transpose_computed: AtomicU64::new(0),
+        }
+    }
+}
+
+impl PartialEq for CsrGraph {
+    fn eq(&self, other: &CsrGraph) -> bool {
+        self.offsets == other.offsets
+            && self.targets == other.targets
+            && self.labels == other.labels
+    }
+}
+
+impl Eq for CsrGraph {}
 
 impl CsrGraph {
     /// Build from an edge list `(src, dst)`; edges are grouped by `dst`
@@ -63,10 +100,18 @@ impl CsrGraph {
             }
             new_offsets[v + 1] = new_offsets[v] + (compacted.len() - before) as u64;
         }
+        CsrGraph::assemble(new_offsets, compacted, None)
+    }
+
+    /// Internal constructor: wraps raw CSR arrays with a cold transpose
+    /// cache.
+    fn assemble(offsets: Vec<u64>, targets: Vec<u32>, labels: Option<Vec<u16>>) -> CsrGraph {
         CsrGraph {
-            offsets: new_offsets,
-            targets: compacted,
-            labels: None,
+            offsets,
+            targets,
+            labels,
+            transposed: OnceLock::new(),
+            transpose_computed: AtomicU64::new(0),
         }
     }
 
@@ -86,17 +131,36 @@ impl CsrGraph {
         if targets.iter().any(|&t| t as usize >= n) {
             return Err("target out of range".into());
         }
-        Ok(CsrGraph { offsets, targets, labels: None })
+        Ok(CsrGraph::assemble(offsets, targets, None))
     }
 
     /// Transposed graph: out-neighbors become in-neighbors. The backward
     /// pass aggregates along reversed edges (Â^T · ∂L/∂H), producing a
     /// second irregular read phase over the same features.
+    ///
+    /// This always performs the O(E) rebuild; prefer [`transposed`]
+    /// (cached) unless an owned graph is required.
+    ///
+    /// [`transposed`]: CsrGraph::transposed
     pub fn transpose(&self) -> CsrGraph {
+        self.transpose_computed.fetch_add(1, Ordering::Relaxed);
         let edges: Vec<(u32, u32)> = self.edge_iter().map(|(d, s)| (d, s)).collect();
         // edge_iter yields (dst, src) of the forward graph; the transpose
         // aggregates at `src` from `dst`.
         CsrGraph::from_edges(self.num_vertices(), &edges)
+    }
+
+    /// Cached transpose: computed at most once per graph instance, no
+    /// matter how many backward-enabled runs share the instance (removes
+    /// O(E) work from every sweep point after the first).
+    pub fn transposed(&self) -> &CsrGraph {
+        self.transposed.get_or_init(|| Box::new(self.transpose()))
+    }
+
+    /// How many O(E) transpose computations this instance has performed
+    /// (debug counter backing the sweep "transpose exactly once" tests).
+    pub fn transpose_count(&self) -> u64 {
+        self.transpose_computed.load(Ordering::Relaxed)
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -218,6 +282,25 @@ mod tests {
         assert_eq!(t.neighbors(0), &[1]);
         assert_eq!(t.neighbors(1), &[2]);
         assert_eq!(t.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn transposed_is_cached_and_counted() {
+        let g = path3();
+        assert_eq!(g.transpose_count(), 0);
+        let first = g.transposed();
+        assert_eq!(first.neighbors(0), &[1]);
+        let first = first as *const CsrGraph;
+        let second = g.transposed() as *const CsrGraph;
+        assert_eq!(first, second, "second call must reuse the cache");
+        assert_eq!(g.transpose_count(), 1);
+        // The owned API still recomputes (and the counter records it).
+        let _ = g.transpose();
+        assert_eq!(g.transpose_count(), 2);
+        // Clones start with a cold cache and a fresh counter.
+        let c = g.clone();
+        assert_eq!(c.transpose_count(), 0);
+        assert_eq!(c, g);
     }
 
     #[test]

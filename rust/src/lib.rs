@@ -15,8 +15,9 @@
 //!
 //! This crate implements the whole evaluation stack the paper uses:
 //!
-//! * [`graph`] — CSR graphs, R-MAT / planted-partition generators and the
-//!   irregularity statistics of Table 2,
+//! * [`graph`] — CSR graphs (with a cached, share-once transpose),
+//!   R-MAT / planted-partition generators and the irregularity
+//!   statistics of Table 2,
 //! * [`dram`] — a cycle-level multi-standard DRAM model (Table 4) with
 //!   address mapping, bank row-buffer FSMs, FR-FCFS-lite scheduling, and
 //!   energy/row-activation accounting (the Ramulator substitute),
@@ -25,17 +26,33 @@
 //! * [`lignn`] — the paper's contribution: burst filter, locality group
 //!   table (LGT), row-integrity dropout policy (Algorithm 2), REC merger,
 //!   and the LG-{A,B,R,S,T} variants of Table 3,
-//! * [`sim`] — the simulation driver + metrics that regenerate every figure
+//! * [`sim`] — the phase-based [`sim::SimEngine`] plus the
+//!   [`sim::SweepRunner`] sweep executor that regenerate every figure
 //!   and table of the evaluation,
 //! * [`analytic`] — the closed-form burst/row model of §3.3 and the
 //!   area/power cost model of §5.2.4,
 //! * [`dropout`] — element/burst/row-granular mask generation shared by the
 //!   simulator and the training path,
-//! * [`runtime`] / [`trainer`] — the PJRT side: load the AOT-lowered JAX
-//!   training step (HLO text artifacts) and run real GNN training with
-//!   LiGNN-shaped dropout masks (Table 5 / end-to-end example).
+//! * [`runtime`] / [`trainer`] — the PJRT side (behind the `pjrt`
+//!   feature): load the AOT-lowered JAX training step (HLO text
+//!   artifacts) and run real GNN training with LiGNN-shaped dropout
+//!   masks (Table 5 / end-to-end example).
+//!
+//! ## Simulation model
+//!
+//! A run is a sequence of [`sim::Phase`]s pushed through a
+//! [`sim::SimEngine`]: `Forward { layer }` drives the aggregation edge
+//! stream (layer 0 reads the raw feature matrix; layers ≥ 1 read the
+//! previous layer's intermediates from the write-back region),
+//! `Backward` drives the transposed stream for gradient aggregation,
+//! `WriteBack`/`MaskWriteBack` model the regular output traffic. The
+//! one-call [`sim::run_sim`] composes the schedule implied by
+//! `SimConfig::{layers, epochs, backward}` and is bit-compatible with
+//! the original single-layer driver at `layers == epochs == 1`.
 //!
 //! ## Quickstart
+//!
+//! One run:
 //!
 //! ```no_run
 //! use lignn::config::{SimConfig, Variant};
@@ -44,9 +61,49 @@
 //! let mut cfg = SimConfig::default();
 //! cfg.alpha = 0.5;
 //! cfg.variant = Variant::T;
+//! cfg.layers = 2; // multi-layer: measure how much layer 1 dominates
 //! let graph = cfg.build_graph();
 //! let m = run_sim(&cfg, &graph);
-//! println!("exec_ns={} activations={}", m.exec_ns, m.dram.activations);
+//! println!(
+//!     "exec_ns={} activations={} layer_reads={:?}",
+//!     m.exec_ns, m.dram.activations, m.layer_reads
+//! );
+//! ```
+//!
+//! A sweep (builds the graph and its transpose once, runs points in
+//! parallel with per-worker recycled buffers):
+//!
+//! ```no_run
+//! use lignn::config::SimConfig;
+//! use lignn::sim::runs::alpha_grid;
+//! use lignn::sim::SweepRunner;
+//!
+//! let cfg = SimConfig::default();
+//! let graph = cfg.build_graph();
+//! let runner = SweepRunner::new(&graph);
+//! let (reference, rows) = runner.normalized(&cfg, &alpha_grid());
+//! for r in &rows {
+//!     println!("α={:.1} speedup={:.2}x", r.alpha, r.speedup);
+//! }
+//! let _ = reference;
+//! ```
+//!
+//! Custom phase composition (e.g. epochs with shared engine state):
+//!
+//! ```no_run
+//! use lignn::config::SimConfig;
+//! use lignn::sim::{Phase, SimEngine};
+//!
+//! let cfg = SimConfig::default();
+//! let graph = cfg.build_graph();
+//! let mut engine = SimEngine::new(&cfg);
+//! engine.push_phase(Phase::Forward { layer: 0 }, &graph);
+//! engine.push_phase(Phase::Backward, &graph);
+//! engine.drain();
+//! engine.push_phase(Phase::WriteBack, &graph);
+//! engine.push_phase(Phase::MaskWriteBack, &graph);
+//! let metrics = engine.finish(&graph);
+//! println!("{}", metrics.summary());
 //! ```
 
 pub mod accel;
@@ -57,10 +114,13 @@ pub mod dram;
 pub mod dropout;
 pub mod graph;
 pub mod lignn;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;
 
 pub use config::{SimConfig, Variant};
 pub use sim::metrics::Metrics;
+pub use sim::{Phase, SimEngine, SweepPlan, SweepRunner};

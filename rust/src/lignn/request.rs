@@ -35,7 +35,16 @@ pub struct AddressCalc {
 
 impl AddressCalc {
     pub fn new(mapping: AddressMapping, feat_base: u64, flen_bytes: u64) -> AddressCalc {
-        assert!(feat_base.is_power_of_two(), "feature base must be aligned (§4.2)");
+        // §4.2's requirement is that vertex → row-class is a pure bit
+        // slice. Power-of-two bases (what `SimConfig::validate` accepts)
+        // always qualify; so does any multiple of the row-group span —
+        // which is what admits the multi-layer write-back region
+        // (`pow2 + pow2`, not itself a power of two).
+        assert!(
+            feat_base.is_power_of_two() || feat_base % mapping.row_group_bytes() == 0,
+            "feature base must be power-of-two or row-group aligned (§4.2): base {feat_base:#x}, group {:#x}",
+            mapping.row_group_bytes()
+        );
         assert!(flen_bytes.is_power_of_two(), "feature size must be power-of-2 (§4.2)");
         AddressCalc { mapping, feat_base, flen_bytes }
     }
@@ -134,6 +143,21 @@ mod tests {
     #[should_panic(expected = "aligned")]
     fn unaligned_base_panics() {
         let m = AddressMapping::new(&DramStandardKind::Hbm.config());
-        let _ = AddressCalc::new(m, 3 << 20, 1024);
+        // One burst past a row-group boundary: breaks the bit-slice.
+        let _ = AddressCalc::new(m, (1 << 24) + 32, 1024);
+    }
+
+    #[test]
+    fn row_group_multiple_base_accepted() {
+        // The multi-layer intermediate region sits at pow2 + pow2 — a
+        // row-group multiple but not itself a power of two.
+        let m = AddressMapping::new(&DramStandardKind::Hbm.config());
+        let base = (1u64 << 24) + (1u64 << 30);
+        let c = AddressCalc::new(m, base, 256);
+        assert_eq!(c.feature_addr(0), base);
+        // Row-class grouping is still a pure slice of the vertex index.
+        let per_group = m.row_group_bytes() / 256;
+        assert_eq!(c.rec_hash(0), c.rec_hash(per_group as u32 - 1));
+        assert_ne!(c.rec_hash(0), c.rec_hash(per_group as u32));
     }
 }

@@ -1,48 +1,53 @@
 //! `lignn` — launcher for the LiGNN reproduction.
 //!
 //! Subcommands:
-//!   simulate     one simulator run, printed as a summary line or JSON
-//!   sweep        α sweep normalized against the no-dropout baseline
-//!   train        end-to-end PJRT training with burst/row dropout masks
-//!   table5       the full Table-5 accuracy grid
-//!   graph-stats  Table-2 irregularity statistics of the graph presets
-//!   report-cost  §5.2.4 area/power estimates for each variant
-//!   analytic     §3.3 closed-form model across α
+//!   simulate      one simulator run, printed as a summary line or JSON
+//!                 (`--layers N --epochs N` for multi-layer/multi-epoch)
+//!   sweep         α sweep normalized against the no-dropout baseline
+//!                 (one shared graph + transpose, parallel points)
+//!   train         end-to-end PJRT training with burst/row dropout masks
+//!                 (requires the `pjrt` build feature)
+//!   table5        the full Table-5 accuracy grid (requires `pjrt`)
+//!   graph-stats   Table-2 irregularity statistics of the graph presets
+//!   report-cost   §5.2.4 area/power estimates for each variant
+//!   analytic      §3.3 closed-form model across α
+//!   trace-replay  drive a DRAM standard from a captured burst trace
 //!
-//! Run `lignn <cmd> --help-flags` to see each command's flags.
-
-use std::path::Path;
-
-use anyhow::{anyhow, Result};
+//! Run `lignn` with no arguments for the flag summary.
 
 use lignn::analytic::{AlgoDropoutModel, CostModel};
 use lignn::config::{GraphPreset, SimConfig, Variant};
-use lignn::sim::runs::{alpha_grid, normalized_against_no_dropout};
-use lignn::sim::run_sim;
-use lignn::trainer::{train, Dataset, MaskKind, TrainConfig};
+use lignn::sim::runs::alpha_grid;
+use lignn::sim::{run_sim, SweepRunner};
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
+use lignn::util::error::{Error, Result};
 use lignn::util::json::Json;
+
+const COMMANDS: &str =
+    "simulate | sweep | train | table5 | graph-stats | report-cost | analytic | trace-replay";
 
 fn sim_config(a: &Args) -> Result<SimConfig> {
     let mut cfg = SimConfig::default();
-    cfg.graph = a.get_or("graph", "lj").parse().map_err(anyhow::Error::msg)?;
-    cfg.model = a.get_or("model", "gcn").parse().map_err(anyhow::Error::msg)?;
-    cfg.dram = a.get_or("dram", "hbm").parse().map_err(anyhow::Error::msg)?;
-    cfg.variant = a.get_or("variant", "T").parse().map_err(anyhow::Error::msg)?;
-    cfg.alpha = a.parse_or("alpha", cfg.alpha).map_err(anyhow::Error::msg)?;
-    cfg.flen = a.parse_or("flen", cfg.flen).map_err(anyhow::Error::msg)?;
-    cfg.capacity = a.parse_or("capacity", cfg.capacity).map_err(anyhow::Error::msg)?;
-    cfg.access = a.parse_or("access", cfg.access).map_err(anyhow::Error::msg)?;
-    cfg.range = a.parse_or("range", cfg.range).map_err(anyhow::Error::msg)?;
-    cfg.seed = a.parse_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.graph = a.get_or("graph", "lj").parse().map_err(Error::msg)?;
+    cfg.model = a.get_or("model", "gcn").parse().map_err(Error::msg)?;
+    cfg.dram = a.get_or("dram", "hbm").parse().map_err(Error::msg)?;
+    cfg.variant = a.get_or("variant", "T").parse().map_err(Error::msg)?;
+    cfg.alpha = a.parse_or("alpha", cfg.alpha).map_err(Error::msg)?;
+    cfg.flen = a.parse_or("flen", cfg.flen).map_err(Error::msg)?;
+    cfg.capacity = a.parse_or("capacity", cfg.capacity).map_err(Error::msg)?;
+    cfg.access = a.parse_or("access", cfg.access).map_err(Error::msg)?;
+    cfg.range = a.parse_or("range", cfg.range).map_err(Error::msg)?;
+    cfg.seed = a.parse_or("seed", cfg.seed).map_err(Error::msg)?;
+    cfg.layers = a.parse_or("layers", cfg.layers).map_err(Error::msg)?;
+    cfg.epochs = a.parse_or("epochs", cfg.epochs).map_err(Error::msg)?;
     cfg.channel_balance = a.has("channel-balance");
     if a.has("no-mask-writeback") {
         cfg.mask_writeback = false;
     }
     cfg.backward = a.has("backward");
     cfg.trace_path = a.get("trace").map(str::to_string);
-    cfg.validate().map_err(anyhow::Error::msg)?;
+    cfg.validate().map_err(Error::msg)?;
     Ok(cfg)
 }
 
@@ -79,6 +84,11 @@ fn metrics_json(m: &lignn::Metrics) -> Json {
         ("feat_new", Json::num(m.feat_new as f64)),
         ("feat_merge", Json::num(m.feat_merge as f64)),
         ("feat_dropped", Json::num(m.feat_dropped as f64)),
+        (
+            "layer_reads",
+            Json::Arr(m.layer_reads.iter().map(|&r| Json::num(r as f64)).collect()),
+        ),
+        ("backward_reads", Json::num(m.backward_reads as f64)),
     ])
 }
 
@@ -90,6 +100,20 @@ fn cmd_simulate(a: &Args) -> Result<()> {
         println!("{}", metrics_json(&m));
     } else {
         println!("{}", m.summary());
+        if cfg.layers > 1 {
+            let shares = m.layer_read_shares();
+            let mut parts: Vec<String> = m
+                .layer_reads
+                .iter()
+                .zip(&shares)
+                .enumerate()
+                .map(|(i, (r, s))| format!("layer {}: {r} reads ({:.1}%)", i + 1, s * 100.0))
+                .collect();
+            if m.backward_reads > 0 {
+                parts.push(format!("backward: {} reads", m.backward_reads));
+            }
+            println!("per-layer DRAM reads — {}", parts.join(", "));
+        }
     }
     Ok(())
 }
@@ -97,7 +121,10 @@ fn cmd_simulate(a: &Args) -> Result<()> {
 fn cmd_sweep(a: &Args) -> Result<()> {
     let cfg = sim_config(a)?;
     let graph = load_graph(a, &cfg)?;
-    let (_, rows) = normalized_against_no_dropout(&cfg, &graph, &alpha_grid());
+    // One shared graph (and transpose, when --backward): the runner
+    // amortizes both across every sweep point.
+    let runner = SweepRunner::new(&graph);
+    let (_, rows) = runner.normalized(&cfg, &alpha_grid());
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -124,13 +151,16 @@ fn cmd_sweep(a: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(a: &Args) -> Result<()> {
+    use lignn::trainer::{train, Dataset, TrainConfig};
+    use std::path::Path;
     let cfg = TrainConfig {
         model: a.get_or("model", "gcn").to_string(),
-        alpha: a.parse_or("alpha", 0.5).map_err(anyhow::Error::msg)?,
-        mask: a.get_or("mask", "burst").parse().map_err(anyhow::Error::msg)?,
-        epochs: a.parse_or("epochs", 200).map_err(anyhow::Error::msg)?,
-        seed: a.parse_or("seed", 0xACC0_DEu64).map_err(anyhow::Error::msg)?,
+        alpha: a.parse_or("alpha", 0.5).map_err(Error::msg)?,
+        mask: a.get_or("mask", "burst").parse().map_err(Error::msg)?,
+        epochs: a.parse_or("epochs", 200).map_err(Error::msg)?,
+        seed: a.parse_or("seed", 0xACC0_DEu64).map_err(Error::msg)?,
     };
     let ds = Dataset::planted(1024, 64, 8, 7);
     let r = train(Path::new(a.get_or("artifacts", "artifacts")), &cfg, &ds)?;
@@ -146,9 +176,12 @@ fn cmd_train(a: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_table5(a: &Args) -> Result<()> {
+    use lignn::trainer::{train, Dataset, MaskKind, TrainConfig};
+    use std::path::Path;
     let model = a.get_or("model", "gcn").to_string();
-    let epochs = a.parse_or("epochs", 200).map_err(anyhow::Error::msg)?;
+    let epochs = a.parse_or("epochs", 200).map_err(Error::msg)?;
     let dir = Path::new(a.get_or("artifacts", "artifacts")).to_path_buf();
     let ds = Dataset::planted(1024, 64, 8, 7);
     let mut rows = Vec::new();
@@ -171,6 +204,21 @@ fn cmd_table5(a: &Args) -> Result<()> {
     );
     Ok(())
 }
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_a: &Args) -> Result<()> {
+    Err(Error::msg(PJRT_HINT))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_table5(_a: &Args) -> Result<()> {
+    Err(Error::msg(PJRT_HINT))
+}
+
+#[cfg(not(feature = "pjrt"))]
+const PJRT_HINT: &str = "this binary was built without the `pjrt` feature. Training needs the \
+     xla PJRT bindings, which only exist in the image that bakes them in: there, add the `xla` \
+     dependency to rust/Cargo.toml and rebuild with `cargo build --features pjrt` (see ROADMAP.md)";
 
 fn cmd_graph_stats(_a: &Args) -> Result<()> {
     let mut rows = Vec::new();
@@ -227,8 +275,8 @@ fn cmd_report_cost(_a: &Args) -> Result<()> {
 }
 
 fn cmd_analytic(a: &Args) -> Result<()> {
-    let k = a.parse_or("k", 8u32).map_err(anyhow::Error::msg)?;
-    let c = a.parse_or("c", 32u32).map_err(anyhow::Error::msg)?;
+    let k = a.parse_or("k", 8u32).map_err(Error::msg)?;
+    let c = a.parse_or("c", 32u32).map_err(Error::msg)?;
     let model = AlgoDropoutModel::new(k, c, 1);
     let rows: Vec<Vec<String>> = alpha_grid()
         .iter()
@@ -251,9 +299,9 @@ fn cmd_analytic(a: &Args) -> Result<()> {
 }
 
 fn cmd_trace_replay(a: &Args) -> Result<()> {
-    let path = a.get("trace").ok_or_else(|| anyhow!("need --trace <file>"))?;
+    let path = a.get("trace").ok_or_else(|| Error::msg("need --trace <file>"))?;
     let dram: lignn::dram::DramStandardKind =
-        a.get_or("dram", "hbm").parse().map_err(anyhow::Error::msg)?;
+        a.get_or("dram", "hbm").parse().map_err(Error::msg)?;
     let model = lignn::dram::DramModel::new(dram.config());
     let (c, busy) = lignn::sim::trace::replay(std::path::Path::new(path), model)?;
     println!(
@@ -270,26 +318,48 @@ fn cmd_trace_replay(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+fn usage() {
+    println!(
+        "lignn — locality-aware dropout & merge for GNN training\n\
+         commands: {COMMANDS}\n\
+         common flags: --graph lj|or|pa|small|tiny --model gcn|sage|gin \\\n\
+         --dram hbm|ddr4|gddr5 --variant A|B|R|S|T|M --alpha 0.5 --json\n\
+         engine flags: --layers N --epochs N --backward --channel-balance \\\n\
+         --no-mask-writeback --trace <file> --graph-file <path>"
+    );
+}
+
+fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
-        Some("simulate") => cmd_simulate(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("train") => cmd_train(&args),
-        Some("table5") => cmd_table5(&args),
-        Some("graph-stats") => cmd_graph_stats(&args),
-        Some("report-cost") => cmd_report_cost(&args),
-        Some("analytic") => cmd_analytic(&args),
-        Some("trace-replay") => cmd_trace_replay(&args),
-        Some(other) => Err(anyhow!("unknown command `{other}`")),
+        Some("simulate") => cmd_simulate(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("train") => cmd_train(args),
+        Some("table5") => cmd_table5(args),
+        Some("graph-stats") => cmd_graph_stats(args),
+        Some("report-cost") => cmd_report_cost(args),
+        Some("analytic") => cmd_analytic(args),
+        Some("trace-replay") => cmd_trace_replay(args),
+        Some(other) => Err(Error::msg(format!(
+            "unknown command `{other}` — expected one of: {COMMANDS}"
+        ))),
         None => {
-            println!(
-                "lignn — locality-aware dropout & merge for GNN training\n\
-                 commands: simulate | sweep | train | table5 | graph-stats | report-cost | analytic | trace-replay\n\
-                 common flags: --graph lj|or|pa|small|tiny --model gcn|sage|gin \\\n\
-                 --dram hbm|ddr4|gddr5 --variant A|B|R|S|T|M --alpha 0.5 --json"
-            );
+            usage();
             Ok(())
         }
+    }
+}
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
 }

@@ -9,7 +9,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::fail;
+use crate::util::error::{Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
 
@@ -27,7 +28,7 @@ impl Runtime {
     pub fn open(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            .map_err(|e| fail!("PJRT CPU client: {e:?}"))?;
         Ok(Runtime {
             client,
             manifest,
@@ -43,7 +44,7 @@ impl Runtime {
     pub fn spec(&self, model: &str, kind: &str) -> Result<&ArtifactSpec> {
         self.manifest
             .find(model, kind)
-            .ok_or_else(|| anyhow!("no artifact for ({model}, {kind}) — run `make artifacts`"))
+            .ok_or_else(|| fail!("no artifact for ({model}, {kind}) — run `make artifacts`"))
     }
 
     fn ensure_compiled(&mut self, model: &str, kind: &str) -> Result<()> {
@@ -54,12 +55,12 @@ impl Runtime {
         let spec = self.spec(model, kind)?.clone();
         let path = self.manifest.artifact_path(&self.dir, &spec);
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            .map_err(|e| fail!("parsing {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            .map_err(|e| fail!("compiling {path:?}: {e:?}"))?;
         self.compiled.insert(key, exe);
         Ok(())
     }
@@ -74,7 +75,7 @@ impl Runtime {
     ) -> Result<Vec<xla::Literal>> {
         let spec = self.spec(model, kind)?;
         if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
+            return Err(fail!(
                 "({model}, {kind}) expects {} inputs, got {}",
                 spec.inputs.len(),
                 inputs.len()
@@ -87,13 +88,13 @@ impl Runtime {
             .expect("just compiled");
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing ({model}, {kind}): {e:?}"))?;
+            .map_err(|e| fail!("executing ({model}, {kind}): {e:?}"))?;
         let tuple = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+            .map_err(|e| fail!("fetching result: {e:?}"))?;
         tuple
             .to_tuple()
-            .map_err(|e| anyhow!("untupling result: {e:?}"))
+            .map_err(|e| fail!("untupling result: {e:?}"))
             .context("output should be a tuple (return_tuple=True)")
     }
 }
@@ -102,16 +103,16 @@ impl Runtime {
 pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product::<usize>().max(1);
     if n != data.len() {
-        return Err(anyhow!("shape {shape:?} wants {n} elements, got {}", data.len()));
+        return Err(fail!("shape {shape:?} wants {n} elements, got {}", data.len()));
     }
     let lit = xla::Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+    lit.reshape(&dims).map_err(|e| fail!("reshape {shape:?}: {e:?}"))
 }
 
 /// Read an f32 literal back into a host vector.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+    lit.to_vec::<f32>().map_err(|e| fail!("literal to_vec: {e:?}"))
 }
 
 #[cfg(test)]

@@ -6,7 +6,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::fail;
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -54,9 +55,9 @@ impl TensorSpec {
             shape: v
                 .get("shape")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .ok_or_else(|| fail!("tensor missing shape"))?
                 .iter()
-                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                .map(|x| x.as_usize().ok_or_else(|| fail!("bad shape entry")))
                 .collect::<Result<Vec<_>>>()?,
             dtype: field_str(v, "dtype")?,
         })
@@ -67,19 +68,19 @@ fn field_str(v: &Json, key: &str) -> Result<String> {
     v.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| anyhow!("missing string field `{key}`"))
+        .ok_or_else(|| fail!("missing string field `{key}`"))
 }
 
 fn field_num(v: &Json, key: &str) -> Result<f64> {
     v.get(key)
         .and_then(Json::as_f64)
-        .ok_or_else(|| anyhow!("missing numeric field `{key}`"))
+        .ok_or_else(|| fail!("missing numeric field `{key}`"))
 }
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
-        let v = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
-        let c = v.get("constants").ok_or_else(|| anyhow!("missing constants"))?;
+        let v = Json::parse(text).map_err(|e| fail!("manifest JSON: {e}"))?;
+        let c = v.get("constants").ok_or_else(|| fail!("missing constants"))?;
         let constants = Constants {
             n_nodes: field_num(c, "n_nodes")? as usize,
             n_features: field_num(c, "n_features")? as usize,
@@ -91,7 +92,7 @@ impl Manifest {
         let artifacts = v
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .ok_or_else(|| fail!("missing artifacts"))?
             .iter()
             .map(|a| {
                 Ok(ArtifactSpec {
@@ -101,14 +102,14 @@ impl Manifest {
                     inputs: a
                         .get("inputs")
                         .and_then(Json::as_arr)
-                        .ok_or_else(|| anyhow!("missing inputs"))?
+                        .ok_or_else(|| fail!("missing inputs"))?
                         .iter()
                         .map(TensorSpec::from_json)
                         .collect::<Result<Vec<_>>>()?,
                     outputs: a
                         .get("outputs")
                         .and_then(Json::as_arr)
-                        .ok_or_else(|| anyhow!("missing outputs"))?
+                        .ok_or_else(|| fail!("missing outputs"))?
                         .iter()
                         .map(TensorSpec::from_json)
                         .collect::<Result<Vec<_>>>()?,

@@ -1,9 +1,20 @@
-//! Simulation driver: edge stream → (REC merge) → cache → LiGNN → DRAM.
+//! Simulation engine: edge stream → (REC merge) → cache → LiGNN → DRAM.
 //!
-//! One run simulates a full layer-1 aggregation epoch (the paper's focus —
-//! the initial aggregation dominates and deeper layers read on-chip
-//! intermediates) plus the aggregation write-back, and reports
-//! `exec = max(memory, compute)` since GCNTrain overlaps its datapaths.
+//! The engine is phase-based: callers push [`Phase`]s (forward /
+//! backward edge drives, aggregation and mask write-backs) through a
+//! [`SimEngine`], `drain` at sync points, and `finish` into [`Metrics`].
+//! One shared edge-drive routine serves both the merged (`RecMerger`)
+//! and plain read paths, so every phase — forward or backward, any
+//! layer — runs the identical pipeline.
+//!
+//! [`run_sim`] remains the one-call entry point: it composes the phase
+//! schedule implied by the config (`layers` × `epochs`, optional
+//! backward) and reproduces the pre-engine single-layer driver
+//! bit-for-bit when `layers == epochs == 1`. Multi-layer runs read
+//! layer-2+ intermediates from the write-back region at `hidden`
+//! elements per vertex, making the paper's "layer 1 dominates" premise a
+//! measured result (`Metrics::layer_reads`). `exec = max(memory,
+//! compute)` since GCNTrain overlaps its datapaths.
 
 use crate::accel::{EngineParams, Interleaver};
 use crate::cache::LruCache;
@@ -11,7 +22,7 @@ use crate::config::SimConfig;
 use crate::dram::energy::EnergyReport;
 use crate::dram::DramModel;
 use crate::graph::CsrGraph;
-use crate::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger};
+use crate::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger, UnitStats};
 
 use super::frfcfs::{FrFcfs, DEFAULT_DEPTH};
 use super::metrics::Metrics;
@@ -25,7 +36,61 @@ enum Served {
     Opened,
 }
 
-struct Run<'a> {
+/// One step of the engine's lifecycle. Callers compose epochs from
+/// these; [`run_sim`] is the canonical composition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Drive the aggregation edge stream for `layer` (0-based). Layer 0
+    /// reads the raw feature matrix; layers ≥ 1 read the previous
+    /// layer's intermediates from the write-back region.
+    Forward { layer: usize },
+    /// Drive the transposed edge stream (gradient aggregation,
+    /// Â^T·∂L/∂H) through the same unit — the forward mask persists, so
+    /// no fresh dropout decisions are made (§4.3).
+    Backward,
+    /// Aggregation write-back: one output feature per vertex, streamed
+    /// sequentially into a disjoint region (regular, high row locality).
+    WriteBack,
+    /// §4.3's dropout-mask write-back (1 bit per element, sequential).
+    MaskWriteBack,
+}
+
+/// Decorrelates the per-layer dropout streams without touching the
+/// layer-0 stream (which must stay at `cfg.seed` for reproducibility).
+const LAYER_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+fn mark(served: &mut Vec<Served>, base: usize, seq: u32, activated: bool) {
+    let idx = base + seq as usize - 1;
+    if idx >= served.len() {
+        served.resize(idx + 1, Served::None);
+    }
+    if activated {
+        served[idx] = Served::Opened;
+    } else if served[idx] == Served::None {
+        served[idx] = Served::Merged;
+    }
+}
+
+/// Where combination outputs land (and layer-2+ aggregations read from):
+/// halfway up the address space, offset by the feature base so both
+/// sites of the engine agree byte-for-byte.
+fn intermediate_base(cfg: &SimConfig, dram: &DramModel) -> u64 {
+    cfg.feat_base + (dram.mapping().capacity_bytes() >> 1)
+}
+
+fn merge_stats(into: &mut UnitStats, s: &UnitStats) {
+    into.features_in += s.features_in;
+    into.total_elems += s.total_elems;
+    into.desired_elems += s.desired_elems;
+    into.bursts_in += s.bursts_in;
+    into.bursts_filter_dropped += s.bursts_filter_dropped;
+    into.bursts_row_dropped += s.bursts_row_dropped;
+    into.bursts_kept += s.bursts_kept;
+}
+
+/// Reusable phase-based simulation engine. Construct once per run, push
+/// phases, `drain` at layer/epoch sync points, then `finish`.
+pub struct SimEngine<'a> {
     cfg: &'a SimConfig,
     dram: DramModel,
     cache: LruCache,
@@ -39,22 +104,41 @@ struct Run<'a> {
     /// Optional DRAM burst trace capture.
     trace: Option<TraceWriter>,
     out: Vec<Burst>,
-    served: Vec<Served>, // indexed by seq-1
+    served: Vec<Served>, // indexed by seq_base + seq - 1
     feat_hit: u64,
+    /// Layer whose unit is live.
+    current_layer: usize,
+    /// `served` index offset of the live unit (sum of retired units'
+    /// `features_in`).
+    seq_base: usize,
+    /// Accumulated stats of retired (earlier-layer) units.
+    retired: UnitStats,
+    /// Units created after the initial one (decorrelates layer seeds).
+    unit_swaps: u64,
+    /// DRAM read bursts credited per forward layer (the backward phase
+    /// accumulates into `backward_reads` instead, so the per-layer
+    /// numbers stay a clean forward-aggregation comparison).
+    layer_reads: Vec<u64>,
+    /// DRAM read bursts credited to backward (gradient) drives.
+    backward_reads: u64,
+    /// Reads since `reads_mark` go to `backward_reads` when set.
+    crediting_backward: bool,
+    reads_mark: u64,
+    /// Feature instances already covered by a mask write-back.
+    mask_mark: u64,
+    /// Forward drives executed per layer (compute accounting).
+    fwd_drives: Vec<u64>,
+    /// Backward drives executed (compute accounting).
+    bwd_drives: u64,
 }
 
-impl<'a> Run<'a> {
-    fn new(cfg: &'a SimConfig) -> Run<'a> {
+impl<'a> SimEngine<'a> {
+    pub fn new(cfg: &'a SimConfig) -> SimEngine<'a> {
+        cfg.validate().expect("invalid SimConfig");
         let dram = DramModel::new(cfg.dram.config());
         let sched = FrFcfs::new(dram.config().channels, DEFAULT_DEPTH);
-        let calc = AddressCalc::new(*dram.mapping(), cfg.feat_base, cfg.flen_bytes());
-        let criteria = if cfg.channel_balance {
-            Criteria::ChannelBalance
-        } else {
-            Criteria::Any
-        };
-        let unit = LignnUnit::new(cfg.variant, calc, cfg.alpha, cfg.range, criteria, cfg.seed);
-        Run {
+        let unit = Self::build_unit(cfg, &dram, 0, cfg.seed);
+        SimEngine {
             cfg,
             dram,
             cache: LruCache::new(cfg.capacity),
@@ -64,17 +148,207 @@ impl<'a> Run<'a> {
             trace: cfg.trace_path.as_ref().map(|p| {
                 TraceWriter::create(std::path::Path::new(p)).expect("creating trace file")
             }),
-            out: Vec::with_capacity(8192),
+            // Grows to the run's working set on first use, or arrives
+            // pre-grown through `recycle_buffer`.
+            out: Vec::new(),
             served: Vec::new(),
             feat_hit: 0,
+            current_layer: 0,
+            seq_base: 0,
+            retired: UnitStats::default(),
+            unit_swaps: 0,
+            layer_reads: vec![0; cfg.layers],
+            backward_reads: 0,
+            crediting_backward: false,
+            reads_mark: 0,
+            mask_mark: 0,
+            fwd_drives: vec![0; cfg.layers],
+            bwd_drives: 0,
+        }
+    }
+
+    /// Donate a previously used burst buffer (its capacity) to this run —
+    /// the sweep runner recycles one per worker thread.
+    pub fn recycle_buffer(&mut self, buf: &mut Vec<Burst>) {
+        if buf.capacity() > self.out.capacity() {
+            buf.clear();
+            self.out = std::mem::take(buf);
+        }
+    }
+
+    /// Hand the burst buffer back for the next run on this worker.
+    pub fn reclaim_buffer(&mut self, buf: &mut Vec<Burst>) {
+        *buf = std::mem::take(&mut self.out);
+        buf.clear();
+    }
+
+    /// Execute one lifecycle phase.
+    pub fn push_phase(&mut self, phase: Phase, graph: &CsrGraph) {
+        match phase {
+            Phase::Forward { layer } => {
+                assert!(
+                    layer < self.cfg.layers,
+                    "phase layer {layer} out of range (cfg.layers = {})",
+                    self.cfg.layers
+                );
+                // Attribution boundary only — no drain, so the DRAM
+                // traffic (and the golden-parity metrics) are untouched;
+                // at most a scheduling window of in-flight bursts bleeds
+                // into the next bucket.
+                self.credit_reads();
+                self.crediting_backward = false;
+                if layer != self.current_layer {
+                    self.advance_layer(layer);
+                }
+                self.fwd_drives[layer] += 1;
+                self.drive_edges(graph.edge_iter());
+            }
+            Phase::Backward => {
+                self.credit_reads();
+                self.crediting_backward = true;
+                self.bwd_drives += 1;
+                // The transpose is a pure function of the graph — cached
+                // on the instance, so sweeps sharing a graph pay the O(E)
+                // rebuild exactly once.
+                self.drive_edges(graph.transposed().edge_iter());
+            }
+            Phase::WriteBack => self.write_back(graph.num_vertices() as u32),
+            Phase::MaskWriteBack => self.write_masks(),
+        }
+    }
+
+    /// Sync point: drain LiGNN residue, in-flight interleaved reads and
+    /// the memory-controller window. Call before write-back phases and at
+    /// layer/epoch boundaries.
+    pub fn drain(&mut self) {
+        self.unit.flush(&mut self.out);
+        if let Some(il) = &mut self.interleaver {
+            il.flush(&mut self.out);
+        }
+        self.issue();
+        self.drain_sched();
+        self.credit_reads();
+    }
+
+    /// Close the run: final drain, trace flush, session accounting, and
+    /// metric assembly. The engine is spent afterwards.
+    pub fn finish(&mut self, graph: &CsrGraph) -> Metrics {
+        // No-op when the canonical schedule already drained; salvages
+        // stragglers otherwise.
+        self.drain();
+        if let Some(t) = self.trace.take() {
+            t.finish().expect("flushing trace");
+        }
+        self.dram.flush_sessions();
+
+        // Classify feature instances (hit counted at cache probe).
+        let (mut feat_new, mut feat_merge, mut feat_dropped) = (0u64, 0u64, 0u64);
+        for s in &self.served {
+            match s {
+                Served::Opened => feat_new += 1,
+                Served::Merged => feat_merge += 1,
+                Served::None => feat_dropped += 1,
+            }
+        }
+        let mut unit_stats = self.retired.clone();
+        merge_stats(&mut unit_stats, &self.unit.stats);
+        // Instances whose bursts were all dropped before any DRAM issue
+        // never made it into `served`.
+        feat_dropped += unit_stats.features_in - self.served.len() as u64;
+
+        let engine = EngineParams::default();
+        // Compute is charged per forward drive actually executed: layer 1
+        // consumes (flen → hidden), deeper layers (hidden → hidden). Each
+        // backward drive is a full-gradient pass over every configured
+        // layer, ≈ 2× one forward epoch (input + weight gradients). For
+        // the canonical schedule this reduces bit-exactly to the legacy
+        // `per_epoch × (3 if backward) × epochs`.
+        let cfg = self.cfg;
+        let layer_cost = |l: usize| {
+            if l == 0 {
+                engine.compute_ns(cfg.model, graph, cfg.flen, cfg.hidden)
+            } else {
+                engine.compute_ns(cfg.model, graph, cfg.hidden, cfg.hidden)
+            }
+        };
+        let mut compute_ns = 0.0;
+        for (l, &n) in self.fwd_drives.iter().enumerate() {
+            if n > 0 {
+                compute_ns += n as f64 * layer_cost(l);
+            }
+        }
+        if self.bwd_drives > 0 {
+            let mut per_epoch = layer_cost(0);
+            for l in 1..cfg.layers {
+                per_epoch += layer_cost(l);
+            }
+            compute_ns += 2.0 * self.bwd_drives as f64 * per_epoch;
+        }
+        let mem_ns = self.dram.busy_ns();
+
+        let energy = EnergyReport::from_counters(self.dram.config(), &self.dram.counters);
+        Metrics {
+            variant: self.cfg.variant.name().to_string(),
+            graph: self.cfg.graph.name().to_string(),
+            model: self.cfg.model.name().to_string(),
+            dram_standard: self.cfg.dram.name().to_string(),
+            alpha: self.cfg.alpha,
+            exec_ns: mem_ns.max(compute_ns),
+            mem_ns,
+            compute_ns,
+            unit: unit_stats,
+            dram: self.dram.counters.clone(),
+            energy,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            feat_hit: self.feat_hit,
+            feat_new,
+            feat_merge,
+            feat_dropped,
+            layer_reads: self.layer_reads.clone(),
+            backward_reads: self.backward_reads,
+        }
+    }
+
+    /// The shared edge-drive routine: one loop body for the merged
+    /// (LG-T/LM) and plain paths, for any phase's edge stream.
+    fn drive_edges(&mut self, edges: impl Iterator<Item = (u32, u32)>) {
+        if self.cfg.variant.uses_merge() {
+            // Edges pass through the REC merger first (§4.2). The REC CAM
+            // is sized to the scheduling range (a class per pending edge
+            // in the worst case, capped at 1024 — still a small edge
+            // table, §5.2.4 prices it at ~0.01 mm²).
+            let calc = *self.unit.calc();
+            let mut merger = RecMerger::new(calc, self.cfg.range, self.cfg.range.min(1024));
+            for (dst, src) in edges {
+                for group in merger.push(Edge { dst, src }) {
+                    self.drive_group(group);
+                }
+            }
+            for group in merger.flush() {
+                self.drive_group(group);
+            }
+        } else {
+            for (_dst, src) in edges {
+                self.process(src, false);
+            }
+        }
+    }
+
+    /// Multi-edge REC groups (same DRAM row class) issue clustered — one
+    /// access sequence from the merger hardware; the singleton remainder
+    /// flows through the engine's normal read path.
+    fn drive_group(&mut self, group: Vec<Edge>) {
+        let clustered = group.len() > 1;
+        for e in group {
+            self.process(e.src, clustered);
         }
     }
 
     /// Process one aggregation edge: cache probe, then LiGNN, then issue
     /// whatever the unit emitted to DRAM (through the MLP interleaver for
-    /// the non-LGT paths). `clustered` bypasses the interleaver — used for
-    /// multi-edge REC groups, which the merger hardware issues as one
-    /// clustered access sequence (§4.2).
+    /// the non-LGT paths). `clustered` bypasses the interleaver — used
+    /// for multi-edge REC groups (§4.2).
     fn process(&mut self, src: u32, clustered: bool) {
         if self.cache.access(src) {
             self.feat_hit += 1;
@@ -82,7 +356,8 @@ impl<'a> Run<'a> {
         }
         match &mut self.interleaver {
             Some(_) if !clustered => {
-                let mut feature = Vec::with_capacity(self.unit.calc().bursts_per_feature() as usize);
+                let mut feature =
+                    Vec::with_capacity(self.unit.calc().bursts_per_feature() as usize);
                 self.unit.push_feature(src, &mut feature);
                 let il = self.interleaver.as_mut().expect("interleaver present");
                 il.push(feature, &mut self.out);
@@ -98,17 +373,8 @@ impl<'a> Run<'a> {
     /// FR-FCFS window) in the unit's locality order.
     fn issue(&mut self) {
         let served = &mut self.served;
-        let mut sink = |seq: u32, activated: bool| {
-            let idx = seq as usize - 1;
-            if idx >= served.len() {
-                served.resize(idx + 1, Served::None);
-            }
-            if activated {
-                served[idx] = Served::Opened;
-            } else if served[idx] == Served::None {
-                served[idx] = Served::Merged;
-            }
-        };
+        let base = self.seq_base;
+        let mut sink = |seq: u32, activated: bool| mark(served, base, seq, activated);
         for b in self.out.drain(..) {
             if let Some(t) = &mut self.trace {
                 t.read(b.addr).expect("trace write");
@@ -119,30 +385,84 @@ impl<'a> Run<'a> {
 
     fn drain_sched(&mut self) {
         let served = &mut self.served;
-        let mut sink = |seq: u32, activated: bool| {
-            let idx = seq as usize - 1;
-            if idx >= served.len() {
-                served.resize(idx + 1, Served::None);
-            }
-            if activated {
-                served[idx] = Served::Opened;
-            } else if served[idx] == Served::None {
-                served[idx] = Served::Merged;
-            }
-        };
+        let base = self.seq_base;
+        let mut sink = |seq: u32, activated: bool| mark(served, base, seq, activated);
         self.sched.flush(&mut self.dram, &mut sink);
     }
 
+    /// Credit DRAM reads since the last mark to the live bucket (the
+    /// current forward layer, or the backward accumulator).
+    fn credit_reads(&mut self) {
+        let now = self.dram.counters.reads;
+        let delta = now - self.reads_mark;
+        self.reads_mark = now;
+        if self.crediting_backward {
+            self.backward_reads += delta;
+        } else {
+            self.layer_reads[self.current_layer] += delta;
+        }
+    }
+
+    /// Layer boundary: a global sync (aggregation of layer l+1 consumes
+    /// layer l's combination output), then swap in a unit addressing the
+    /// intermediate region. Counters persist; cache contents are stale
+    /// across the boundary (a different value space) and are cleared.
+    fn advance_layer(&mut self, layer: usize) {
+        self.drain();
+        self.seq_base += self.unit.stats.features_in as usize;
+        merge_stats(&mut self.retired, &self.unit.stats);
+        self.unit_swaps += 1;
+        let seed = self
+            .cfg
+            .seed
+            .wrapping_add(LAYER_SEED_STRIDE.wrapping_mul(self.unit_swaps));
+        self.unit = self.make_unit(layer, seed);
+        self.cache.clear();
+        self.current_layer = layer;
+    }
+
+    /// Base address of the intermediate (write-back) region — a
+    /// row-group-aligned offset in the upper half of the address space.
+    fn inter_base(&self) -> u64 {
+        intermediate_base(self.cfg, &self.dram)
+    }
+
+    fn make_unit(&self, layer: usize, seed: u64) -> LignnUnit {
+        Self::build_unit(self.cfg, &self.dram, layer, seed)
+    }
+
+    /// The one construction site for per-layer units (layer 0 at the raw
+    /// feature base, deeper layers at the intermediate region).
+    fn build_unit(cfg: &SimConfig, dram: &DramModel, layer: usize, seed: u64) -> LignnUnit {
+        let (base, flen_bytes) = if layer == 0 {
+            (cfg.feat_base, cfg.flen_bytes())
+        } else {
+            (intermediate_base(cfg, dram), (cfg.hidden * 4) as u64)
+        };
+        let calc = AddressCalc::new(*dram.mapping(), base, flen_bytes);
+        let criteria = if cfg.channel_balance {
+            Criteria::ChannelBalance
+        } else {
+            Criteria::Any
+        };
+        LignnUnit::new(cfg.variant, calc, cfg.alpha, cfg.range, criteria, seed)
+    }
+
     /// Aggregation write-back: one output feature per vertex, streamed
-    /// sequentially into a disjoint region (regular traffic, high row
-    /// locality).
+    /// sequentially into a disjoint region. Single-layer runs keep the
+    /// legacy `flen`-wide output; multi-layer runs write `hidden`-wide
+    /// intermediates (what the next layer reads back).
     fn write_back(&mut self, n: u32) {
-        let flen_bytes = self.cfg.flen_bytes();
-        let out_base = self.cfg.feat_base + (self.dram.mapping().capacity_bytes() >> 1);
+        let out_bytes = if self.cfg.layers == 1 {
+            self.cfg.flen_bytes()
+        } else {
+            (self.cfg.hidden * 4) as u64
+        };
+        let out_base = self.inter_base();
         let mapping = *self.dram.mapping();
         for v in 0..n as u64 {
-            let addr = out_base + v * flen_bytes;
-            for a in mapping.bursts_for_range(addr, flen_bytes) {
+            let addr = out_base + v * out_bytes;
+            for a in mapping.bursts_for_range(addr, out_bytes) {
                 if let Some(t) = &mut self.trace {
                     t.write(a).expect("trace write");
                 }
@@ -154,12 +474,17 @@ impl<'a> Run<'a> {
     /// §4.3: the dropout mask (1 bit per feature element, stored
     /// continuously like an edge feature) is written back for the backward
     /// pass. Sequential single-bit-per-element traffic — "good locality,
-    /// in contrast to reading the feature data".
+    /// in contrast to reading the feature data". Covers the feature
+    /// instances processed since the previous mask write-back.
     fn write_masks(&mut self) {
         if !self.cfg.mask_writeback || self.cfg.alpha == 0.0 {
             return;
         }
-        let mask_bytes = self.unit.stats.features_in * (self.cfg.flen as u64).div_ceil(8);
+        let total_in = self.retired.features_in + self.unit.stats.features_in;
+        let fresh = total_in - self.mask_mark;
+        self.mask_mark = total_in;
+        let elems = if self.current_layer == 0 { self.cfg.flen } else { self.cfg.hidden };
+        let mask_bytes = fresh * (elems as u64).div_ceil(8);
         let mask_base = self.cfg.feat_base + (self.dram.mapping().capacity_bytes() >> 2);
         let mapping = *self.dram.mapping();
         for a in mapping.bursts_for_range(mask_base, mask_bytes) {
@@ -171,134 +496,41 @@ impl<'a> Run<'a> {
     }
 }
 
-/// Run one full simulation; deterministic in `cfg.seed`.
+/// Drive `engine` through the canonical schedule its config implies:
+/// `epochs × (layers forward + [backward after the last layer] +
+/// write-backs)`.
+fn run_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metrics {
+    let cfg = engine.cfg;
+    for _epoch in 0..cfg.epochs {
+        for layer in 0..cfg.layers {
+            engine.push_phase(Phase::Forward { layer }, graph);
+            if layer + 1 == cfg.layers && cfg.backward {
+                engine.push_phase(Phase::Backward, graph);
+            }
+            engine.drain();
+            engine.push_phase(Phase::WriteBack, graph);
+            engine.push_phase(Phase::MaskWriteBack, graph);
+        }
+    }
+    engine.finish(graph)
+}
+
+/// Run one full simulation; deterministic in `cfg.seed`. Thin
+/// compatibility wrapper over [`SimEngine`] — identical metrics to the
+/// pre-engine driver for single-layer, single-epoch configs.
 pub fn run_sim(cfg: &SimConfig, graph: &CsrGraph) -> Metrics {
-    cfg.validate().expect("invalid SimConfig");
-    let mut run = Run::new(cfg);
+    let mut engine = SimEngine::new(cfg);
+    run_schedule(&mut engine, graph)
+}
 
-    if cfg.variant.uses_merge() {
-        // LG-T / LM: edges pass through the REC merger first (§4.2). The
-        // REC table is bounded like the LGT's CAM (Table 3: 64 rows).
-        // Multi-edge groups (same DRAM row class) issue clustered; the
-        // singleton remainder flows through the engine's normal read path.
-        let calc = *run.unit.calc();
-        // REC CAM sized to the scheduling range (a class per pending edge
-        // in the worst case, capped at 1024 — still a small edge table,
-        // §5.2.4 prices it at ~0.01 mm²).
-        let mut merger = RecMerger::new(calc, cfg.range, cfg.range.min(1024));
-
-        let handle = |run: &mut Run, group: Vec<Edge>| {
-            let clustered = group.len() > 1;
-            for e in group {
-                run.process(e.src, clustered);
-            }
-        };
-        for (dst, src) in graph.edge_iter() {
-            for group in merger.push(Edge { dst, src }) {
-                handle(&mut run, group);
-            }
-        }
-        for group in merger.flush() {
-            handle(&mut run, group);
-        }
-    } else {
-        for (_dst, src) in graph.edge_iter() {
-            run.process(src, false);
-        }
-    }
-
-    // Backward pass (optional): gradient aggregation walks the transposed
-    // edge list, reading intermediate features with the same masked
-    // pattern. LiGNN keeps the forward mask (§4.3) — requests for
-    // already-dropped features never reappear — so the phase runs through
-    // the same unit without fresh dropout decisions (α=0 semantics are
-    // enforced by reusing the same unit whose δ balance persists).
-    if cfg.backward {
-        let transposed = graph.transpose();
-        if cfg.variant.uses_merge() {
-            let calc = *run.unit.calc();
-            let mut merger = RecMerger::new(calc, cfg.range, cfg.range.min(1024));
-            let handle = |run: &mut Run, group: Vec<Edge>| {
-                let clustered = group.len() > 1;
-                for e in group {
-                    run.process(e.src, clustered);
-                }
-            };
-            for (dst, src) in transposed.edge_iter() {
-                for group in merger.push(Edge { dst, src }) {
-                    handle(&mut run, group);
-                }
-            }
-            for group in merger.flush() {
-                handle(&mut run, group);
-            }
-        } else {
-            for (_dst, src) in transposed.edge_iter() {
-                run.process(src, false);
-            }
-        }
-    }
-
-    // Drain LiGNN residue and any in-flight interleaved reads, then the
-    // write-back phase.
-    let mut tail = Vec::new();
-    run.unit.flush(&mut tail);
-    run.out = tail;
-    if let Some(il) = &mut run.interleaver {
-        let mut drained = Vec::new();
-        il.flush(&mut drained);
-        run.out.extend(drained);
-    }
-    run.issue();
-    run.drain_sched();
-    run.write_back(graph.num_vertices() as u32);
-    run.write_masks();
-    if let Some(t) = run.trace.take() {
-        t.finish().expect("flushing trace");
-    }
-    run.dram.flush_sessions();
-
-    // Classify feature instances (hit counted at cache probe).
-    let (mut feat_new, mut feat_merge, mut feat_dropped) = (0u64, 0u64, 0u64);
-    for s in &run.served {
-        match s {
-            Served::Opened => feat_new += 1,
-            Served::Merged => feat_merge += 1,
-            Served::None => feat_dropped += 1,
-        }
-    }
-    // Instances whose bursts were all dropped before any DRAM issue never
-    // made it into `served`.
-    feat_dropped += run.unit.stats.features_in - run.served.len() as u64;
-
-    let engine = EngineParams::default();
-    let mut compute_ns = engine.compute_ns(cfg.model, graph, cfg.flen, cfg.hidden);
-    if cfg.backward {
-        // backward ≈ 2× forward compute (input + weight gradients)
-        compute_ns *= 3.0;
-    }
-    let mem_ns = run.dram.busy_ns();
-
-    let energy = EnergyReport::from_counters(run.dram.config(), &run.dram.counters);
-    Metrics {
-        variant: cfg.variant.name().to_string(),
-        graph: cfg.graph.name().to_string(),
-        model: cfg.model.name().to_string(),
-        dram_standard: cfg.dram.name().to_string(),
-        alpha: cfg.alpha,
-        exec_ns: mem_ns.max(compute_ns),
-        mem_ns,
-        compute_ns,
-        unit: run.unit.stats.clone(),
-        dram: run.dram.counters.clone(),
-        energy,
-        cache_hits: run.cache.hits(),
-        cache_misses: run.cache.misses(),
-        feat_hit: run.feat_hit,
-        feat_new,
-        feat_merge,
-        feat_dropped,
-    }
+/// [`run_sim`] with a caller-owned burst buffer recycled across runs
+/// (the sweep runner's per-worker scratch).
+pub fn run_sim_with_buffer(cfg: &SimConfig, graph: &CsrGraph, buf: &mut Vec<Burst>) -> Metrics {
+    let mut engine = SimEngine::new(cfg);
+    engine.recycle_buffer(buf);
+    let m = run_schedule(&mut engine, graph);
+    engine.reclaim_buffer(buf);
+    m
 }
 
 #[cfg(test)]
@@ -390,7 +622,12 @@ mod tests {
         let s = run_meaningful(Variant::S, 0.5);
         let t = run_meaningful(Variant::T, 0.5);
         let ratio = t.dram.activations as f64 / s.dram.activations as f64;
-        assert!(ratio < 1.05, "LG-T acts {} vs LG-S acts {}", t.dram.activations, s.dram.activations);
+        assert!(
+            ratio < 1.05,
+            "LG-T acts {} vs LG-S acts {}",
+            t.dram.activations,
+            s.dram.activations
+        );
     }
 
     #[test]
@@ -431,7 +668,7 @@ mod tests {
 
     #[test]
     fn backward_pass_adds_traffic_keeps_ratios() {
-        let mut fwd = cfg_meaningful(Variant::T, 0.5);
+        let fwd = cfg_meaningful(Variant::T, 0.5);
         let mut both = cfg_meaningful(Variant::T, 0.5);
         both.backward = true;
         let g = fwd.build_graph();
@@ -439,10 +676,11 @@ mod tests {
         let b = run_sim(&both, &g);
         assert!(b.dram.reads > f.dram.reads, "backward must add reads");
         assert!(b.exec_ns > f.exec_ns);
+        assert!(b.backward_reads > 0, "gradient reads must be attributed");
+        assert_eq!(f.backward_reads, 0);
         // and the variant still drops at the configured rate overall
         let kept = b.unit.bursts_kept as f64 / b.unit.bursts_in as f64;
         assert!((kept - 0.5).abs() < 0.08, "kept {kept}");
-        let _ = (&mut fwd, &mut both);
     }
 
     #[test]
@@ -512,5 +750,128 @@ mod tests {
             m.unit.bursts_in,
             m.unit.bursts_kept + m.unit.bursts_filter_dropped + m.unit.bursts_row_dropped
         );
+    }
+
+    // ------------------------------------------------------------------
+    // SimEngine lifecycle
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn explicit_phase_composition_matches_wrapper() {
+        // Hand-composing the canonical schedule through the public phase
+        // API must equal run_sim exactly — the wrapper adds nothing.
+        for variant in [Variant::A, Variant::T] {
+            let mut c = cfg(variant, 0.5);
+            c.backward = true;
+            let g = c.build_graph();
+            let via_wrapper = run_sim(&c, &g);
+
+            let mut e = SimEngine::new(&c);
+            e.push_phase(Phase::Forward { layer: 0 }, &g);
+            e.push_phase(Phase::Backward, &g);
+            e.drain();
+            e.push_phase(Phase::WriteBack, &g);
+            e.push_phase(Phase::MaskWriteBack, &g);
+            let via_engine = e.finish(&g);
+
+            assert_eq!(via_wrapper.dram.reads, via_engine.dram.reads, "{variant:?}");
+            assert_eq!(via_wrapper.dram.writes, via_engine.dram.writes);
+            assert_eq!(via_wrapper.dram.activations, via_engine.dram.activations);
+            assert_eq!(via_wrapper.exec_ns, via_engine.exec_ns);
+            assert_eq!(via_wrapper.feat_new, via_engine.feat_new);
+            assert_eq!(via_wrapper.feat_merge, via_engine.feat_merge);
+            assert_eq!(via_wrapper.feat_dropped, via_engine.feat_dropped);
+        }
+    }
+
+    #[test]
+    fn buffer_recycling_is_metrics_neutral() {
+        let c = cfg(Variant::T, 0.5);
+        let g = c.build_graph();
+        let plain = run_sim(&c, &g);
+        let mut buf = Vec::with_capacity(1 << 14);
+        let a = run_sim_with_buffer(&c, &g, &mut buf);
+        let cap_after_first = buf.capacity();
+        let b = run_sim_with_buffer(&c, &g, &mut buf);
+        assert!(buf.capacity() >= cap_after_first, "capacity must survive");
+        for m in [&a, &b] {
+            assert_eq!(m.dram.reads, plain.dram.reads);
+            assert_eq!(m.dram.activations, plain.dram.activations);
+            assert_eq!(m.exec_ns, plain.exec_ns);
+        }
+    }
+
+    #[test]
+    fn two_layers_run_and_layer1_dominates() {
+        let mut c = cfg_meaningful(Variant::T, 0.5);
+        c.layers = 2;
+        let g = c.build_graph();
+        let m = run_sim(&c, &g);
+        assert_eq!(m.layer_reads.len(), 2);
+        assert!(m.layer_reads[0] > 0 && m.layer_reads[1] > 0);
+        // flen=256 raw features vs hidden=64 intermediates: the first
+        // aggregation must dominate DRAM reads — the paper's premise,
+        // measured.
+        assert!(
+            m.layer_reads[0] > 2 * m.layer_reads[1],
+            "layer 1 reads {} do not dominate layer 2 reads {}",
+            m.layer_reads[0],
+            m.layer_reads[1]
+        );
+        assert_eq!(
+            m.layer_reads.iter().sum::<u64>() + m.backward_reads,
+            m.dram.reads
+        );
+        assert_eq!(m.backward_reads, 0, "no backward phase in this run");
+        // the classification still partitions all feature instances
+        assert_eq!(
+            m.feat_new + m.feat_merge + m.feat_dropped,
+            m.unit.features_in,
+        );
+        assert_eq!(m.feat_hit, m.cache_hits);
+    }
+
+    #[test]
+    fn second_layer_adds_traffic_over_single() {
+        let one = cfg_meaningful(Variant::S, 0.5);
+        let mut two = one.clone();
+        two.layers = 2;
+        let g = one.build_graph();
+        let m1 = run_sim(&one, &g);
+        let m2 = run_sim(&two, &g);
+        assert!(m2.dram.reads > m1.dram.reads);
+        assert!(m2.unit.features_in > m1.unit.features_in);
+    }
+
+    #[test]
+    fn epochs_scale_traffic_and_compute() {
+        let e1 = cfg(Variant::S, 0.5);
+        let mut e2 = e1.clone();
+        e2.epochs = 2;
+        let g = e1.build_graph();
+        let m1 = run_sim(&e1, &g);
+        let m2 = run_sim(&e2, &g);
+        assert!(m2.dram.writes > m1.dram.writes, "two write-backs expected");
+        assert!(m2.dram.reads > m1.dram.reads);
+        assert!((m2.compute_ns / m1.compute_ns - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_layer_is_deterministic() {
+        let mut c = cfg(Variant::T, 0.5);
+        c.layers = 3;
+        c.backward = true;
+        let g = c.build_graph();
+        let x = run_sim(&c, &g);
+        let y = run_sim(&c, &g);
+        assert_eq!(x.dram.reads, y.dram.reads);
+        assert_eq!(x.layer_reads, y.layer_reads);
+        assert_eq!(x.backward_reads, y.backward_reads);
+        assert_eq!(
+            x.layer_reads.iter().sum::<u64>() + x.backward_reads,
+            x.dram.reads,
+            "every read must land in exactly one bucket"
+        );
+        assert_eq!(x.exec_ns, y.exec_ns);
     }
 }

@@ -39,6 +39,16 @@ pub struct Metrics {
     pub feat_new: u64,
     pub feat_merge: u64,
     pub feat_dropped: u64,
+
+    /// DRAM read bursts attributed to each *forward* aggregation layer
+    /// (summed over epochs). Length equals `cfg.layers`; single-layer
+    /// runs have one entry. Attribution is marked at phase boundaries
+    /// without draining, so up to one scheduling window of in-flight
+    /// bursts may land in the neighbouring bucket.
+    pub layer_reads: Vec<u64>,
+    /// DRAM read bursts attributed to backward (gradient) drives; 0 when
+    /// the run had no backward phase.
+    pub backward_reads: u64,
 }
 
 impl Metrics {
@@ -72,11 +82,36 @@ impl Metrics {
         }
     }
 
+    /// Per-layer share of DRAM read bursts. Same length as
+    /// `layer_reads` (a single-layer run yields `[1.0]`, or `[0.0]`
+    /// when no reads happened); sums to ~1 whenever any reads happened.
+    pub fn layer_read_shares(&self) -> Vec<f64> {
+        let total: u64 = self.layer_reads.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.layer_reads.len()];
+        }
+        self.layer_reads.iter().map(|&r| r as f64 / total as f64).collect()
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
+        let layers = if self.layer_reads.len() > 1 {
+            let mut parts: Vec<String> = self
+                .layer_reads
+                .iter()
+                .enumerate()
+                .map(|(i, r)| format!("L{}={r}", i + 1))
+                .collect();
+            if self.backward_reads > 0 {
+                parts.push(format!("bwd={}", self.backward_reads));
+            }
+            format!(" layer_reads[{}]", parts.join(" "))
+        } else {
+            String::new()
+        };
         format!(
             "{} {} {} {} α={:.1}: exec={:.3}ms mem={:.3}ms compute={:.3}ms \
-             bursts={} acts={} mean_session={:.2} hit/new/merge/drop={}/{}/{}/{}",
+             bursts={} acts={} mean_session={:.2} hit/new/merge/drop={}/{}/{}/{}{layers}",
             self.variant,
             self.graph,
             self.model,
@@ -124,6 +159,8 @@ mod tests {
             feat_new: 20,
             feat_merge: 5,
             feat_dropped: 5,
+            layer_reads: vec![bursts],
+            backward_reads: 0,
         }
     }
 
@@ -142,5 +179,17 @@ mod tests {
         let m = dummy(1000.0, 1, 1);
         let s = m.summary();
         assert!(s.contains("LG-T") && s.contains("GCN") && s.contains("HBM"));
+        assert!(!s.contains("layer_reads"), "single-layer summary stays terse");
+    }
+
+    #[test]
+    fn multi_layer_summary_and_shares() {
+        let mut m = dummy(1000.0, 100, 10);
+        m.layer_reads = vec![80, 20];
+        let s = m.summary();
+        assert!(s.contains("layer_reads[L1=80 L2=20]"), "{s}");
+        let shares = m.layer_read_shares();
+        assert!((shares[0] - 0.8).abs() < 1e-12);
+        assert!((shares[1] - 0.2).abs() < 1e-12);
     }
 }

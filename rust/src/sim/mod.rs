@@ -1,4 +1,4 @@
-//! Simulation engine: drivers, metrics and sweep helpers.
+//! Simulation engine: phase-based driver, metrics and sweep execution.
 
 pub mod driver;
 pub mod frfcfs;
@@ -6,6 +6,6 @@ pub mod metrics;
 pub mod runs;
 pub mod trace;
 
-pub use driver::run_sim;
+pub use driver::{run_sim, run_sim_with_buffer, Phase, SimEngine};
 pub use metrics::Metrics;
-pub use runs::{alpha_sweep, normalized_against_no_dropout};
+pub use runs::{alpha_sweep, normalized_against_no_dropout, SweepPlan, SweepRunner};

@@ -1,10 +1,21 @@
-//! High-level sweep helpers shared by benches, examples and the CLI:
+//! High-level sweep execution shared by benches, examples and the CLI:
 //! every figure is "run a sweep, normalize against the no-dropout run".
+//!
+//! A [`SweepPlan`] is an ordered list of fully-specified sweep points; a
+//! [`SweepRunner`] executes a plan against one shared graph. The runner
+//! owns the cross-point amortization the figures depend on:
+//!
+//! * the graph (and, for backward-enabled points, its transpose) is
+//!   built **once** and shared immutably across all points,
+//! * points run in parallel via [`par_map_init`], each worker recycling
+//!   one burst buffer across every point it executes.
 
 use crate::config::{SimConfig, Variant};
 use crate::graph::CsrGraph;
+use crate::lignn::Burst;
+use crate::util::par::{default_threads, par_map_init};
 
-use super::driver::run_sim;
+use super::driver::{run_sim, run_sim_with_buffer};
 use super::metrics::Metrics;
 
 /// The α grid the paper sweeps (0.0 .. 0.9 in 0.1 steps; α=1 excluded as
@@ -13,44 +24,169 @@ pub fn alpha_grid() -> Vec<f64> {
     (0..10).map(|i| i as f64 / 10.0).collect()
 }
 
+/// An ordered list of sweep points. Results come back in plan order.
+#[derive(Debug, Clone, Default)]
+pub struct SweepPlan {
+    points: Vec<SimConfig>,
+}
+
+impl SweepPlan {
+    pub fn new() -> SweepPlan {
+        SweepPlan { points: Vec::new() }
+    }
+
+    /// One point per α, cloned from `base` (the classic figure sweep).
+    pub fn alphas(base: &SimConfig, alphas: &[f64]) -> SweepPlan {
+        let mut plan = SweepPlan::new();
+        for &alpha in alphas {
+            let mut cfg = base.clone();
+            cfg.alpha = alpha;
+            plan.push(cfg);
+        }
+        plan
+    }
+
+    /// One point per variant, cloned from `base` (ablation rows).
+    pub fn variants(base: &SimConfig, variants: &[Variant]) -> SweepPlan {
+        let mut plan = SweepPlan::new();
+        for &variant in variants {
+            let mut cfg = base.clone();
+            cfg.variant = variant;
+            plan.push(cfg);
+        }
+        plan
+    }
+
+    pub fn push(&mut self, cfg: SimConfig) {
+        self.points.push(cfg);
+    }
+
+    pub fn with_point(mut self, cfg: SimConfig) -> SweepPlan {
+        self.push(cfg);
+        self
+    }
+
+    pub fn points(&self) -> &[SimConfig] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Does any point drive the transposed edge stream?
+    pub fn needs_transpose(&self) -> bool {
+        self.points.iter().any(|c| c.backward)
+    }
+}
+
+/// Executes [`SweepPlan`]s against one shared, immutable graph.
+pub struct SweepRunner<'g> {
+    graph: &'g CsrGraph,
+    threads: usize,
+}
+
+impl<'g> SweepRunner<'g> {
+    pub fn new(graph: &'g CsrGraph) -> SweepRunner<'g> {
+        SweepRunner { graph, threads: default_threads() }
+    }
+
+    /// Cap the worker count (default: physical parallelism − 1).
+    pub fn with_threads(mut self, threads: usize) -> SweepRunner<'g> {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        self.graph
+    }
+
+    /// Execute every point (parallel, plan order preserved). Per-worker
+    /// burst buffers are recycled across the points each worker runs.
+    pub fn run(&self, plan: &SweepPlan) -> Vec<Metrics> {
+        if plan.needs_transpose() {
+            // Populate the shared transpose cache before fanning out so
+            // the whole sweep performs exactly one O(E) transpose (workers
+            // would otherwise serialize on the OnceLock anyway).
+            let _ = self.graph.transposed();
+        }
+        par_map_init(
+            plan.points(),
+            self.threads,
+            Vec::<Burst>::new,
+            |buf, cfg| run_sim_with_buffer(cfg, self.graph, buf),
+        )
+    }
+
+    /// Run `base` for each α in `alphas`.
+    pub fn alpha_sweep(&self, base: &SimConfig, alphas: &[f64]) -> Vec<Metrics> {
+        self.run(&SweepPlan::alphas(base, alphas))
+    }
+
+    /// The non-dropout reference run (α=0, LG-A degenerates to a pure
+    /// pass-through) that Figs 7–14 normalize against.
+    pub fn no_dropout_reference(&self, base: &SimConfig) -> Metrics {
+        let mut cfg = base.clone();
+        cfg.alpha = 0.0;
+        cfg.variant = Variant::A;
+        run_sim(&cfg, self.graph)
+    }
+
+    /// Normalized rows (speedup, access ratio, activation ratio) against
+    /// the no-dropout reference. The reference runs as point 0 of the
+    /// same plan, so it executes concurrently with the α points instead
+    /// of serializing ahead of them.
+    pub fn normalized(&self, base: &SimConfig, alphas: &[f64]) -> (Metrics, Vec<NormalizedRow>) {
+        let mut ref_cfg = base.clone();
+        ref_cfg.alpha = 0.0;
+        ref_cfg.variant = Variant::A;
+        let mut plan = SweepPlan::new();
+        plan.push(ref_cfg);
+        for &alpha in alphas {
+            let mut cfg = base.clone();
+            cfg.alpha = alpha;
+            plan.push(cfg);
+        }
+        let mut results = self.run(&plan);
+        let reference = results.remove(0);
+        let rows = results
+            .into_iter()
+            .map(|m| NormalizedRow {
+                alpha: m.alpha,
+                speedup: m.speedup_vs(&reference),
+                access_ratio: m.access_ratio_vs(&reference),
+                activation_ratio: m.activation_ratio_vs(&reference),
+                desired_ratio: m.desired_ratio_vs(&reference),
+                metrics: m,
+            })
+            .collect();
+        (reference, rows)
+    }
+}
+
 /// Run `base_cfg` for each α in `alphas` (parallel across α).
+/// Compatibility wrapper over [`SweepRunner::alpha_sweep`].
 pub fn alpha_sweep(base_cfg: &SimConfig, graph: &CsrGraph, alphas: &[f64]) -> Vec<Metrics> {
-    crate::util::par::par_map(alphas, crate::util::par::default_threads(), |&alpha| {
-        let mut cfg = base_cfg.clone();
-        cfg.alpha = alpha;
-        run_sim(&cfg, graph)
-    })
+    SweepRunner::new(graph).alpha_sweep(base_cfg, alphas)
 }
 
-/// The non-dropout reference run (α=0, LG-A degenerates to a pure
-/// pass-through) that Figs 7–14 normalize against.
+/// The no-dropout reference (compatibility wrapper).
 pub fn no_dropout_reference(base_cfg: &SimConfig, graph: &CsrGraph) -> Metrics {
-    let mut cfg = base_cfg.clone();
-    cfg.alpha = 0.0;
-    cfg.variant = Variant::A;
-    run_sim(&cfg, graph)
+    SweepRunner::new(graph).no_dropout_reference(base_cfg)
 }
 
-/// Normalized rows (speedup, access ratio, activation ratio) against the
-/// no-dropout reference.
+/// Normalized rows against the no-dropout reference (compatibility
+/// wrapper over [`SweepRunner::normalized`]).
 pub fn normalized_against_no_dropout(
     base_cfg: &SimConfig,
     graph: &CsrGraph,
     alphas: &[f64],
 ) -> (Metrics, Vec<NormalizedRow>) {
-    let reference = no_dropout_reference(base_cfg, graph);
-    let rows = alpha_sweep(base_cfg, graph, alphas)
-        .into_iter()
-        .map(|m| NormalizedRow {
-            alpha: m.alpha,
-            speedup: m.speedup_vs(&reference),
-            access_ratio: m.access_ratio_vs(&reference),
-            activation_ratio: m.activation_ratio_vs(&reference),
-            desired_ratio: m.desired_ratio_vs(&reference),
-            metrics: m,
-        })
-        .collect();
-    (reference, rows)
+    SweepRunner::new(graph).normalized(base_cfg, alphas)
 }
 
 /// One normalized figure row.
@@ -105,5 +241,54 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert!((rows[0].alpha - 0.2).abs() < 1e-12);
         assert!((rows[1].alpha - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heterogeneous_plan_preserves_order() {
+        let cfg = tiny_cfg(Variant::S);
+        let graph = cfg.build_graph();
+        let mut t_cfg = cfg.clone();
+        t_cfg.variant = Variant::T;
+        let plan = SweepPlan::variants(&cfg, &[Variant::A, Variant::B])
+            .with_point(t_cfg);
+        assert_eq!(plan.len(), 3);
+        let rows = SweepRunner::new(&graph).with_threads(3).run(&plan);
+        assert_eq!(rows[0].variant, "LG-A");
+        assert_eq!(rows[1].variant, "LG-B");
+        assert_eq!(rows[2].variant, "LG-T");
+    }
+
+    #[test]
+    fn runner_matches_serial_run_sim() {
+        // Parallel execution with recycled buffers must be bit-identical
+        // to serial run_sim per point.
+        let cfg = tiny_cfg(Variant::T);
+        let graph = cfg.build_graph();
+        let rows = SweepRunner::new(&graph).with_threads(4).alpha_sweep(&cfg, &[0.0, 0.3, 0.6]);
+        for m in &rows {
+            let mut point = cfg.clone();
+            point.alpha = m.alpha;
+            let serial = super::run_sim(&point, &graph);
+            assert_eq!(m.dram.reads, serial.dram.reads, "α={}", m.alpha);
+            assert_eq!(m.dram.activations, serial.dram.activations);
+            assert_eq!(m.exec_ns, serial.exec_ns);
+        }
+    }
+
+    #[test]
+    fn backward_sweep_transposes_exactly_once() {
+        // The acceptance bar for the transpose satellite: a 10-point α
+        // sweep with backward=true performs one O(E) transpose total.
+        let mut cfg = tiny_cfg(Variant::S);
+        cfg.backward = true;
+        let graph = cfg.build_graph();
+        assert_eq!(graph.transpose_count(), 0);
+        let rows = SweepRunner::new(&graph).with_threads(4).alpha_sweep(&cfg, &alpha_grid());
+        assert_eq!(rows.len(), 10);
+        assert_eq!(
+            graph.transpose_count(),
+            1,
+            "backward sweep must share a single transpose"
+        );
     }
 }

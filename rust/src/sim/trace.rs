@@ -14,9 +14,9 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::dram::{DramCounters, DramModel};
+use crate::fail;
+use crate::util::error::{Context, Result};
 
 /// Buffered trace file writer.
 pub struct TraceWriter {
@@ -66,7 +66,7 @@ pub fn replay(path: &Path, mut dram: DramModel) -> Result<(DramCounters, u64)> {
         }
         let (op, addr) = t
             .split_once(' ')
-            .ok_or_else(|| anyhow!("{path:?}:{}: malformed", lineno + 1))?;
+            .ok_or_else(|| fail!("{path:?}:{}: malformed", lineno + 1))?;
         let addr = u64::from_str_radix(addr.trim(), 16)
             .with_context(|| format!("{path:?}:{}", lineno + 1))?;
         match op {
@@ -76,7 +76,7 @@ pub fn replay(path: &Path, mut dram: DramModel) -> Result<(DramCounters, u64)> {
             "W" => {
                 dram.write_burst(addr, 0);
             }
-            other => return Err(anyhow!("{path:?}:{}: bad op `{other}`", lineno + 1)),
+            other => return Err(fail!("{path:?}:{}: bad op `{other}`", lineno + 1)),
         }
     }
     dram.flush_sessions();

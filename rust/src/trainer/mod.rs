@@ -12,7 +12,8 @@ pub mod data;
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::fail;
+use crate::util::error::Result;
 
 use crate::dram::{AddressMapping, DramStandardKind};
 use crate::dropout::{Granularity, MaskGen};
@@ -103,7 +104,7 @@ pub fn train(dir: &Path, cfg: &TrainConfig, ds: &Dataset) -> Result<TrainResult>
     let mut rt = Runtime::open(dir)?;
     let consts = rt.manifest().constants.clone();
     if ds.n != consts.n_nodes || ds.f != consts.n_features || ds.c != consts.n_classes {
-        return Err(anyhow!(
+        return Err(fail!(
             "dataset ({}, {}, {}) does not match artifacts ({}, {}, {})",
             ds.n, ds.f, ds.c, consts.n_nodes, consts.n_features, consts.n_classes
         ));
@@ -147,14 +148,14 @@ pub fn train(dir: &Path, cfg: &TrainConfig, ds: &Dataset) -> Result<TrainResult>
 
         let out = rt.execute(&cfg.model, "train_step", &inputs)?;
         if out.len() != n_params + 1 {
-            return Err(anyhow!("train_step returned {} outputs", out.len()));
+            return Err(fail!("train_step returned {} outputs", out.len()));
         }
         for (i, lit) in out[..n_params].iter().enumerate() {
             params[i] = to_vec_f32(lit)?;
         }
         let loss = to_vec_f32(&out[n_params])?[0];
         if !loss.is_finite() {
-            return Err(anyhow!("loss diverged at epoch {epoch}: {loss}"));
+            return Err(fail!("loss diverged at epoch {epoch}: {loss}"));
         }
         losses.push(loss);
     }

@@ -1,0 +1,121 @@
+//! Minimal error type — the `anyhow` stand-in for the dependency-free
+//! core (the offline build carries no ecosystem crates; see `util`'s
+//! module docs). API mirrors the `anyhow` subset the crate used:
+//! `Error::msg`, a defaulted `Result` alias, and a `Context` extension
+//! trait for `Result`/`Option`.
+
+use std::fmt;
+
+/// String-backed error. Construction is always through [`Error::msg`] or
+/// a `From` conversion, so call sites read like their `anyhow`
+/// equivalents.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable (`anyhow::Error::msg`).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` with [`Error`] as the default error type (like
+/// `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension (the `anyhow::Context` subset in use).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Format an [`Error`] in place — the `anyhow!` stand-in.
+#[macro_export]
+macro_rules! fail {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrip() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        let e: Error = "again".into();
+        assert_eq!(e.to_string(), "again");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let o = Some(7u32);
+        assert_eq!(o.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn fail_macro_formats() {
+        let e = crate::fail!("bad value {}", 3);
+        assert_eq!(e.to_string(), "bad value 3");
+    }
+}

@@ -8,11 +8,13 @@
 //! * [`rng`]  — PCG64-class deterministic RNG (splitmix-seeded xoshiro256**),
 //! * [`json`] — minimal JSON parse/serialize (manifest + results I/O),
 //! * [`par`]  — scoped-thread parallel map,
+//! * [`error`] — string-backed error + context trait (the anyhow subset),
 //! * [`benchkit`] — timing harness for `cargo bench` targets,
 //! * [`cli`]  — tiny flag parser for the launcher.
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod par;
 pub mod rng;

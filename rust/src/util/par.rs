@@ -1,4 +1,21 @@
 //! Scoped-thread parallel map (the rayon stand-in the sweeps use).
+//!
+//! Results land in a lock-free slot array: each index is claimed by
+//! exactly one worker through an atomic cursor, so the per-item writes
+//! need no mutex (the old implementation serialized every result store
+//! behind a `Mutex<&mut Vec<Option<U>>>`).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One output slot. Safety argument for the `Sync` impl: the atomic
+/// cursor hands every index to exactly one worker, so each slot is
+/// written once by one thread with no aliasing, and the main thread only
+/// reads after `thread::scope` has joined every worker (a happens-before
+/// edge for all slot writes).
+struct Slot<U>(UnsafeCell<Option<U>>);
+
+unsafe impl<U: Send> Sync for Slot<U> {}
 
 /// Map `f` over `items` with up to `threads` worker threads, preserving
 /// input order in the output.
@@ -8,33 +25,52 @@ where
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
+    par_map_init(items, threads, || (), |_scratch, item| f(item))
+}
+
+/// [`par_map`] with per-worker scratch state: `init` runs once per worker
+/// thread and the resulting value is threaded through every item that
+/// worker processes. Sweeps use this to recycle burst buffers across
+/// sweep points instead of growing a fresh allocation per run.
+pub fn par_map_init<T, U, S, I, F>(items: &[T], threads: usize, init: I, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> U + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        return items.iter().map(&f).collect();
+        let mut scratch = init();
+        return items.iter().map(|item| f(&mut scratch, item)).collect();
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
-    let slots_ptr = std::sync::Mutex::new(&mut slots);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Slot<U>> = (0..n).map(|_| Slot(UnsafeCell::new(None))).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut scratch, &items[i]);
+                    // SAFETY: `i` came from the shared cursor, so this
+                    // thread is the only writer of slot `i`; see `Slot`.
+                    unsafe { *slots[i].0.get() = Some(v) };
                 }
-                let v = f(&items[i]);
-                // Each index is written exactly once; the mutex only guards
-                // the &mut aliasing, contention is negligible vs f().
-                let mut guard = slots_ptr.lock().unwrap();
-                guard[i] = Some(v);
             });
         }
     });
-    slots.into_iter().map(|s| s.expect("all slots filled")).collect()
+    slots
+        .into_iter()
+        .map(|s| s.0.into_inner().expect("all slots filled"))
+        .collect()
 }
 
 /// Default worker count: physical parallelism minus one, at least 1.
@@ -69,5 +105,51 @@ mod tests {
     fn more_threads_than_items() {
         let out = par_map(&[5], 16, |&x| x);
         assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn order_preserved_under_threads_exceeding_items() {
+        // Later items finish first (reversed sleep), and far more workers
+        // than items contend on the cursor: output must still be in input
+        // order.
+        let items: Vec<u64> = (0..6).collect();
+        let out = par_map(&items, 64, |&x| {
+            std::thread::sleep(std::time::Duration::from_millis((6 - x) * 5));
+            x * 3
+        });
+        assert_eq!(out, vec![0, 3, 6, 9, 12, 15]);
+    }
+
+    #[test]
+    fn scratch_persists_within_worker() {
+        // Each worker's scratch counts the items it processed; the value
+        // recorded per item is that worker's running count, so every item
+        // gets a count ≥ 1 and the per-worker counts are consistent with a
+        // partition of the input.
+        let items: Vec<u32> = (0..64).collect();
+        let out = par_map_init(
+            &items,
+            4,
+            || 0u32,
+            |count, _item| {
+                *count += 1;
+                *count
+            },
+        );
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|&c| c >= 1));
+        // The number of "1" entries equals the number of workers that did
+        // any work — at most 4.
+        let firsts = out.iter().filter(|&&c| c == 1).count();
+        assert!((1..=4).contains(&firsts), "worker count {firsts}");
+    }
+
+    #[test]
+    fn scratch_single_thread() {
+        let out = par_map_init(&[10u32, 20, 30], 1, || 0u32, |acc, &x| {
+            *acc += x;
+            *acc
+        });
+        assert_eq!(out, vec![10, 30, 60]);
     }
 }

@@ -1,0 +1,383 @@
+//! Golden parity: the phase-based `SimEngine` must reproduce the
+//! pre-refactor monolithic driver *exactly* — every counter, every
+//! nanosecond — for every variant across dropout rates.
+//!
+//! The oracle below is the seed `run_sim` ported verbatim onto the
+//! crate's public API (trace capture elided — the parity configs never
+//! enable it). It intentionally keeps the original four near-identical
+//! edge loops and the per-run `graph.transpose()`; the production
+//! engine replaced both, and this test pins that the replacement is
+//! behaviour-preserving.
+
+use lignn::accel::{EngineParams, Interleaver};
+use lignn::cache::LruCache;
+use lignn::config::{GraphPreset, SimConfig, Variant};
+use lignn::dram::energy::EnergyReport;
+use lignn::dram::DramModel;
+use lignn::graph::CsrGraph;
+use lignn::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger};
+use lignn::sim::frfcfs::{FrFcfs, DEFAULT_DEPTH};
+use lignn::sim::run_sim;
+use lignn::Metrics;
+
+mod legacy {
+    use super::*;
+
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Served {
+        None,
+        Merged,
+        Opened,
+    }
+
+    struct Run<'a> {
+        cfg: &'a SimConfig,
+        dram: DramModel,
+        cache: LruCache,
+        unit: LignnUnit,
+        interleaver: Option<Interleaver>,
+        sched: FrFcfs,
+        out: Vec<Burst>,
+        served: Vec<Served>,
+        feat_hit: u64,
+    }
+
+    impl<'a> Run<'a> {
+        fn new(cfg: &'a SimConfig) -> Run<'a> {
+            let dram = DramModel::new(cfg.dram.config());
+            let sched = FrFcfs::new(dram.config().channels, DEFAULT_DEPTH);
+            let calc = AddressCalc::new(*dram.mapping(), cfg.feat_base, cfg.flen_bytes());
+            let criteria = if cfg.channel_balance {
+                Criteria::ChannelBalance
+            } else {
+                Criteria::Any
+            };
+            let unit =
+                LignnUnit::new(cfg.variant, calc, cfg.alpha, cfg.range, criteria, cfg.seed);
+            Run {
+                cfg,
+                dram,
+                cache: LruCache::new(cfg.capacity),
+                unit,
+                interleaver: cfg.variant.interleaves().then(|| Interleaver::new(cfg.access)),
+                sched,
+                out: Vec::with_capacity(8192),
+                served: Vec::new(),
+                feat_hit: 0,
+            }
+        }
+
+        fn process(&mut self, src: u32, clustered: bool) {
+            if self.cache.access(src) {
+                self.feat_hit += 1;
+                return;
+            }
+            match &mut self.interleaver {
+                Some(_) if !clustered => {
+                    let mut feature =
+                        Vec::with_capacity(self.unit.calc().bursts_per_feature() as usize);
+                    self.unit.push_feature(src, &mut feature);
+                    let il = self.interleaver.as_mut().expect("interleaver present");
+                    il.push(feature, &mut self.out);
+                }
+                _ => {
+                    self.unit.push_feature(src, &mut self.out);
+                }
+            }
+            self.issue();
+        }
+
+        fn issue(&mut self) {
+            let served = &mut self.served;
+            let mut sink = |seq: u32, activated: bool| {
+                let idx = seq as usize - 1;
+                if idx >= served.len() {
+                    served.resize(idx + 1, Served::None);
+                }
+                if activated {
+                    served[idx] = Served::Opened;
+                } else if served[idx] == Served::None {
+                    served[idx] = Served::Merged;
+                }
+            };
+            for b in self.out.drain(..) {
+                self.sched.push(b, &mut self.dram, &mut sink);
+            }
+        }
+
+        fn drain_sched(&mut self) {
+            let served = &mut self.served;
+            let mut sink = |seq: u32, activated: bool| {
+                let idx = seq as usize - 1;
+                if idx >= served.len() {
+                    served.resize(idx + 1, Served::None);
+                }
+                if activated {
+                    served[idx] = Served::Opened;
+                } else if served[idx] == Served::None {
+                    served[idx] = Served::Merged;
+                }
+            };
+            self.sched.flush(&mut self.dram, &mut sink);
+        }
+
+        fn write_back(&mut self, n: u32) {
+            let flen_bytes = self.cfg.flen_bytes();
+            let out_base = self.cfg.feat_base + (self.dram.mapping().capacity_bytes() >> 1);
+            let mapping = *self.dram.mapping();
+            for v in 0..n as u64 {
+                let addr = out_base + v * flen_bytes;
+                for a in mapping.bursts_for_range(addr, flen_bytes) {
+                    self.dram.write_burst(a, 0);
+                }
+            }
+        }
+
+        fn write_masks(&mut self) {
+            if !self.cfg.mask_writeback || self.cfg.alpha == 0.0 {
+                return;
+            }
+            let mask_bytes = self.unit.stats.features_in * (self.cfg.flen as u64).div_ceil(8);
+            let mask_base = self.cfg.feat_base + (self.dram.mapping().capacity_bytes() >> 2);
+            let mapping = *self.dram.mapping();
+            for a in mapping.bursts_for_range(mask_base, mask_bytes) {
+                self.dram.write_burst(a, 0);
+            }
+        }
+    }
+
+    /// The seed driver, verbatim (modulo trace capture).
+    pub fn run_sim(cfg: &SimConfig, graph: &CsrGraph) -> Metrics {
+        cfg.validate().expect("invalid SimConfig");
+        let mut run = Run::new(cfg);
+
+        if cfg.variant.uses_merge() {
+            let calc = *run.unit.calc();
+            let mut merger = RecMerger::new(calc, cfg.range, cfg.range.min(1024));
+
+            let handle = |run: &mut Run, group: Vec<Edge>| {
+                let clustered = group.len() > 1;
+                for e in group {
+                    run.process(e.src, clustered);
+                }
+            };
+            for (dst, src) in graph.edge_iter() {
+                for group in merger.push(Edge { dst, src }) {
+                    handle(&mut run, group);
+                }
+            }
+            for group in merger.flush() {
+                handle(&mut run, group);
+            }
+        } else {
+            for (_dst, src) in graph.edge_iter() {
+                run.process(src, false);
+            }
+        }
+
+        // Forward/backward read-attribution boundary (same stream point
+        // the engine marks at `Phase::Backward`).
+        let fwd_reads = run.dram.counters.reads;
+        if cfg.backward {
+            let transposed = graph.transpose();
+            if cfg.variant.uses_merge() {
+                let calc = *run.unit.calc();
+                let mut merger = RecMerger::new(calc, cfg.range, cfg.range.min(1024));
+                let handle = |run: &mut Run, group: Vec<Edge>| {
+                    let clustered = group.len() > 1;
+                    for e in group {
+                        run.process(e.src, clustered);
+                    }
+                };
+                for (dst, src) in transposed.edge_iter() {
+                    for group in merger.push(Edge { dst, src }) {
+                        handle(&mut run, group);
+                    }
+                }
+                for group in merger.flush() {
+                    handle(&mut run, group);
+                }
+            } else {
+                for (_dst, src) in transposed.edge_iter() {
+                    run.process(src, false);
+                }
+            }
+        }
+
+        let mut tail = Vec::new();
+        run.unit.flush(&mut tail);
+        run.out = tail;
+        if let Some(il) = &mut run.interleaver {
+            let mut drained = Vec::new();
+            il.flush(&mut drained);
+            run.out.extend(drained);
+        }
+        run.issue();
+        run.drain_sched();
+        run.write_back(graph.num_vertices() as u32);
+        run.write_masks();
+        run.dram.flush_sessions();
+
+        let (mut feat_new, mut feat_merge, mut feat_dropped) = (0u64, 0u64, 0u64);
+        for s in &run.served {
+            match s {
+                Served::Opened => feat_new += 1,
+                Served::Merged => feat_merge += 1,
+                Served::None => feat_dropped += 1,
+            }
+        }
+        feat_dropped += run.unit.stats.features_in - run.served.len() as u64;
+
+        let engine = EngineParams::default();
+        let mut compute_ns = engine.compute_ns(cfg.model, graph, cfg.flen, cfg.hidden);
+        if cfg.backward {
+            compute_ns *= 3.0;
+        }
+        let mem_ns = run.dram.busy_ns();
+
+        let energy = EnergyReport::from_counters(run.dram.config(), &run.dram.counters);
+        Metrics {
+            variant: cfg.variant.name().to_string(),
+            graph: cfg.graph.name().to_string(),
+            model: cfg.model.name().to_string(),
+            dram_standard: cfg.dram.name().to_string(),
+            alpha: cfg.alpha,
+            exec_ns: mem_ns.max(compute_ns),
+            mem_ns,
+            compute_ns,
+            unit: run.unit.stats.clone(),
+            dram: run.dram.counters.clone(),
+            energy,
+            cache_hits: run.cache.hits(),
+            cache_misses: run.cache.misses(),
+            feat_hit: run.feat_hit,
+            feat_new,
+            feat_merge,
+            feat_dropped,
+            // Forward-only runs credit everything (including the final
+            // drain's residue) to the single forward layer, mirroring the
+            // engine's drain-then-credit order; backward runs split at
+            // the same pre-drain stream point the engine marks.
+            layer_reads: if cfg.backward {
+                vec![fwd_reads]
+            } else {
+                vec![run.dram.counters.reads]
+            },
+            backward_reads: if cfg.backward {
+                run.dram.counters.reads - fwd_reads
+            } else {
+                0
+            },
+        }
+    }
+}
+
+fn tiny_cfg(variant: Variant, alpha: f64) -> SimConfig {
+    SimConfig {
+        graph: GraphPreset::Tiny,
+        variant,
+        alpha,
+        flen: 64,
+        capacity: 256,
+        access: 64,
+        range: 64,
+        ..Default::default()
+    }
+}
+
+/// Field-by-field equality, bit-exact for the float fields.
+fn assert_metrics_identical(new: &Metrics, gold: &Metrics, label: &str) {
+    assert_eq!(new.variant, gold.variant, "{label}: variant");
+    assert_eq!(new.alpha.to_bits(), gold.alpha.to_bits(), "{label}: alpha");
+    assert_eq!(new.exec_ns.to_bits(), gold.exec_ns.to_bits(), "{label}: exec_ns");
+    assert_eq!(new.mem_ns.to_bits(), gold.mem_ns.to_bits(), "{label}: mem_ns");
+    assert_eq!(
+        new.compute_ns.to_bits(),
+        gold.compute_ns.to_bits(),
+        "{label}: compute_ns"
+    );
+
+    assert_eq!(new.unit.features_in, gold.unit.features_in, "{label}: features_in");
+    assert_eq!(new.unit.total_elems, gold.unit.total_elems, "{label}: total_elems");
+    assert_eq!(new.unit.desired_elems, gold.unit.desired_elems, "{label}: desired_elems");
+    assert_eq!(new.unit.bursts_in, gold.unit.bursts_in, "{label}: bursts_in");
+    assert_eq!(
+        new.unit.bursts_filter_dropped,
+        gold.unit.bursts_filter_dropped,
+        "{label}: bursts_filter_dropped"
+    );
+    assert_eq!(
+        new.unit.bursts_row_dropped,
+        gold.unit.bursts_row_dropped,
+        "{label}: bursts_row_dropped"
+    );
+    assert_eq!(new.unit.bursts_kept, gold.unit.bursts_kept, "{label}: bursts_kept");
+
+    assert_eq!(new.dram.reads, gold.dram.reads, "{label}: reads");
+    assert_eq!(new.dram.writes, gold.dram.writes, "{label}: writes");
+    assert_eq!(new.dram.activations, gold.dram.activations, "{label}: activations");
+    assert_eq!(new.dram.row_hits, gold.dram.row_hits, "{label}: row_hits");
+    assert_eq!(new.dram.row_conflicts, gold.dram.row_conflicts, "{label}: row_conflicts");
+    assert_eq!(new.dram.row_closed, gold.dram.row_closed, "{label}: row_closed");
+    assert_eq!(new.dram.refreshes, gold.dram.refreshes, "{label}: refreshes");
+    assert_eq!(new.dram.session_hist, gold.dram.session_hist, "{label}: session_hist");
+    assert_eq!(
+        new.dram.energy_pj.to_bits(),
+        gold.dram.energy_pj.to_bits(),
+        "{label}: dram energy"
+    );
+
+    assert_eq!(
+        new.energy.total_pj.to_bits(),
+        gold.energy.total_pj.to_bits(),
+        "{label}: energy"
+    );
+    assert_eq!(new.cache_hits, gold.cache_hits, "{label}: cache_hits");
+    assert_eq!(new.cache_misses, gold.cache_misses, "{label}: cache_misses");
+    assert_eq!(new.feat_hit, gold.feat_hit, "{label}: feat_hit");
+    assert_eq!(new.feat_new, gold.feat_new, "{label}: feat_new");
+    assert_eq!(new.feat_merge, gold.feat_merge, "{label}: feat_merge");
+    assert_eq!(new.feat_dropped, gold.feat_dropped, "{label}: feat_dropped");
+    assert_eq!(new.layer_reads, gold.layer_reads, "{label}: layer_reads");
+    assert_eq!(new.backward_reads, gold.backward_reads, "{label}: backward_reads");
+}
+
+#[test]
+fn engine_matches_legacy_for_all_variants_and_alphas() {
+    // The full Table-3 matrix plus the merge-only LM configuration, at
+    // α ∈ {0.0, 0.5}, forward-only (the paper's measurement).
+    for variant in [Variant::A, Variant::B, Variant::R, Variant::S, Variant::T, Variant::M] {
+        for alpha in [0.0, 0.5] {
+            let cfg = tiny_cfg(variant, alpha);
+            let graph = cfg.build_graph();
+            let gold = legacy::run_sim(&cfg, &graph);
+            let new = run_sim(&cfg, &graph);
+            assert_metrics_identical(&new, &gold, &format!("{variant:?} α={alpha}"));
+        }
+    }
+}
+
+#[test]
+fn engine_matches_legacy_with_backward() {
+    for variant in [Variant::A, Variant::T] {
+        let mut cfg = tiny_cfg(variant, 0.5);
+        cfg.backward = true;
+        let graph = cfg.build_graph();
+        let gold = legacy::run_sim(&cfg, &graph);
+        let new = run_sim(&cfg, &graph);
+        assert_metrics_identical(&new, &gold, &format!("{variant:?} backward"));
+    }
+}
+
+#[test]
+fn explicit_layers_one_equals_legacy() {
+    // `layers = 1` spelled out must be the legacy single-layer result,
+    // not merely the default path.
+    let mut cfg = tiny_cfg(Variant::T, 0.5);
+    cfg.layers = 1;
+    cfg.epochs = 1;
+    let graph = cfg.build_graph();
+    let gold = legacy::run_sim(&cfg, &graph);
+    let new = run_sim(&cfg, &graph);
+    assert_metrics_identical(&new, &gold, "layers=1");
+}

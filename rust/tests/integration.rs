@@ -2,13 +2,12 @@
 //! the paper's qualitative orderings, and (when artifacts exist) the full
 //! PJRT training path.
 
-use std::path::{Path, PathBuf};
-
 use lignn::analytic::AlgoDropoutModel;
 use lignn::config::{GnnModel, GraphPreset, SimConfig, Variant};
 use lignn::dram::DramStandardKind;
 use lignn::sim::runs::{alpha_sweep, no_dropout_reference};
 use lignn::sim::run_sim;
+#[cfg(feature = "pjrt")]
 use lignn::trainer::{train, Dataset, MaskKind, TrainConfig};
 use lignn::Metrics;
 
@@ -139,14 +138,16 @@ fn energy_tracks_activations() {
 }
 
 // ---------------------------------------------------------------------
-// PJRT training path (requires `make artifacts`)
+// PJRT training path (requires the `pjrt` feature + `make artifacts`)
 // ---------------------------------------------------------------------
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+#[cfg(feature = "pjrt")]
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn training_loss_decreases_all_models() {
     let Some(dir) = artifacts() else {
@@ -172,6 +173,7 @@ fn training_loss_decreases_all_models() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn burst_and_row_dropout_keep_accuracy() {
     // Table 5's claim at reduced scale: α=0.5 burst/row dropout stays
@@ -193,6 +195,7 @@ fn burst_and_row_dropout_keep_accuracy() {
     assert!(row > base - 0.10, "row dropout hurt: {base} -> {row}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn training_is_deterministic() {
     let Some(dir) = artifacts() else {
