@@ -1,0 +1,100 @@
+//! Mini-batch sampling study: does locality-aware dropout still win once
+//! the epoch stream is itself a sampled subgraph — and how much DRAM
+//! locality does the sampler alone buy?
+//!
+//! Two sweeps on the main evaluation graph:
+//!
+//! * sampler axis (full / neighbor / locality at fanout 10) × variant
+//!   {LG-A, LG-T} — the GNNear-style full-batch-vs-sampled ablation;
+//! * fanout axis (4 / 8 / 16 / 32) for neighbor vs locality — the
+//!   activation gap as the per-vertex budget grows.
+
+mod common;
+
+use lignn::config::{SamplerKind, SamplingPreset, SimConfig, Variant};
+use lignn::sim::{SweepPlan, SweepRunner};
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    let base = SimConfig { graph: common::main_graph(), ..Default::default() };
+    let graph = base.build_graph();
+    let runner = SweepRunner::new(&graph);
+    let mut json_rows = Vec::new();
+
+    // Sampler axis at the GraphSAGE fanout.
+    for variant in [Variant::A, Variant::T] {
+        let mut cfg = base.clone();
+        cfg.variant = variant;
+        cfg.fanout = SamplingPreset::SAGE_10.fanout;
+        let plan = SweepPlan::samplers(&cfg, &SamplerKind::ALL);
+        let results = runner.run(&plan);
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|m| {
+                vec![
+                    m.sampler.clone(),
+                    format!("{}", m.sampled_edges),
+                    format!("{}", m.dram.reads),
+                    format!("{}", m.dram.activations),
+                    format!("{:.3}", m.reads_per_sampled_edge()),
+                    format!("{:.3}", m.exec_ns / 1e6),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!(
+                "sampling — {} on {} α={:.1}, fanout {}",
+                cfg.variant.name(),
+                cfg.graph.name(),
+                cfg.alpha,
+                cfg.fanout
+            ),
+            &["sampler", "edges", "reads", "acts", "reads/edge", "exec ms"],
+            &rows,
+        );
+        for m in &results {
+            json_rows.push(Json::obj(vec![
+                ("variant", Json::str(m.variant.clone())),
+                ("sampler", Json::str(m.sampler.clone())),
+                ("sampled_edges", Json::num(m.sampled_edges as f64)),
+                ("reads", Json::num(m.dram.reads as f64)),
+                ("activations", Json::num(m.dram.activations as f64)),
+                ("exec_ns", Json::num(m.exec_ns)),
+            ]));
+        }
+    }
+
+    // Fanout axis: the locality gap vs uniform sampling.
+    let fanouts: &[usize] = if common::fast_mode() { &[8, 16] } else { &[4, 8, 16, 32] };
+    let mut gap_rows = Vec::new();
+    for &fanout in fanouts {
+        let mut cfg = base.clone();
+        cfg.variant = Variant::T;
+        let uni = runner
+            .run(&SweepPlan::fanouts(&cfg, SamplerKind::Neighbor, &[fanout]))
+            .remove(0);
+        let loc = runner
+            .run(&SweepPlan::fanouts(&cfg, SamplerKind::Locality, &[fanout]))
+            .remove(0);
+        gap_rows.push(vec![
+            format!("{fanout}"),
+            format!("{}", uni.dram.activations),
+            format!("{}", loc.dram.activations),
+            format!("{:.3}", loc.dram.activations as f64 / uni.dram.activations.max(1) as f64),
+            format!("{:.3}", loc.exec_ns / uni.exec_ns),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("fanout", Json::num(fanout as f64)),
+            ("neighbor_acts", Json::num(uni.dram.activations as f64)),
+            ("locality_acts", Json::num(loc.dram.activations as f64)),
+        ]));
+    }
+    print_table(
+        &format!("locality vs neighbor sampling — LG-T on {}", base.graph.name()),
+        &["fanout", "neighbor acts", "locality acts", "act ratio", "exec ratio"],
+        &gap_rows,
+    );
+
+    common::write_result("sampling_locality", &Json::Arr(json_rows));
+}

@@ -3,11 +3,14 @@
 
 mod presets;
 
-pub use presets::{GraphPreset, SchedulePreset, WorkloadPreset};
+pub use presets::{GraphPreset, SamplingPreset, SchedulePreset, WorkloadPreset};
 
+pub use crate::sample::SamplerKind;
 
 use crate::dram::standard::DramStandardKind;
+use crate::dram::AddressMapping;
 use crate::graph::CsrGraph;
+use crate::sample::{FullBatch, LocalitySampler, NeighborSampler, Sampler};
 
 /// LiGNN variant (Table 3 of the paper).
 ///
@@ -167,6 +170,14 @@ pub struct SimConfig {
     /// Training epochs simulated back-to-back (≥ 1). Each epoch repeats
     /// the full layer schedule (plus the optional backward phase).
     pub epochs: usize,
+    /// Mini-batch sampling policy: each epoch drives the subgraph the
+    /// sampler produces for that epoch index (`Full` = today's unsampled
+    /// driver, bit-for-bit).
+    pub sampler: SamplerKind,
+    /// Per-vertex neighbor budget for the sampled policies
+    /// (`usize::MAX` = unbounded, which degenerates to `Full`; ignored
+    /// by the `Full` sampler).
+    pub fanout: usize,
     /// Keep-side criteria `C` for Algorithm 2 (`any` | `channel-balance`).
     pub channel_balance: bool,
     /// Model §4.3's dropout-mask write-back (1 bit/element, sequential,
@@ -201,6 +212,8 @@ impl Default for SimConfig {
             hidden: 64,
             layers: 1,
             epochs: 1,
+            sampler: SamplerKind::Full,
+            fanout: usize::MAX,
             channel_balance: false,
             mask_writeback: true,
             backward: false,
@@ -222,6 +235,40 @@ impl SimConfig {
         (self.flen * 4) as u64
     }
 
+    /// Instantiate this run's sampling policy. The locality sampler's
+    /// row-group geometry comes from the run's actual DRAM mapping and
+    /// feature size, so "same row group" in the sampler is exactly "same
+    /// row buffer" in the simulated device.
+    pub fn build_sampler(&self) -> Box<dyn Sampler> {
+        // Decorrelates the sampling stream from the dropout streams
+        // (both derive from `cfg.seed`).
+        const SAMPLE_SEED_SALT: u64 = 0x53_414D_504C_4521; // "SAMPLE!"
+        let seed = self.seed ^ SAMPLE_SEED_SALT;
+        match self.sampler {
+            SamplerKind::Full => Box::new(FullBatch),
+            SamplerKind::Neighbor => Box::new(NeighborSampler::new(self.fanout, seed)),
+            SamplerKind::Locality => {
+                let mapping = AddressMapping::new(&self.dram.config());
+                Box::new(LocalitySampler::for_mapping(
+                    self.fanout,
+                    &mapping,
+                    self.flen_bytes(),
+                    seed,
+                ))
+            }
+        }
+    }
+
+    /// Metric-row label for the sampling policy (`full`, `neighbor@10`,
+    /// `locality@inf`, …).
+    pub fn sampler_label(&self) -> String {
+        match self.sampler {
+            SamplerKind::Full => "full".to_string(),
+            kind if self.fanout == usize::MAX => format!("{}@inf", kind.name()),
+            kind => format!("{}@{}", kind.name(), self.fanout),
+        }
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if !(0.0..1.0).contains(&self.alpha) {
             return Err(format!("alpha must be in [0,1), got {}", self.alpha));
@@ -241,6 +288,12 @@ impl SimConfig {
                 self.layers, self.epochs
             ));
         }
+        if self.sampler != SamplerKind::Full && self.fanout == 0 {
+            return Err(format!(
+                "{} sampling needs fanout ≥ 1 (0 samples nothing)",
+                self.sampler.name()
+            ));
+        }
         if self.layers > 1 {
             if !self.hidden.is_power_of_two() {
                 return Err(format!(
@@ -248,9 +301,11 @@ impl SimConfig {
                     self.hidden
                 ));
             }
-            // The intermediate region sits at feat_base + capacity/2; it
-            // is row-group aligned only when feat_base itself is, so
-            // reject here rather than panic inside the engine.
+            // The double-buffered intermediate regions sit at
+            // feat_base + cap/2 and feat_base + 3·cap/4; both offsets
+            // are row-group multiples for any power-of-two capacity, so
+            // alignment reduces to feat_base itself being row-group
+            // aligned — reject here rather than panic inside the engine.
             let group = crate::dram::AddressMapping::new(&self.dram.config()).row_group_bytes();
             if self.feat_base % group != 0 {
                 return Err(format!(
@@ -331,6 +386,40 @@ mod tests {
         assert!(c.validate().is_err());
         c.layers = 1;
         assert!(c.validate().is_ok(), "single-layer runs never read by hidden");
+    }
+
+    #[test]
+    fn validate_sampler_fanout() {
+        let mut c = SimConfig::default();
+        c.fanout = 0;
+        assert!(c.validate().is_ok(), "Full ignores fanout");
+        c.sampler = SamplerKind::Neighbor;
+        assert!(c.validate().is_err());
+        c.fanout = 10;
+        assert!(c.validate().is_ok());
+        c.sampler = SamplerKind::Locality;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sampler_labels() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.sampler_label(), "full");
+        c.sampler = SamplerKind::Neighbor;
+        assert_eq!(c.sampler_label(), "neighbor@inf");
+        c.fanout = 10;
+        assert_eq!(c.sampler_label(), "neighbor@10");
+        c.sampler = SamplerKind::Locality;
+        assert_eq!(c.sampler_label(), "locality@10");
+    }
+
+    #[test]
+    fn build_sampler_matches_kind() {
+        let mut c = SimConfig::default();
+        for kind in SamplerKind::ALL {
+            c.sampler = kind;
+            assert_eq!(c.build_sampler().name(), kind.name());
+        }
     }
 
     #[test]

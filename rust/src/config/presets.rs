@@ -148,6 +148,33 @@ impl SchedulePreset {
     }
 }
 
+/// Mini-batch sampling presets for the `sample` subsystem knobs
+/// (`sampler` / `fanout`).
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingPreset {
+    pub sampler: crate::sample::SamplerKind,
+    pub fanout: usize,
+}
+
+impl SamplingPreset {
+    /// The paper's measurement: full-batch epochs, no sampling.
+    pub const FULL_BATCH: SamplingPreset =
+        SamplingPreset { sampler: crate::sample::SamplerKind::Full, fanout: usize::MAX };
+
+    /// GraphSAGE's classic layer-1 fanout of 10, sampled uniformly.
+    pub const SAGE_10: SamplingPreset =
+        SamplingPreset { sampler: crate::sample::SamplerKind::Neighbor, fanout: 10 };
+
+    /// GNNSampler-style locality-aware sampling at the same budget.
+    pub const LOCALITY_10: SamplingPreset =
+        SamplingPreset { sampler: crate::sample::SamplerKind::Locality, fanout: 10 };
+
+    pub fn apply(&self, cfg: &mut crate::config::SimConfig) {
+        cfg.sampler = self.sampler;
+        cfg.fanout = self.fanout;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +186,22 @@ mod tests {
             p.apply(&mut cfg);
             cfg.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn sampling_presets_validate() {
+        for p in [
+            SamplingPreset::FULL_BATCH,
+            SamplingPreset::SAGE_10,
+            SamplingPreset::LOCALITY_10,
+        ] {
+            let mut cfg = crate::config::SimConfig::default();
+            p.apply(&mut cfg);
+            cfg.validate().unwrap();
+        }
+        let mut cfg = crate::config::SimConfig::default();
+        SamplingPreset::SAGE_10.apply(&mut cfg);
+        assert_eq!(cfg.sampler_label(), "neighbor@10");
     }
 
     #[test]

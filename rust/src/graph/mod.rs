@@ -7,7 +7,7 @@ pub mod generate;
 pub mod io;
 pub mod stats;
 
-pub use stats::GraphStats;
+pub use stats::{GraphStats, RowGroupLocality};
 
 /// Compressed-sparse-row graph over `u32` vertex ids.
 ///
@@ -220,6 +220,13 @@ impl CsrGraph {
 
     pub fn stats(&self) -> GraphStats {
         stats::compute(self)
+    }
+
+    /// DRAM-row-group locality of this graph's aggregation edge stream
+    /// (`group` consecutive vertices per row group) — see
+    /// [`stats::row_group_locality`].
+    pub fn row_group_locality(&self, group: usize) -> RowGroupLocality {
+        stats::row_group_locality(self, group)
     }
 }
 

@@ -62,6 +62,96 @@ pub fn compute(g: &CsrGraph) -> GraphStats {
     }
 }
 
+/// DRAM-row-group locality of a (sub)graph's aggregation edge stream.
+///
+/// `group` is the number of consecutive vertices whose features share one
+/// DRAM row group (from
+/// [`AddressMapping::vertices_per_row_group`](crate::dram::AddressMapping::vertices_per_row_group));
+/// the stream is the destination-major traversal the engine drives. Three
+/// views of the same question — "how often does the next feature read hit
+/// an already-open row?":
+///
+/// * [`same_group_rate`](RowGroupLocality::same_group_rate) — fraction of
+///   consecutive stream accesses staying in the same group (higher =
+///   better row-buffer reuse),
+/// * `mean_groups_per_vertex` — distinct groups per non-empty in-neighbor
+///   list (lower = each aggregation opens fewer rows),
+/// * `groups_touched` — distinct groups over the whole stream (the
+///   epoch's row working set).
+#[derive(Debug, Clone)]
+pub struct RowGroupLocality {
+    /// Vertices per row group the stream was measured against.
+    pub group: usize,
+    /// Consecutive-access transitions in the stream (|E| − 1 when ≥ 1 edge).
+    pub transitions: u64,
+    /// Transitions that stayed within one row group.
+    pub same_group_transitions: u64,
+    /// Distinct row groups touched by the whole stream.
+    pub groups_touched: usize,
+    /// Mean distinct row groups per non-empty in-neighbor list.
+    pub mean_groups_per_vertex: f64,
+}
+
+impl RowGroupLocality {
+    /// Fraction of consecutive accesses staying in-group (0 when the
+    /// stream has no transitions).
+    pub fn same_group_rate(&self) -> f64 {
+        if self.transitions == 0 {
+            0.0
+        } else {
+            self.same_group_transitions as f64 / self.transitions as f64
+        }
+    }
+}
+
+/// Measure [`RowGroupLocality`] of `g`'s destination-major edge stream
+/// for `group` consecutive vertices per DRAM row group.
+pub fn row_group_locality(g: &CsrGraph, group: usize) -> RowGroupLocality {
+    let group = group.max(1);
+    let n_groups = g.num_vertices().div_ceil(group).max(1);
+    let mut touched = vec![false; n_groups];
+    let mut prev: Option<usize> = None;
+    let (mut transitions, mut same) = (0u64, 0u64);
+    let (mut groups_sum, mut nonempty) = (0u64, 0u64);
+    for v in 0..g.num_vertices() as u32 {
+        let ns = g.neighbors(v);
+        if ns.is_empty() {
+            continue;
+        }
+        nonempty += 1;
+        let mut per_vertex = 0u64;
+        let mut prev_in_list: Option<usize> = None;
+        for &s in ns {
+            let gid = s as usize / group;
+            touched[gid] = true;
+            if let Some(p) = prev {
+                transitions += 1;
+                if p == gid {
+                    same += 1;
+                }
+            }
+            prev = Some(gid);
+            // ns is sorted, so distinct groups are run boundaries.
+            if prev_in_list != Some(gid) {
+                per_vertex += 1;
+                prev_in_list = Some(gid);
+            }
+        }
+        groups_sum += per_vertex;
+    }
+    RowGroupLocality {
+        group,
+        transitions,
+        same_group_transitions: same,
+        groups_touched: touched.iter().filter(|&&t| t).count(),
+        mean_groups_per_vertex: if nonempty == 0 {
+            0.0
+        } else {
+            groups_sum as f64 / nonempty as f64
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +203,46 @@ mod tests {
         assert_eq!(s.num_edges, 0);
         assert_eq!(s.xi_arithmetic, 0.0);
         assert_eq!(s.xi_geometric, 0.0);
+    }
+
+    #[test]
+    fn row_group_locality_ring_vs_random() {
+        // Ring: neighbor of v is v−1, so the stream walks vertex ids in
+        // order — nearly every transition stays inside the 16-vertex
+        // group. Uniform-random sources jump groups almost every step.
+        let n = 1024u32;
+        let ring_edges: Vec<(u32, u32)> = (0..n).map(|v| ((v + n - 1) % n, v)).collect();
+        let ring = CsrGraph::from_edges(n as usize, &ring_edges);
+        let ring_loc = row_group_locality(&ring, 16);
+        assert!(ring_loc.same_group_rate() > 0.9, "{}", ring_loc.same_group_rate());
+        assert_eq!(ring_loc.mean_groups_per_vertex, 1.0);
+
+        let rand = generate::erdos_renyi(1024, 8192, 3);
+        let rand_loc = row_group_locality(&rand, 16);
+        assert!(rand_loc.same_group_rate() < 0.3, "{}", rand_loc.same_group_rate());
+        assert!(rand_loc.mean_groups_per_vertex > 2.0);
+        assert!(rand_loc.groups_touched <= 64);
+    }
+
+    #[test]
+    fn row_group_locality_counts_transitions_exactly() {
+        // 0→(1,2) then 1→(17): stream is 1, 2, 17 — two transitions, the
+        // first in-group (1 and 2 share group 0), the second crossing.
+        let g = CsrGraph::from_edges(32, &[(1, 0), (2, 0), (17, 1)]);
+        let l = row_group_locality(&g, 16);
+        assert_eq!(l.transitions, 2);
+        assert_eq!(l.same_group_transitions, 1);
+        assert_eq!(l.groups_touched, 2);
+        // vertex 0 touches one group, vertex 1 one group
+        assert_eq!(l.mean_groups_per_vertex, 1.0);
+    }
+
+    #[test]
+    fn row_group_locality_empty() {
+        let g = CsrGraph::from_edges(4, &[]);
+        let l = row_group_locality(&g, 8);
+        assert_eq!(l.transitions, 0);
+        assert_eq!(l.same_group_rate(), 0.0);
+        assert_eq!(l.groups_touched, 0);
     }
 }

@@ -33,6 +33,10 @@
 //!   area/power cost model of §5.2.4,
 //! * [`dropout`] — element/burst/row-granular mask generation shared by the
 //!   simulator and the training path,
+//! * [`sample`] — mini-batch sampling: per-epoch [`sample::EpochSubgraph`]s
+//!   from full-batch, GraphSAGE-uniform, or GNNSampler-style
+//!   locality-aware neighbor selection (row-group geometry from the
+//!   actual DRAM mapping),
 //! * [`runtime`] / [`trainer`] — the PJRT side (behind the `pjrt`
 //!   feature): load the AOT-lowered JAX training step (HLO text
 //!   artifacts) and run real GNN training with LiGNN-shaped dropout
@@ -47,8 +51,18 @@
 //! `Backward` drives the transposed stream for gradient aggregation,
 //! `WriteBack`/`MaskWriteBack` model the regular output traffic. The
 //! one-call [`sim::run_sim`] composes the schedule implied by
-//! `SimConfig::{layers, epochs, backward}` and is bit-compatible with
-//! the original single-layer driver at `layers == epochs == 1`.
+//! `SimConfig::{layers, epochs, backward, sampler}` and is
+//! bit-compatible with the original single-layer driver at `layers ==
+//! epochs == 1` under full-batch sampling.
+//!
+//! Mini-batch training: `SimConfig::{sampler, fanout}` select a
+//! [`sample::Sampler`] that produces one subgraph per epoch — the
+//! forward drives, the dropout mask they generate, and the backward
+//! transpose all follow the sampled edge subset. The `FullBatch` policy
+//! is the bit-exact identity; `NeighborSampler` is GraphSAGE's uniform
+//! fanout; `LocalitySampler` prefers neighbors sharing a DRAM row group
+//! with already-sampled vertices (GNNSampler), measurably cutting row
+//! activations at equal fanout.
 //!
 //! ## Quickstart
 //!
@@ -88,6 +102,28 @@
 //! let _ = reference;
 //! ```
 //!
+//! A sampled-epoch run (mini-batch training; compare samplers at equal
+//! fanout to measure the locality delta):
+//!
+//! ```no_run
+//! use lignn::config::{SamplerKind, SimConfig};
+//! use lignn::sim::{SweepPlan, SweepRunner};
+//!
+//! let mut cfg = SimConfig::default();
+//! cfg.fanout = 10; // GraphSAGE's classic layer-1 budget
+//! let graph = cfg.build_graph();
+//! let plan = SweepPlan::samplers(
+//!     &cfg,
+//!     &[SamplerKind::Full, SamplerKind::Neighbor, SamplerKind::Locality],
+//! );
+//! for m in SweepRunner::new(&graph).run(&plan) {
+//!     println!(
+//!         "{}: edges={} reads={} activations={}",
+//!         m.sampler, m.sampled_edges, m.dram.reads, m.dram.activations
+//!     );
+//! }
+//! ```
+//!
 //! Custom phase composition (e.g. epochs with shared engine state):
 //!
 //! ```no_run
@@ -116,11 +152,13 @@ pub mod graph;
 pub mod lignn;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sample;
 pub mod sim;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;
 
 pub use config::{SimConfig, Variant};
+pub use sample::{EpochSubgraph, Sampler, SamplerKind};
 pub use sim::metrics::Metrics;
 pub use sim::{Phase, SimEngine, SweepPlan, SweepRunner};

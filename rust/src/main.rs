@@ -5,6 +5,9 @@
 //!                 (`--layers N --epochs N` for multi-layer/multi-epoch)
 //!   sweep         α sweep normalized against the no-dropout baseline
 //!                 (one shared graph + transpose, parallel points)
+//!   sample        mini-batch sampling study: per-sampler subgraph
+//!                 locality and DRAM metrics (`--sampler`, `--fanout`;
+//!                 default compares full/neighbor/locality)
 //!   train         end-to-end PJRT training with burst/row dropout masks
 //!                 (requires the `pjrt` build feature)
 //!   table5        the full Table-5 accuracy grid (requires `pjrt`)
@@ -16,16 +19,17 @@
 //! Run `lignn` with no arguments for the flag summary.
 
 use lignn::analytic::{AlgoDropoutModel, CostModel};
-use lignn::config::{GraphPreset, SimConfig, Variant};
+use lignn::config::{GraphPreset, SamplerKind, SimConfig, Variant};
+use lignn::dram::AddressMapping;
 use lignn::sim::runs::alpha_grid;
-use lignn::sim::{run_sim, SweepRunner};
+use lignn::sim::{run_sim, SweepPlan, SweepRunner};
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
 use lignn::util::error::{Error, Result};
 use lignn::util::json::Json;
 
-const COMMANDS: &str =
-    "simulate | sweep | train | table5 | graph-stats | report-cost | analytic | trace-replay";
+const COMMANDS: &str = "simulate | sweep | sample | train | table5 | graph-stats | report-cost \
+     | analytic | trace-replay";
 
 fn sim_config(a: &Args) -> Result<SimConfig> {
     let mut cfg = SimConfig::default();
@@ -41,6 +45,11 @@ fn sim_config(a: &Args) -> Result<SimConfig> {
     cfg.seed = a.parse_or("seed", cfg.seed).map_err(Error::msg)?;
     cfg.layers = a.parse_or("layers", cfg.layers).map_err(Error::msg)?;
     cfg.epochs = a.parse_or("epochs", cfg.epochs).map_err(Error::msg)?;
+    cfg.sampler = a.get_or("sampler", "full").parse().map_err(Error::msg)?;
+    cfg.fanout = match a.get("fanout") {
+        None | Some("inf") | Some("max") => cfg.fanout,
+        Some(v) => v.parse().map_err(|e| Error::msg(format!("--fanout {v}: {e}")))?,
+    };
     cfg.channel_balance = a.has("channel-balance");
     if a.has("no-mask-writeback") {
         cfg.mask_writeback = false;
@@ -89,6 +98,8 @@ fn metrics_json(m: &lignn::Metrics) -> Json {
             Json::Arr(m.layer_reads.iter().map(|&r| Json::num(r as f64)).collect()),
         ),
         ("backward_reads", Json::num(m.backward_reads as f64)),
+        ("sampler", Json::str(m.sampler.clone())),
+        ("sampled_edges", Json::num(m.sampled_edges as f64)),
     ])
 }
 
@@ -147,6 +158,74 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         ),
         &["alpha", "speedup", "access", "activation", "desired"],
         &table,
+    );
+    Ok(())
+}
+
+/// Mini-batch sampling study: run the configured sampler — or, without
+/// an explicit `--sampler`, compare all three policies — at one fanout,
+/// reporting subgraph row-group locality next to the DRAM metrics the
+/// sampled epochs actually produced.
+fn cmd_sample(a: &Args) -> Result<()> {
+    let mut cfg = sim_config(a)?;
+    if a.get("fanout").is_none() {
+        // GraphSAGE's classic layer-1 budget.
+        cfg.fanout = lignn::config::SamplingPreset::SAGE_10.fanout;
+    }
+    let graph = load_graph(a, &cfg)?;
+    let kinds: Vec<SamplerKind> = if a.get("sampler").is_none() || a.has("compare") {
+        SamplerKind::ALL.to_vec()
+    } else {
+        vec![cfg.sampler]
+    };
+    let plan = SweepPlan::samplers(&cfg, &kinds);
+    let results = SweepRunner::new(&graph).run(&plan);
+
+    let mapping = AddressMapping::new(&cfg.dram.config());
+    let group = mapping.vertices_per_row_group(cfg.flen_bytes()) as usize;
+    let mut rows = Vec::new();
+    for (kind, m) in kinds.iter().zip(&results) {
+        let mut point = cfg.clone();
+        point.sampler = *kind;
+        // Epoch 0's subgraph, re-derived for the locality columns (the
+        // sampler is deterministic, so this is the graph the run drove).
+        let sub = point.build_sampler().sample(&graph, 0);
+        let loc = sub.graph().row_group_locality(group);
+        rows.push(vec![
+            m.sampler.clone(),
+            format!("{}", sub.num_edges()),
+            format!("{:.1}%", sub.edge_coverage() * 100.0),
+            format!("{:.3}", loc.same_group_rate()),
+            format!("{:.2}", loc.mean_groups_per_vertex),
+            format!("{}", m.dram.reads),
+            format!("{}", m.dram.activations),
+            format!("{:.3}", m.reads_per_sampled_edge()),
+            format!("{:.3}", m.exec_ns / 1e6),
+        ]);
+    }
+    print_table(
+        &format!(
+            "mini-batch sampling — {} on {} / {} / {} α={:.1}, fanout {} ({} vertices/row-group)",
+            cfg.variant.name(),
+            cfg.graph.name(),
+            cfg.model.name(),
+            cfg.dram.name(),
+            cfg.alpha,
+            if cfg.fanout == usize::MAX { "inf".to_string() } else { cfg.fanout.to_string() },
+            group,
+        ),
+        &[
+            "sampler",
+            "edges",
+            "coverage",
+            "rg-rate",
+            "groups/v",
+            "reads",
+            "acts",
+            "reads/edge",
+            "exec ms",
+        ],
+        &rows,
     );
     Ok(())
 }
@@ -217,8 +296,9 @@ fn cmd_table5(_a: &Args) -> Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 const PJRT_HINT: &str = "this binary was built without the `pjrt` feature. Training needs the \
-     xla PJRT bindings, which only exist in the image that bakes them in: there, add the `xla` \
-     dependency to rust/Cargo.toml and rebuild with `cargo build --features pjrt` (see ROADMAP.md)";
+     xla PJRT bindings, which only exist in the image that bakes them in: there, point the \
+     optional `xla` path dependency in rust/Cargo.toml at the real bindings (the default path \
+     is an offline stub) and rebuild with `cargo build --features pjrt` (see ROADMAP.md)";
 
 fn cmd_graph_stats(_a: &Args) -> Result<()> {
     let mut rows = Vec::new();
@@ -325,7 +405,9 @@ fn usage() {
          common flags: --graph lj|or|pa|small|tiny --model gcn|sage|gin \\\n\
          --dram hbm|ddr4|gddr5 --variant A|B|R|S|T|M --alpha 0.5 --json\n\
          engine flags: --layers N --epochs N --backward --channel-balance \\\n\
-         --no-mask-writeback --trace <file> --graph-file <path>"
+         --no-mask-writeback --trace <file> --graph-file <path>\n\
+         sampling flags: --sampler full|neighbor|locality --fanout N|inf \\\n\
+         (sample: --compare runs all three policies)"
     );
 }
 
@@ -333,6 +415,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("simulate") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
+        Some("sample") => cmd_sample(args),
         Some("train") => cmd_train(args),
         Some("table5") => cmd_table5(args),
         Some("graph-stats") => cmd_graph_stats(args),

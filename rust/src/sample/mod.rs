@@ -1,0 +1,288 @@
+//! Mini-batch sampling: per-epoch subgraphs driven through the engine.
+//!
+//! The paper evaluates LiGNN under full-batch training, but GNN training
+//! at scale is mini-batch sampled — and *which* neighbors an epoch reads
+//! determines DRAM locality just as much as how the reads are scheduled
+//! (GNNSampler's observation). This module makes the epoch's edge stream
+//! itself a sampled artifact, so the simulator can answer whether
+//! locality-aware dropout still wins once the workload is a subgraph:
+//!
+//! * [`Sampler`] — produces one [`EpochSubgraph`] per epoch index,
+//!   deterministically in its seed (equal `(seed, epoch)` → identical
+//!   subgraph, independent of call order);
+//! * [`FullBatch`] — the identity sampler: every epoch is the whole
+//!   graph, bit-compatible with the unsampled driver;
+//! * [`NeighborSampler`] — GraphSAGE-style uniform per-vertex fanout
+//!   (each destination keeps at most `fanout` in-neighbors, chosen by a
+//!   per-vertex [`Pcg64`](crate::util::rng::Pcg64) stream);
+//! * [`LocalitySampler`] — GNNSampler-style: at equal fanout, prefer
+//!   neighbors that share a DRAM row group with already-sampled
+//!   vertices. Row-group geometry comes from the *actual*
+//!   [`AddressMapping`](crate::dram::AddressMapping), the same way
+//!   [`dropout::Granularity`](crate::dropout::Granularity) derives its
+//!   burst/row shapes — sampler and DRAM model can never disagree.
+//!
+//! An [`EpochSubgraph`] is CSR-compatible (it *is* a [`CsrGraph`] over
+//! the same vertex set, edges a per-list subset of the original), plus
+//! the seed-vertex frontier: the destinations whose aggregation the
+//! epoch actually computes. Because the subgraph is a real `CsrGraph`,
+//! the backward phase transposes the *subset* — the gradient stream
+//! follows the sampled edges, not the full graph.
+
+use std::cell::OnceCell;
+
+use crate::graph::CsrGraph;
+
+mod full;
+mod locality;
+mod neighbor;
+
+pub use full::FullBatch;
+pub use locality::LocalitySampler;
+pub use neighbor::NeighborSampler;
+
+use crate::util::rng::Pcg64;
+
+/// One epoch's sampled workload: an edge-subset graph over the original
+/// vertex set plus the seed-vertex frontier (destinations with at least
+/// one sampled in-edge).
+pub struct EpochSubgraph<'g> {
+    full: &'g CsrGraph,
+    sampled: Option<CsrGraph>,
+    /// Lazily computed (O(V)) — the engine's schedule never reads it,
+    /// so full-batch sweeps don't pay for it.
+    seeds: OnceCell<Vec<u32>>,
+}
+
+impl<'g> EpochSubgraph<'g> {
+    /// The identity subgraph: the epoch drives the full graph. No copy —
+    /// the engine sees the exact same `CsrGraph` instance (and therefore
+    /// the exact same cached transpose), which is what makes
+    /// [`FullBatch`] bit-compatible with the unsampled driver.
+    pub fn full(graph: &'g CsrGraph) -> EpochSubgraph<'g> {
+        EpochSubgraph { full: graph, sampled: None, seeds: OnceCell::new() }
+    }
+
+    /// Wrap a sampled edge subset of `full`. The subset must keep the
+    /// vertex set (CSR row space) intact — samplers drop edges, never
+    /// vertices.
+    pub fn sampled(full: &'g CsrGraph, subset: CsrGraph) -> EpochSubgraph<'g> {
+        assert_eq!(
+            full.num_vertices(),
+            subset.num_vertices(),
+            "subgraph must keep the vertex set"
+        );
+        EpochSubgraph { full, sampled: Some(subset), seeds: OnceCell::new() }
+    }
+
+    /// The graph the engine drives this epoch.
+    pub fn graph(&self) -> &CsrGraph {
+        self.sampled.as_ref().unwrap_or(self.full)
+    }
+
+    /// The full graph this epoch was sampled from.
+    pub fn base(&self) -> &'g CsrGraph {
+        self.full
+    }
+
+    /// Seed-vertex frontier: destinations with ≥ 1 sampled in-edge, in
+    /// ascending order (the vertices whose aggregation this epoch
+    /// computes). Computed on first use.
+    pub fn seeds(&self) -> &[u32] {
+        self.seeds.get_or_init(|| frontier(self.graph()))
+    }
+
+    /// Is this epoch the whole graph (identity sampling)?
+    pub fn is_full(&self) -> bool {
+        self.sampled.is_none()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.graph().num_edges()
+    }
+
+    /// Fraction of the full graph's edges this epoch keeps (1.0 for
+    /// full-batch; 0/0 counts as 1.0).
+    pub fn edge_coverage(&self) -> f64 {
+        let full = self.full.num_edges();
+        if full == 0 {
+            1.0
+        } else {
+            self.num_edges() as f64 / full as f64
+        }
+    }
+}
+
+fn frontier(g: &CsrGraph) -> Vec<u32> {
+    (0..g.num_vertices() as u32).filter(|&v| g.in_degree(v) > 0).collect()
+}
+
+/// A mini-batch sampling policy. `sample` must be a pure function of
+/// `(self, graph, epoch)` — sampled training re-samples every epoch by
+/// advancing `epoch`, and sweeps rely on equal inputs producing
+/// bit-identical subgraphs.
+pub trait Sampler: Send + Sync {
+    /// Short policy name for metric rows (`full` / `neighbor` /
+    /// `locality`).
+    fn name(&self) -> &'static str;
+
+    /// Produce epoch `epoch`'s subgraph of `graph`.
+    fn sample<'g>(&self, graph: &'g CsrGraph, epoch: u64) -> EpochSubgraph<'g>;
+}
+
+/// Which sampling policy a run uses (the `SimConfig` knob — geometry and
+/// seeds are filled in by
+/// [`SimConfig::build_sampler`](crate::config::SimConfig::build_sampler)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SamplerKind {
+    /// Identity: every epoch drives the whole graph.
+    Full,
+    /// GraphSAGE-style uniform per-vertex fanout.
+    Neighbor,
+    /// GNNSampler-style row-group-preferring fanout.
+    Locality,
+}
+
+impl SamplerKind {
+    pub const ALL: [SamplerKind; 3] =
+        [SamplerKind::Full, SamplerKind::Neighbor, SamplerKind::Locality];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Full => "full",
+            SamplerKind::Neighbor => "neighbor",
+            SamplerKind::Locality => "locality",
+        }
+    }
+}
+
+impl std::str::FromStr for SamplerKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "full-batch" | "fullbatch" => Ok(SamplerKind::Full),
+            "neighbor" | "neighbour" | "sage" => Ok(SamplerKind::Neighbor),
+            "locality" | "gnnsampler" => Ok(SamplerKind::Locality),
+            other => Err(format!(
+                "unknown sampler `{other}` (want full|neighbor|locality)"
+            )),
+        }
+    }
+}
+
+/// Decorrelated per-vertex RNG stream: determinism must not depend on
+/// traversal order, so every (seed, epoch, vertex) triple gets its own
+/// generator.
+pub(crate) fn vertex_rng(seed: u64, epoch: u64, v: u32) -> Pcg64 {
+    Pcg64::new(
+        seed ^ epoch.wrapping_mul(0xA076_1D64_78BD_642F)
+            ^ (v as u64 + 1).wrapping_mul(0xE703_7ED1_A0B4_28DB),
+    )
+}
+
+/// Assemble a per-vertex sampled neighbor structure into a `CsrGraph`.
+/// `pick` receives each vertex's full (sorted, unique) in-neighbor list
+/// and appends the kept subset — sorted, unique — to `out`.
+pub(crate) fn build_subset(
+    graph: &CsrGraph,
+    mut pick: impl FnMut(u32, &[u32], &mut Vec<u32>),
+) -> CsrGraph {
+    let n = graph.num_vertices();
+    let mut offsets = vec![0u64; n + 1];
+    let mut targets = Vec::with_capacity(graph.num_edges());
+    for v in 0..n as u32 {
+        pick(v, graph.neighbors(v), &mut targets);
+        offsets[v as usize + 1] = targets.len() as u64;
+        debug_assert!(
+            targets[offsets[v as usize] as usize..].windows(2).all(|w| w[0] < w[1]),
+            "sampled list of v{v} must stay sorted and unique"
+        );
+    }
+    CsrGraph::from_parts(offsets, targets).expect("sampled subset is valid CSR")
+}
+
+/// Cheap identity check: when `fanout` covers every in-degree, sampling
+/// is the identity and the epoch can share the full graph instance
+/// (fanout = ∞ ≡ [`FullBatch`], bit-for-bit).
+pub(crate) fn fanout_covers(graph: &CsrGraph, fanout: usize) -> bool {
+    (0..graph.num_vertices() as u32).all(|v| graph.in_degree(v) <= fanout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GraphPreset;
+
+    fn tiny() -> CsrGraph {
+        GraphPreset::Tiny.build(7)
+    }
+
+    #[test]
+    fn kind_roundtrip_and_parse() {
+        for k in SamplerKind::ALL {
+            assert_eq!(k.name().parse::<SamplerKind>().unwrap(), k);
+        }
+        assert_eq!("sage".parse::<SamplerKind>().unwrap(), SamplerKind::Neighbor);
+        assert_eq!("gnnsampler".parse::<SamplerKind>().unwrap(), SamplerKind::Locality);
+        assert!("random".parse::<SamplerKind>().is_err());
+    }
+
+    #[test]
+    fn full_subgraph_is_identity() {
+        let g = tiny();
+        let sub = EpochSubgraph::full(&g);
+        assert!(sub.is_full());
+        assert!(std::ptr::eq(sub.graph(), &g), "no copy for full batch");
+        assert_eq!(sub.num_edges(), g.num_edges());
+        assert_eq!(sub.edge_coverage(), 1.0);
+        // frontier = every destination that aggregates anything
+        assert!(sub.seeds().iter().all(|&v| g.in_degree(v) > 0));
+        let nonempty = (0..g.num_vertices() as u32).filter(|&v| g.in_degree(v) > 0).count();
+        assert_eq!(sub.seeds().len(), nonempty);
+    }
+
+    #[test]
+    fn subset_builder_validates_and_covers() {
+        let g = tiny();
+        // keep every other neighbor
+        let sub = build_subset(&g, |_, ns, out| {
+            out.extend(ns.iter().step_by(2));
+        });
+        assert_eq!(sub.num_vertices(), g.num_vertices());
+        for v in 0..g.num_vertices() as u32 {
+            let full = g.neighbors(v);
+            let kept = sub.neighbors(v);
+            assert_eq!(kept.len(), full.len().div_ceil(2));
+            assert!(kept.iter().all(|s| full.contains(s)));
+        }
+    }
+
+    #[test]
+    fn sampled_wrapper_frontier_tracks_subset() {
+        let g = tiny();
+        // drop everything except vertex 0's list → frontier is {0} or {}
+        let sub = build_subset(&g, |v, ns, out| {
+            if v == 0 {
+                out.extend_from_slice(ns);
+            }
+        });
+        let wrapped = EpochSubgraph::sampled(&g, sub);
+        assert!(!wrapped.is_full());
+        if g.in_degree(0) > 0 {
+            assert_eq!(wrapped.seeds(), &[0]);
+        } else {
+            assert!(wrapped.seeds().is_empty());
+        }
+        assert!(wrapped.edge_coverage() < 1.0);
+        assert!(std::ptr::eq(wrapped.base(), &g));
+    }
+
+    #[test]
+    fn vertex_rng_streams_decorrelate() {
+        let a = vertex_rng(1, 0, 0).next_u64();
+        assert_ne!(a, vertex_rng(1, 0, 1).next_u64(), "vertex axis");
+        assert_ne!(a, vertex_rng(1, 1, 0).next_u64(), "epoch axis");
+        assert_ne!(a, vertex_rng(2, 0, 0).next_u64(), "seed axis");
+        assert_eq!(a, vertex_rng(1, 0, 0).next_u64(), "determinism");
+    }
+}

@@ -1,0 +1,121 @@
+//! GraphSAGE-style uniform neighbor sampling.
+
+use crate::graph::CsrGraph;
+
+use super::{build_subset, fanout_covers, vertex_rng, EpochSubgraph, Sampler};
+
+/// Uniform per-vertex fanout: each destination keeps at most `fanout`
+/// in-neighbors, chosen uniformly without replacement by a per-vertex
+/// PCG stream (partial Fisher–Yates over the neighbor list).
+///
+/// Deterministic in `(seed, epoch, vertex)` and independent of traversal
+/// order; a fanout covering the graph's maximum in-degree degenerates to
+/// [`FullBatch`](super::FullBatch) exactly (the epoch shares the full
+/// graph instance).
+#[derive(Debug, Clone, Copy)]
+pub struct NeighborSampler {
+    fanout: usize,
+    seed: u64,
+}
+
+impl NeighborSampler {
+    pub fn new(fanout: usize, seed: u64) -> NeighborSampler {
+        assert!(fanout > 0, "fanout must be ≥ 1 (0 samples nothing)");
+        NeighborSampler { fanout, seed }
+    }
+
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+}
+
+impl Sampler for NeighborSampler {
+    fn name(&self) -> &'static str {
+        "neighbor"
+    }
+
+    fn sample<'g>(&self, graph: &'g CsrGraph, epoch: u64) -> EpochSubgraph<'g> {
+        if fanout_covers(graph, self.fanout) {
+            return EpochSubgraph::full(graph);
+        }
+        let mut scratch: Vec<u32> = Vec::new();
+        let subset = build_subset(graph, |v, ns, out| {
+            if ns.len() <= self.fanout {
+                out.extend_from_slice(ns);
+                return;
+            }
+            scratch.clear();
+            scratch.extend_from_slice(ns);
+            let mut rng = vertex_rng(self.seed, epoch, v);
+            for i in 0..self.fanout {
+                let j = i + rng.below((scratch.len() - i) as u32) as usize;
+                scratch.swap(i, j);
+            }
+            let pick = &mut scratch[..self.fanout];
+            pick.sort_unstable();
+            out.extend_from_slice(pick);
+        });
+        EpochSubgraph::sampled(graph, subset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GraphPreset;
+
+    fn tiny() -> CsrGraph {
+        GraphPreset::Tiny.build(11)
+    }
+
+    #[test]
+    fn respects_fanout_and_subsets_neighbors() {
+        let g = tiny();
+        let s = NeighborSampler::new(4, 99);
+        let sub = s.sample(&g, 0);
+        assert!(!sub.is_full());
+        let sg = sub.graph();
+        for v in 0..g.num_vertices() as u32 {
+            let kept = sg.neighbors(v);
+            let full = g.neighbors(v);
+            assert_eq!(kept.len(), full.len().min(4), "v{v}");
+            assert!(kept.windows(2).all(|w| w[0] < w[1]), "v{v} unsorted");
+            assert!(kept.iter().all(|s| full.contains(s)), "v{v} invented edge");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_epoch_and_decorrelated_across() {
+        let g = tiny();
+        let s = NeighborSampler::new(3, 42);
+        let a = s.sample(&g, 5);
+        let b = s.sample(&g, 5);
+        assert_eq!(a.graph(), b.graph(), "same (seed, epoch) must agree");
+        let c = s.sample(&g, 6);
+        assert_ne!(a.graph(), c.graph(), "epochs must re-sample");
+        let other = NeighborSampler::new(3, 43).sample(&g, 5);
+        assert_ne!(a.graph(), other.graph(), "seeds must decorrelate");
+    }
+
+    #[test]
+    fn covering_fanout_is_identity() {
+        let g = tiny();
+        let max_deg = (0..g.num_vertices() as u32).map(|v| g.in_degree(v)).max().unwrap();
+        let sub = NeighborSampler::new(max_deg, 1).sample(&g, 0);
+        assert!(sub.is_full());
+        assert!(std::ptr::eq(sub.graph(), &g));
+        let sub = NeighborSampler::new(usize::MAX, 1).sample(&g, 0);
+        assert!(sub.is_full());
+    }
+
+    #[test]
+    fn frontier_preserved_at_positive_fanout() {
+        // fanout ≥ 1 keeps at least one in-edge per nonempty list, so the
+        // seed frontier equals the full graph's.
+        let g = tiny();
+        let sub = NeighborSampler::new(1, 5).sample(&g, 0);
+        let full_frontier: Vec<u32> =
+            (0..g.num_vertices() as u32).filter(|&v| g.in_degree(v) > 0).collect();
+        assert_eq!(sub.seeds(), full_frontier.as_slice());
+    }
+}

@@ -49,6 +49,14 @@ pub struct Metrics {
     /// DRAM read bursts attributed to backward (gradient) drives; 0 when
     /// the run had no backward phase.
     pub backward_reads: u64,
+
+    /// Sampling-policy label (`full`, `neighbor@10`, …) — lets sweep
+    /// rows attribute their read counts to the sampler that produced the
+    /// epoch stream.
+    pub sampler: String,
+    /// Edges in the per-epoch (sub)graph, summed over epochs (equals
+    /// `epochs × |E|` under full-batch sampling).
+    pub sampled_edges: u64,
 }
 
 impl Metrics {
@@ -93,8 +101,23 @@ impl Metrics {
         self.layer_reads.iter().map(|&r| r as f64 / total as f64).collect()
     }
 
+    /// Mean DRAM read bursts per sampled edge — the locality figure of
+    /// merit across samplers (0 when the run drove no edges).
+    pub fn reads_per_sampled_edge(&self) -> f64 {
+        if self.sampled_edges == 0 {
+            0.0
+        } else {
+            self.dram.reads as f64 / self.sampled_edges as f64
+        }
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
+        let sampler = if self.sampler == "full" {
+            String::new()
+        } else {
+            format!(" sampler={} edges={}", self.sampler, self.sampled_edges)
+        };
         let layers = if self.layer_reads.len() > 1 {
             let mut parts: Vec<String> = self
                 .layer_reads
@@ -111,7 +134,7 @@ impl Metrics {
         };
         format!(
             "{} {} {} {} α={:.1}: exec={:.3}ms mem={:.3}ms compute={:.3}ms \
-             bursts={} acts={} mean_session={:.2} hit/new/merge/drop={}/{}/{}/{}{layers}",
+             bursts={} acts={} mean_session={:.2} hit/new/merge/drop={}/{}/{}/{}{sampler}{layers}",
             self.variant,
             self.graph,
             self.model,
@@ -161,6 +184,8 @@ mod tests {
             feat_dropped: 5,
             layer_reads: vec![bursts],
             backward_reads: 0,
+            sampler: "full".into(),
+            sampled_edges: 2 * bursts,
         }
     }
 
@@ -180,6 +205,19 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("LG-T") && s.contains("GCN") && s.contains("HBM"));
         assert!(!s.contains("layer_reads"), "single-layer summary stays terse");
+        assert!(!s.contains("sampler"), "full-batch summary stays terse");
+    }
+
+    #[test]
+    fn sampled_summary_and_reads_per_edge() {
+        let mut m = dummy(1000.0, 100, 10);
+        assert!((m.reads_per_sampled_edge() - 0.5).abs() < 1e-12);
+        m.sampler = "neighbor@10".into();
+        let s = m.summary();
+        assert!(s.contains("sampler=neighbor@10"), "{s}");
+        assert!(s.contains("edges=200"), "{s}");
+        m.sampled_edges = 0;
+        assert_eq!(m.reads_per_sampled_edge(), 0.0);
     }
 
     #[test]

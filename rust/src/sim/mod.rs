@@ -6,6 +6,6 @@ pub mod metrics;
 pub mod runs;
 pub mod trace;
 
-pub use driver::{run_sim, run_sim_with_buffer, Phase, SimEngine};
+pub use driver::{run_sampled_sim, run_sim, run_sim_with_buffer, Phase, SimEngine};
 pub use metrics::Metrics;
 pub use runs::{alpha_sweep, normalized_against_no_dropout, SweepPlan, SweepRunner};

@@ -13,6 +13,7 @@
 use crate::config::{SimConfig, Variant};
 use crate::graph::CsrGraph;
 use crate::lignn::Burst;
+use crate::sample::SamplerKind;
 use crate::util::par::{default_threads, par_map_init};
 
 use super::driver::{run_sim, run_sim_with_buffer};
@@ -57,6 +58,31 @@ impl SweepPlan {
         plan
     }
 
+    /// One point per sampling policy, cloned from `base` (full vs
+    /// neighbor vs locality at `base.fanout`).
+    pub fn samplers(base: &SimConfig, samplers: &[SamplerKind]) -> SweepPlan {
+        let mut plan = SweepPlan::new();
+        for &sampler in samplers {
+            let mut cfg = base.clone();
+            cfg.sampler = sampler;
+            plan.push(cfg);
+        }
+        plan
+    }
+
+    /// One point per fanout under `sampler`, cloned from `base` (the
+    /// mini-batch budget axis).
+    pub fn fanouts(base: &SimConfig, sampler: SamplerKind, fanouts: &[usize]) -> SweepPlan {
+        let mut plan = SweepPlan::new();
+        for &fanout in fanouts {
+            let mut cfg = base.clone();
+            cfg.sampler = sampler;
+            cfg.fanout = fanout;
+            plan.push(cfg);
+        }
+        plan
+    }
+
     pub fn push(&mut self, cfg: SimConfig) {
         self.points.push(cfg);
     }
@@ -78,9 +104,13 @@ impl SweepPlan {
         self.points.is_empty()
     }
 
-    /// Does any point drive the transposed edge stream?
+    /// Does any point drive the full graph's transposed edge stream?
+    /// (Sampled backward points transpose their own per-epoch subgraphs,
+    /// so prewarming the shared cache would be wasted work.)
     pub fn needs_transpose(&self) -> bool {
-        self.points.iter().any(|c| c.backward)
+        self.points
+            .iter()
+            .any(|c| c.backward && c.sampler == SamplerKind::Full)
     }
 }
 
@@ -273,6 +303,48 @@ mod tests {
             assert_eq!(m.dram.activations, serial.dram.activations);
             assert_eq!(m.exec_ns, serial.exec_ns);
         }
+    }
+
+    #[test]
+    fn sampler_and_fanout_plans_preserve_order() {
+        let mut cfg = tiny_cfg(Variant::S);
+        cfg.fanout = 4;
+        let graph = cfg.build_graph();
+        let plan = SweepPlan::samplers(
+            &cfg,
+            &[SamplerKind::Full, SamplerKind::Neighbor, SamplerKind::Locality],
+        );
+        let rows = SweepRunner::new(&graph).with_threads(3).run(&plan);
+        assert_eq!(rows[0].sampler, "full");
+        assert_eq!(rows[1].sampler, "neighbor@4");
+        assert_eq!(rows[2].sampler, "locality@4");
+        assert_eq!(rows[0].sampled_edges, graph.num_edges() as u64);
+        assert!(rows[1].sampled_edges < rows[0].sampled_edges);
+        assert_eq!(rows[1].sampled_edges, rows[2].sampled_edges, "equal budget");
+
+        let plan = SweepPlan::fanouts(&cfg, SamplerKind::Neighbor, &[2, 8]);
+        let rows = SweepRunner::new(&graph).run(&plan);
+        assert_eq!(rows[0].sampler, "neighbor@2");
+        assert_eq!(rows[1].sampler, "neighbor@8");
+        assert!(rows[0].sampled_edges < rows[1].sampled_edges);
+    }
+
+    #[test]
+    fn sampled_backward_plan_skips_full_transpose_prewarm() {
+        let mut cfg = tiny_cfg(Variant::S);
+        cfg.backward = true;
+        cfg.sampler = SamplerKind::Neighbor;
+        cfg.fanout = 4;
+        let graph = cfg.build_graph();
+        let plan = SweepPlan::alphas(&cfg, &[0.2, 0.5]);
+        assert!(!plan.needs_transpose(), "subgraph transposes are per-point");
+        let rows = SweepRunner::new(&graph).run(&plan);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            graph.transpose_count(),
+            0,
+            "sampled backward must not touch the shared transpose cache"
+        );
     }
 
     #[test]

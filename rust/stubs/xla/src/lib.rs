@@ -1,0 +1,163 @@
+//! API-compatible stub of the `xla` PJRT bindings used by `lignn`'s
+//! `runtime`/`trainer` modules (the subset they call — see
+//! `rust/src/runtime/client.rs`).
+//!
+//! Purpose: let the `pjrt` cargo feature *resolve and compile* in the
+//! dependency-free offline environment. Host-side `Literal` plumbing is
+//! functional (vec/reshape/read-back round-trips), so the literal unit
+//! tests pass; anything that needs a real PJRT device — client creation,
+//! compilation, execution — returns an error explaining that the real
+//! bindings are absent. The image that bakes in xla-rs points the path
+//! dependency in `rust/Cargo.toml` at the real crate instead.
+
+use std::path::Path;
+
+/// Stub error: carries a message; `Debug`-formats like the real crate's
+/// error enough for `{e:?}` call sites.
+pub struct XlaError(pub String);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: this build links the offline `xla` stub — the real PJRT bindings exist only \
+         in the image that bakes them in (see rust/Cargo.toml)"
+    ))
+}
+
+/// Host literal: dense f32 storage plus dimensions. Enough for the
+/// host-side plumbing `lignn::runtime` does before execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape {:?} wants {n} elements, literal has {}",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the literal back as a host vector.
+    pub fn to_vec<T: FromLiteral>(&self) -> Result<Vec<T>> {
+        T::from_f32_slice(&self.data)
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples (they
+    /// only come from device execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Element types readable out of a [`Literal`] (f32 only in the stub).
+pub trait FromLiteral: Sized {
+    fn from_f32_slice(data: &[f32]) -> Result<Vec<Self>>;
+}
+
+impl FromLiteral for f32 {
+    fn from_f32_slice(data: &[f32]) -> Result<Vec<f32>> {
+        Ok(data.to_vec())
+    }
+}
+
+/// HLO module handle. Parsing requires the real bindings.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({:?})",
+            path.as_ref()
+        )))
+    }
+}
+
+/// Computation wrapper (constructible, not compilable).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Construction requires the real bindings.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Matches the real crate's `execute::<Literal>(inputs)` shape:
+    /// per-device, per-output buffers.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn device_paths_error_clearly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}

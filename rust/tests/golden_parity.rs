@@ -268,6 +268,10 @@ mod legacy {
             } else {
                 0
             },
+            // The seed driver was implicitly full-batch: one epoch over
+            // every edge.
+            sampler: "full".to_string(),
+            sampled_edges: graph.num_edges() as u64,
         }
     }
 }
@@ -380,4 +384,34 @@ fn explicit_layers_one_equals_legacy() {
     let gold = legacy::run_sim(&cfg, &graph);
     let new = run_sim(&cfg, &graph);
     assert_metrics_identical(&new, &gold, "layers=1");
+}
+
+#[test]
+fn fullbatch_sampler_matches_legacy() {
+    // The FullBatch sampler spelled out — both through `cfg.sampler` and
+    // through the explicit-sampler entry point — must reproduce the seed
+    // driver bit-for-bit: mini-batch support costs the full-batch path
+    // nothing.
+    for variant in [Variant::A, Variant::T] {
+        for alpha in [0.0, 0.5] {
+            let mut cfg = tiny_cfg(variant, alpha);
+            cfg.sampler = lignn::SamplerKind::Full;
+            cfg.fanout = usize::MAX;
+            let graph = cfg.build_graph();
+            let gold = legacy::run_sim(&cfg, &graph);
+            let via_cfg = run_sim(&cfg, &graph);
+            assert_metrics_identical(
+                &via_cfg,
+                &gold,
+                &format!("{variant:?} α={alpha} cfg.sampler=Full"),
+            );
+            let via_explicit =
+                lignn::sim::run_sampled_sim(&cfg, &graph, &lignn::sample::FullBatch);
+            assert_metrics_identical(
+                &via_explicit,
+                &gold,
+                &format!("{variant:?} α={alpha} explicit FullBatch"),
+            );
+        }
+    }
 }

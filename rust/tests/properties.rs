@@ -5,10 +5,13 @@
 
 use lignn::accel::Interleaver;
 use lignn::cache::LruCache;
+use lignn::config::{GraphPreset, SimConfig, Variant};
 use lignn::dram::{AddressMapping, DramModel, DramStandardKind};
 use lignn::dropout::{Granularity, MaskGen};
 use lignn::lignn::{AddressCalc, Burst, Criteria, Lgt, RecMerger, RowPolicy};
 use lignn::lignn::Edge;
+use lignn::sample::{FullBatch, LocalitySampler, NeighborSampler, Sampler, SamplerKind};
+use lignn::sim::{run_sampled_sim, run_sim};
 use lignn::util::rng::Pcg64;
 
 const ALL_STANDARDS: [DramStandardKind; 8] = [
@@ -240,6 +243,133 @@ fn prop_dram_counter_identities() {
             .map(|(s, &cnt)| s as u64 * cnt)
             .sum();
         assert_eq!(bursts_in_sessions, n, "{kind:?}");
+    }
+}
+
+fn sampling_cfg(alpha: f64) -> SimConfig {
+    SimConfig {
+        graph: GraphPreset::Tiny,
+        variant: Variant::T,
+        alpha,
+        flen: 64,
+        capacity: 256,
+        access: 64,
+        range: 64,
+        ..Default::default()
+    }
+}
+
+/// Field-wise bit equality of the counters the figures are built from.
+fn assert_same_run(a: &lignn::Metrics, b: &lignn::Metrics, label: &str) {
+    assert_eq!(a.dram.reads, b.dram.reads, "{label}: reads");
+    assert_eq!(a.dram.writes, b.dram.writes, "{label}: writes");
+    assert_eq!(a.dram.activations, b.dram.activations, "{label}: activations");
+    assert_eq!(a.dram.row_hits, b.dram.row_hits, "{label}: row_hits");
+    assert_eq!(a.cache_hits, b.cache_hits, "{label}: cache_hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{label}: cache_misses");
+    assert_eq!(a.unit.features_in, b.unit.features_in, "{label}: features_in");
+    assert_eq!(a.unit.bursts_kept, b.unit.bursts_kept, "{label}: bursts_kept");
+    assert_eq!(a.feat_new, b.feat_new, "{label}: feat_new");
+    assert_eq!(a.feat_merge, b.feat_merge, "{label}: feat_merge");
+    assert_eq!(a.feat_dropped, b.feat_dropped, "{label}: feat_dropped");
+    assert_eq!(a.exec_ns.to_bits(), b.exec_ns.to_bits(), "{label}: exec_ns");
+    assert_eq!(a.mem_ns.to_bits(), b.mem_ns.to_bits(), "{label}: mem_ns");
+    assert_eq!(a.compute_ns.to_bits(), b.compute_ns.to_bits(), "{label}: compute_ns");
+    assert_eq!(a.sampled_edges, b.sampled_edges, "{label}: sampled_edges");
+}
+
+#[test]
+fn prop_samplers_deterministic_under_fixed_seed() {
+    // Equal (seed, epoch) → bit-identical subgraph; different epoch or
+    // seed → a different one. Checked across graphs, fanouts and both
+    // sampled policies.
+    for (graph_seed, fanout) in [(7u64, 3usize), (11, 6)] {
+        let g = GraphPreset::Tiny.build(graph_seed);
+        let samplers: [Box<dyn Sampler>; 2] = [
+            Box::new(NeighborSampler::new(fanout, 99)),
+            Box::new(LocalitySampler::new(fanout, 16, 99)),
+        ];
+        for s in &samplers {
+            for epoch in 0..3u64 {
+                let a = s.sample(&g, epoch);
+                let b = s.sample(&g, epoch);
+                assert_eq!(
+                    a.graph(),
+                    b.graph(),
+                    "{} epoch {epoch} must be reproducible",
+                    s.name()
+                );
+                assert_eq!(a.seeds(), b.seeds());
+            }
+            let e0 = s.sample(&g, 0);
+            let e1 = s.sample(&g, 1);
+            assert_ne!(e0.graph(), e1.graph(), "{} must re-sample per epoch", s.name());
+        }
+    }
+}
+
+#[test]
+fn prop_fullbatch_bit_parity_with_unsampled_driver() {
+    // The FullBatch sampler must reproduce today's run_sim bit-for-bit —
+    // with and without dropout, with and without backward.
+    for alpha in [0.0, 0.5] {
+        for backward in [false, true] {
+            let mut cfg = sampling_cfg(alpha);
+            cfg.backward = backward;
+            let g = cfg.build_graph();
+            let direct = run_sim(&cfg, &g);
+            let sampled = run_sampled_sim(&cfg, &g, &FullBatch);
+            assert_same_run(&direct, &sampled, &format!("α={alpha} backward={backward}"));
+        }
+    }
+}
+
+#[test]
+fn prop_infinite_fanout_equals_fullbatch() {
+    // fanout = ∞ (or anything covering the max in-degree) degenerates
+    // both sampled policies to the identity — metrics bit-equal to Full.
+    for alpha in [0.0, 0.5] {
+        let mut cfg = sampling_cfg(alpha);
+        let g = cfg.build_graph();
+        let full = run_sim(&cfg, &g);
+        for kind in [SamplerKind::Neighbor, SamplerKind::Locality] {
+            cfg.sampler = kind;
+            cfg.fanout = usize::MAX;
+            let m = run_sim(&cfg, &g);
+            assert_same_run(&full, &m, &format!("{} α={alpha}", kind.name()));
+        }
+    }
+}
+
+#[test]
+fn prop_sampled_subgraphs_are_valid_subsets() {
+    // Every sampled list: within fanout, sorted, unique, a subset of the
+    // full list; frontier matches nonzero in-degrees.
+    let g = GraphPreset::Tiny.build(13);
+    let mut rng = Pcg64::new(41);
+    for round in 0..20u64 {
+        let fanout = 1 + rng.below(12) as usize;
+        let samplers: [Box<dyn Sampler>; 2] = [
+            Box::new(NeighborSampler::new(fanout, round)),
+            Box::new(LocalitySampler::new(fanout, 1usize << rng.below(6), round)),
+        ];
+        for s in &samplers {
+            let sub = s.sample(&g, round);
+            let sg = sub.graph();
+            assert_eq!(sg.num_vertices(), g.num_vertices());
+            let mut frontier = Vec::new();
+            for v in 0..g.num_vertices() as u32 {
+                let kept = sg.neighbors(v);
+                let full = g.neighbors(v);
+                assert_eq!(kept.len(), full.len().min(fanout), "{} v{v}", s.name());
+                assert!(kept.windows(2).all(|w| w[0] < w[1]), "{} v{v}", s.name());
+                assert!(kept.iter().all(|x| full.binary_search(x).is_ok()));
+                if !kept.is_empty() {
+                    frontier.push(v);
+                }
+            }
+            assert_eq!(sub.seeds(), frontier.as_slice(), "{}", s.name());
+        }
     }
 }
 
