@@ -1,0 +1,162 @@
+//! Multi-graph serving throughput: jobs/sec of one engine pool over a
+//! shared immutable graph set, and the value of shared-transpose
+//! caching.
+//!
+//! Two runs of the same backward-enabled job stream:
+//!
+//! * **shared store** — every job on a graph reuses that graph's
+//!   once-cached transpose (the production serve path);
+//! * **per-job graphs** — each job gets its own clone of its graph with
+//!   a cold transpose cache, so every backward job pays the O(E)
+//!   rebuild (what serving would cost without the shared store).
+//!
+//! The transpose counters pin the structural claim (1 per graph vs 1
+//! per job); the timing rows report what that buys end to end.
+
+mod common;
+
+use std::time::Instant;
+
+use lignn::config::SimConfig;
+use lignn::serve::{EnginePool, GraphStore, ServeJob, ServeRunner, WorkItem};
+use lignn::sim::runs::alpha_grid;
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn make_jobs(names: &[&str], n_jobs: usize) -> Vec<ServeJob> {
+    let grid = alpha_grid();
+    (0..n_jobs)
+        .map(|i| {
+            let mut cfg = SimConfig::default();
+            cfg.alpha = grid[(i / names.len()) % grid.len()];
+            cfg.backward = true; // the transpose-sharing story needs gradients
+            ServeJob::new(names[i % names.len()], cfg)
+        })
+        .collect()
+}
+
+fn main() {
+    let (spec, n_jobs) = if common::fast_mode() {
+        ("k=1024:d=8,k=2048:d=12", 8)
+    } else {
+        ("k=4096:d=8,k=16384:d=16", 32)
+    };
+    let store = GraphStore::from_spec(spec, 0xBEEF).unwrap();
+    let names = store.names();
+    let jobs = make_jobs(&names, n_jobs);
+
+    // Shared store: transposes cached once per graph.
+    let start = Instant::now();
+    let _ = ServeRunner::new(&store).run(&jobs).unwrap();
+    let shared_s = start.elapsed().as_secs_f64();
+    let shared_transposes = store.total_transposes();
+    assert_eq!(
+        shared_transposes,
+        store.len() as u64,
+        "shared store must transpose each graph exactly once"
+    );
+
+    // Per-job graphs: same pool, same configs, but each job owns a cold
+    // clone — every backward job performs its own O(E) transpose. Driven
+    // through the raw EnginePool without the serial prewarm pass (with
+    // no sharing there is nothing to prewarm; a real per-job deployment
+    // would pay each transpose inside a parallel worker), so the timing
+    // comparison stays apples-to-apples.
+    let mut cold_store = GraphStore::new();
+    for (i, job) in jobs.iter().enumerate() {
+        cold_store
+            .insert(format!("job{i}"), store.get(&job.graph).unwrap().clone())
+            .unwrap();
+    }
+    let cold_items: Vec<WorkItem<'_>> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, job)| {
+            WorkItem::new(cold_store.get(&format!("job{i}")).unwrap(), job.cfg.clone())
+        })
+        .collect();
+    let start = Instant::now();
+    let _ = EnginePool::with_default_threads().run(&cold_items);
+    let cold_s = start.elapsed().as_secs_f64();
+    let cold_transposes = cold_store.total_transposes();
+    assert_eq!(
+        cold_transposes,
+        jobs.len() as u64,
+        "per-job graphs must pay one transpose per backward job"
+    );
+
+    // Per-tenant reports (untimed — serve() adds the per-graph reference
+    // runs, which would skew the throughput comparison; its reference
+    // extras reuse the already-cached transposes).
+    let outcome = ServeRunner::new(&store).serve(&jobs).unwrap();
+    assert_eq!(store.total_transposes(), shared_transposes, "references reuse the cache");
+
+    let rows = vec![
+        vec![
+            "shared store".to_string(),
+            format!("{}", jobs.len()),
+            format!("{}", store.len()),
+            format!("{shared_transposes}"),
+            format!("{:.1}", shared_s * 1e3),
+            format!("{:.1}", jobs.len() as f64 / shared_s.max(1e-9)),
+        ],
+        vec![
+            "per-job graphs".to_string(),
+            format!("{}", jobs.len()),
+            format!("{}", cold_store.len()),
+            format!("{cold_transposes}"),
+            format!("{:.1}", cold_s * 1e3),
+            format!("{:.1}", jobs.len() as f64 / cold_s.max(1e-9)),
+        ],
+    ];
+    print_table(
+        &format!("multi-graph serve throughput — {spec}"),
+        &["mode", "jobs", "graphs", "transposes", "elapsed ms", "jobs/s"],
+        &rows,
+    );
+    for report in &outcome.reports {
+        println!("{}", report.summary());
+    }
+    println!(
+        "shared-transpose caching: {} O(E) transposes instead of {} \
+         ({:.2}x wall-clock vs per-job graphs)",
+        shared_transposes,
+        cold_transposes,
+        cold_s / shared_s.max(1e-9),
+    );
+
+    common::write_result(
+        "serve_throughput",
+        &Json::obj(vec![
+            ("spec", Json::str(spec)),
+            ("jobs", Json::num(jobs.len() as f64)),
+            ("graphs", Json::num(store.len() as f64)),
+            ("shared_elapsed_s", Json::num(shared_s)),
+            ("shared_transposes", Json::num(shared_transposes as f64)),
+            ("shared_jobs_per_sec", Json::num(jobs.len() as f64 / shared_s.max(1e-9))),
+            ("cold_elapsed_s", Json::num(cold_s)),
+            ("cold_transposes", Json::num(cold_transposes as f64)),
+            ("cold_jobs_per_sec", Json::num(jobs.len() as f64 / cold_s.max(1e-9))),
+            (
+                "reports",
+                Json::Arr(
+                    outcome
+                        .reports
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("tenant", Json::str(r.tenant.clone())),
+                                ("jobs", Json::num(r.jobs() as f64)),
+                                ("mean_speedup", Json::num(r.mean_speedup())),
+                                (
+                                    "mean_activation_ratio",
+                                    Json::num(r.mean_activation_ratio()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+}

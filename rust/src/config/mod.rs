@@ -133,7 +133,11 @@ impl std::str::FromStr for GnnModel {
 
 /// One simulation run, fully specified. Defaults reproduce the paper's main
 /// setup: LJ-like graph, GCN, HBM, α=0.5, LG-T.
-#[derive(Debug, Clone)]
+///
+/// Equality is field-wise — two equal configs describe the bit-identical
+/// simulation, which is what lets the sweep and serve paths deduplicate
+/// their no-dropout reference runs against points already in the plan.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
     /// Which synthetic graph stands in for the paper's dataset.
     pub graph: GraphPreset,
@@ -257,6 +261,27 @@ impl SimConfig {
                 ))
             }
         }
+    }
+
+    /// Does this run drive the full graph's transposed edge stream (and
+    /// therefore want the graph's shared transpose cache populated)?
+    /// Sampled backward runs transpose their own per-epoch subgraphs
+    /// instead. The single source of truth for the sweep- and
+    /// serve-side prewarm decisions.
+    pub fn needs_shared_transpose(&self) -> bool {
+        self.backward && self.sampler == SamplerKind::Full
+    }
+
+    /// The no-dropout reference of this run — α = 0 with LG-A, which
+    /// degenerates to a pure pass-through. This is the baseline Figs
+    /// 7–14 (and the per-tenant serve reports) normalize against; every
+    /// other knob (graph, DRAM standard, sampler, schedule) is kept, so
+    /// the ratio isolates dropout + merge.
+    pub fn no_dropout_reference(&self) -> SimConfig {
+        let mut cfg = self.clone();
+        cfg.alpha = 0.0;
+        cfg.variant = Variant::A;
+        cfg
     }
 
     /// Metric-row label for the sampling policy (`full`, `neighbor@10`,
@@ -420,6 +445,45 @@ mod tests {
             c.sampler = kind;
             assert_eq!(c.build_sampler().name(), kind.name());
         }
+    }
+
+    #[test]
+    fn needs_shared_transpose_predicate() {
+        let mut c = SimConfig::default();
+        assert!(!c.needs_shared_transpose(), "forward-only never transposes");
+        c.backward = true;
+        assert!(c.needs_shared_transpose(), "full-batch backward shares the cache");
+        c.sampler = SamplerKind::Neighbor;
+        c.fanout = 8;
+        assert!(!c.needs_shared_transpose(), "sampled backward transposes subgraphs");
+    }
+
+    #[test]
+    fn no_dropout_reference_zeroes_only_dropout_knobs() {
+        let mut c = SimConfig::default();
+        c.alpha = 0.7;
+        c.variant = Variant::T;
+        c.sampler = SamplerKind::Locality;
+        c.fanout = 8;
+        c.backward = true;
+        let r = c.no_dropout_reference();
+        assert_eq!(r.alpha, 0.0);
+        assert_eq!(r.variant, Variant::A);
+        assert_eq!(r.sampler, c.sampler, "workload shape must survive");
+        assert_eq!(r.fanout, c.fanout);
+        assert!(r.backward);
+        // a config that already is the reference maps to itself
+        assert_eq!(r.no_dropout_reference(), r);
+        assert_ne!(r, c);
+    }
+
+    #[test]
+    fn config_equality_is_field_wise() {
+        let a = SimConfig::default();
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        b.seed += 1;
+        assert_ne!(a, b, "a different seed is a different simulation");
     }
 
     #[test]

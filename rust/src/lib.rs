@@ -29,6 +29,11 @@
 //! * [`sim`] — the phase-based [`sim::SimEngine`] plus the
 //!   [`sim::SweepRunner`] sweep executor that regenerate every figure
 //!   and table of the evaluation,
+//! * [`serve`] — multi-graph serving: a [`serve::GraphStore`] of named
+//!   immutable graphs (each with a once-cached transpose) and a
+//!   [`serve::ServeRunner`] engine pool pulling jobs off a shared
+//!   queue; the sweep path is a thin single-graph view over the same
+//!   [`serve::EnginePool`] scheduler,
 //! * [`analytic`] — the closed-form burst/row model of §3.3 and the
 //!   area/power cost model of §5.2.4,
 //! * [`dropout`] — element/burst/row-granular mask generation shared by the
@@ -124,6 +129,30 @@
 //! }
 //! ```
 //!
+//! Multi-graph serving (one engine pool over a shared immutable graph
+//! set: jobs from any tenant drain through a shared queue, each graph's
+//! transpose is computed at most once, and every tenant's report is
+//! normalized against its own graph's no-dropout baseline):
+//!
+//! ```no_run
+//! use lignn::config::SimConfig;
+//! use lignn::serve::{GraphStore, ServeJob, ServeRunner};
+//!
+//! let store = GraphStore::from_spec("k=1000:d=8,k=50000:d=16", 7).unwrap();
+//! let mut jobs = Vec::new();
+//! for (name, _graph) in store.iter() {
+//!     for alpha in [0.2, 0.5, 0.8] {
+//!         let mut cfg = SimConfig::default();
+//!         cfg.alpha = alpha;
+//!         jobs.push(ServeJob::new(name, cfg));
+//!     }
+//! }
+//! let outcome = ServeRunner::new(&store).serve(&jobs).unwrap();
+//! for report in &outcome.reports {
+//!     println!("{}", report.summary());
+//! }
+//! ```
+//!
 //! Custom phase composition (e.g. epochs with shared engine state):
 //!
 //! ```no_run
@@ -153,6 +182,7 @@ pub mod lignn;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sample;
+pub mod serve;
 pub mod sim;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
@@ -160,5 +190,6 @@ pub mod util;
 
 pub use config::{SimConfig, Variant};
 pub use sample::{EpochSubgraph, Sampler, SamplerKind};
+pub use serve::{GraphStore, ServeJob, ServeReport, ServeRunner};
 pub use sim::metrics::Metrics;
 pub use sim::{Phase, SimEngine, SweepPlan, SweepRunner};

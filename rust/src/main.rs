@@ -8,6 +8,10 @@
 //!   sample        mini-batch sampling study: per-sampler subgraph
 //!                 locality and DRAM metrics (`--sampler`, `--fanout`;
 //!                 default compares full/neighbor/locality)
+//!   serve         multi-graph serving: one engine pool over a named
+//!                 graph set (`--graphs k=1000:d=8,k=50000:d=16`), N
+//!                 jobs pulled off a shared queue (`--jobs`), per-tenant
+//!                 reports normalized to each graph's own baseline
 //!   train         end-to-end PJRT training with burst/row dropout masks
 //!                 (requires the `pjrt` build feature)
 //!   table5        the full Table-5 accuracy grid (requires `pjrt`)
@@ -21,15 +25,17 @@
 use lignn::analytic::{AlgoDropoutModel, CostModel};
 use lignn::config::{GraphPreset, SamplerKind, SimConfig, Variant};
 use lignn::dram::AddressMapping;
+use lignn::serve::{GraphStore, ServeJob, ServeRunner};
 use lignn::sim::runs::alpha_grid;
 use lignn::sim::{run_sim, SweepPlan, SweepRunner};
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
 use lignn::util::error::{Error, Result};
 use lignn::util::json::Json;
+use lignn::util::par::default_threads;
 
-const COMMANDS: &str = "simulate | sweep | sample | train | table5 | graph-stats | report-cost \
-     | analytic | trace-replay";
+const COMMANDS: &str = "simulate | sweep | sample | serve | train | table5 | graph-stats \
+     | report-cost | analytic | trace-replay";
 
 fn sim_config(a: &Args) -> Result<SimConfig> {
     let mut cfg = SimConfig::default();
@@ -184,6 +190,7 @@ fn cmd_sample(a: &Args) -> Result<()> {
     let mapping = AddressMapping::new(&cfg.dram.config());
     let group = mapping.vertices_per_row_group(cfg.flen_bytes()) as usize;
     let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
     for (kind, m) in kinds.iter().zip(&results) {
         let mut point = cfg.clone();
         point.sampler = *kind;
@@ -202,6 +209,17 @@ fn cmd_sample(a: &Args) -> Result<()> {
             format!("{:.3}", m.reads_per_sampled_edge()),
             format!("{:.3}", m.exec_ns / 1e6),
         ]);
+        let mut obj = metrics_json(m);
+        if let Json::Obj(fields) = &mut obj {
+            fields.insert("epoch0_edges".into(), Json::num(sub.num_edges() as f64));
+            fields.insert("edge_coverage".into(), Json::num(sub.edge_coverage()));
+            fields.insert("same_group_rate".into(), Json::num(loc.same_group_rate()));
+        }
+        json_rows.push(obj);
+    }
+    if a.has("json") {
+        println!("{}", Json::Arr(json_rows));
+        return Ok(());
     }
     print_table(
         &format!(
@@ -226,6 +244,128 @@ fn cmd_sample(a: &Args) -> Result<()> {
             "exec ms",
         ],
         &rows,
+    );
+    Ok(())
+}
+
+/// Multi-graph serving: build the named graph set, synthesize `--jobs`
+/// jobs round-robin over the graphs (α cycling the paper's grid unless
+/// `--alpha` pins it), drain them through one engine pool, and report
+/// per-tenant rows normalized against each graph's own no-dropout
+/// baseline.
+fn cmd_serve(a: &Args) -> Result<()> {
+    let base = sim_config(a)?;
+    let spec = a.get("graphs").ok_or_else(|| {
+        Error::msg("need --graphs <spec> (e.g. --graphs k=1000:d=8,k=50000:d=16)")
+    })?;
+    let store = GraphStore::from_spec(spec, base.seed)?;
+    let n_jobs: usize = a.parse_or("jobs", 2 * store.len()).map_err(Error::msg)?;
+    if n_jobs == 0 {
+        return Err(Error::msg("need --jobs ≥ 1"));
+    }
+    let threads: usize = a.parse_or("threads", default_threads()).map_err(Error::msg)?;
+    let grid = alpha_grid();
+    let names = store.names();
+    let jobs: Vec<ServeJob> = (0..n_jobs)
+        .map(|i| {
+            let mut cfg = base.clone();
+            if a.get("alpha").is_none() {
+                // Heterogeneous serving by default: each tenant's job
+                // stream walks the α grid.
+                cfg.alpha = grid[(i / names.len()) % grid.len()];
+            }
+            ServeJob::new(names[i % names.len()], cfg)
+        })
+        .collect();
+
+    let start = std::time::Instant::now();
+    let outcome = ServeRunner::new(&store).with_threads(threads).serve(&jobs)?;
+    let elapsed_ms = start.elapsed().as_secs_f64() * 1e3;
+    let jobs_per_sec = jobs.len() as f64 / (elapsed_ms / 1e3).max(1e-9);
+
+    if a.has("json") {
+        let results: Vec<Json> = outcome
+            .results
+            .iter()
+            .map(|r| {
+                let mut obj = metrics_json(&r.metrics);
+                if let Json::Obj(fields) = &mut obj {
+                    // the store name, not the synthetic-preset label
+                    fields.insert("graph".into(), Json::str(r.graph.clone()));
+                    fields.insert("tenant".into(), Json::str(r.tenant.clone()));
+                    fields.insert("label".into(), Json::str(r.label.clone()));
+                }
+                obj
+            })
+            .collect();
+        let reports: Vec<Json> = outcome
+            .reports
+            .iter()
+            .map(|rep| {
+                Json::obj(vec![
+                    ("tenant", Json::str(rep.tenant.clone())),
+                    ("graph", Json::str(rep.graph.clone())),
+                    ("jobs", Json::num(rep.jobs() as f64)),
+                    ("mean_speedup", Json::num(rep.mean_speedup())),
+                    ("mean_activation_ratio", Json::num(rep.mean_activation_ratio())),
+                    ("total_exec_ns", Json::num(rep.total_exec_ns())),
+                    ("total_reads", Json::num(rep.total_reads() as f64)),
+                    ("total_activations", Json::num(rep.total_activations() as f64)),
+                    ("reference_reads", Json::num(rep.reference.dram.reads as f64)),
+                ])
+            })
+            .collect();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("graphs", Json::num(store.len() as f64)),
+                ("jobs", Json::num(jobs.len() as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("elapsed_ms", Json::num(elapsed_ms)),
+                ("jobs_per_sec", Json::num(jobs_per_sec)),
+                ("transposes", Json::num(store.total_transposes() as f64)),
+                ("results", Json::Arr(results)),
+                ("reports", Json::Arr(reports)),
+            ])
+        );
+        return Ok(());
+    }
+
+    let mut rows = Vec::new();
+    for rep in &outcome.reports {
+        for row in &rep.rows {
+            rows.push(vec![
+                rep.tenant.clone(),
+                rep.graph.clone(),
+                row.metrics.variant.clone(),
+                format!("{:.1}", row.alpha),
+                row.metrics.sampler.clone(),
+                format!("{:.3}", row.metrics.exec_ns / 1e6),
+                format!("{}", row.metrics.dram.reads),
+                format!("{}", row.metrics.dram.activations),
+                format!("{:.2}", row.speedup),
+                format!("{:.3}", row.activation_ratio),
+            ]);
+        }
+    }
+    print_table(
+        "multi-graph serve — rows normalized to each graph's own no-dropout baseline",
+        &[
+            "tenant", "graph", "variant", "alpha", "sampler", "exec ms", "reads", "acts",
+            "speedup", "act ratio",
+        ],
+        &rows,
+    );
+    for rep in &outcome.reports {
+        println!("{}", rep.summary());
+    }
+    println!(
+        "served {} jobs over {} graphs on {} threads in {elapsed_ms:.1} ms \
+         ({jobs_per_sec:.1} jobs/s, {} shared transposes)",
+        jobs.len(),
+        store.len(),
+        threads,
+        store.total_transposes(),
     );
     Ok(())
 }
@@ -407,7 +547,9 @@ fn usage() {
          engine flags: --layers N --epochs N --backward --channel-balance \\\n\
          --no-mask-writeback --trace <file> --graph-file <path>\n\
          sampling flags: --sampler full|neighbor|locality --fanout N|inf \\\n\
-         (sample: --compare runs all three policies)"
+         (sample: --compare runs all three policies)\n\
+         serve flags: --graphs k=N:d=D,...|presets --jobs N --threads N \\\n\
+         (α cycles the sweep grid unless --alpha pins it)"
     );
 }
 
@@ -416,6 +558,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
         Some("sample") => cmd_sample(args),
+        Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
         Some("table5") => cmd_table5(args),
         Some("graph-stats") => cmd_graph_stats(args),

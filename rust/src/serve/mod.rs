@@ -1,0 +1,45 @@
+//! Multi-graph serving: one engine pool over a shared immutable graph
+//! set.
+//!
+//! The sweep path answers "how does one graph behave across a plan of
+//! configurations"; production serving asks the converse — many
+//! workloads (tenants), each pinned to its own graph, contending for
+//! one process's simulation capacity. This module provides that:
+//!
+//! * [`GraphStore`] — a registry of named immutable [`CsrGraph`]s. Each
+//!   graph carries its own lazily-cached transpose (the `OnceLock`
+//!   trick the sweep runner used for one graph, generalized to N), so
+//!   any number of backward-enabled jobs on the same graph share a
+//!   single O(E) transpose;
+//! * [`EnginePool`] — the one scheduler both the sweep and serve paths
+//!   drive: [`WorkItem`]s (graph reference + [`SimConfig`]) are pulled
+//!   off a shared queue by worker threads that each recycle one burst
+//!   buffer across every item they execute
+//!   ([`SweepRunner`](crate::sim::SweepRunner) is a thin single-graph
+//!   view over this machinery);
+//! * [`ServeRunner`] — executes streams of [`ServeJob`]s (graph name +
+//!   config + tenant label) against a store and aggregates
+//!   [`ServeReport`]s: per-tenant metric rows normalized against *that
+//!   graph's own* no-dropout reference, so LiGNN's row-activation claim
+//!   is checked per tenant even when heterogeneous graphs contend for
+//!   the same simulated memory system.
+//!
+//! The no-dropout reference is deduplicated through the shared job
+//! machinery: when a tenant's job stream already contains the reference
+//! configuration (α = 0, LG-A), that result is reused instead of
+//! simulating the baseline twice — the same dedupe
+//! [`SweepRunner::normalized`](crate::sim::SweepRunner::normalized)
+//! performs on its α grid.
+//!
+//! [`CsrGraph`]: crate::graph::CsrGraph
+//! [`SimConfig`]: crate::config::SimConfig
+
+mod pool;
+mod report;
+mod runner;
+mod store;
+
+pub use pool::{EnginePool, WorkItem};
+pub use report::ServeReport;
+pub use runner::{JobResult, ServeJob, ServeOutcome, ServeRunner};
+pub use store::GraphStore;

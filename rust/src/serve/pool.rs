@@ -1,0 +1,157 @@
+//! [`EnginePool`]: the one work scheduler behind both the sweep and the
+//! serve paths.
+//!
+//! A [`WorkItem`] is the scheduler's unit: one fully-specified
+//! [`SimConfig`] to simulate against one shared immutable graph.
+//! [`EnginePool::run`] drains a batch of items through worker threads
+//! that pull off a shared queue (the atomic cursor inside
+//! [`par_map_init`]) and each recycle a single burst buffer across
+//! every item they execute — the cross-point amortization the figures
+//! (and now the serve throughput) depend on.
+
+use crate::config::SimConfig;
+use crate::graph::CsrGraph;
+use crate::lignn::Burst;
+use crate::sim::metrics::Metrics;
+use crate::sim::run_sim_with_buffer;
+use crate::util::par::{default_threads, par_map_init};
+
+/// One unit of pooled work: a config driven against a shared graph.
+#[derive(Debug)]
+pub struct WorkItem<'g> {
+    pub graph: &'g CsrGraph,
+    pub cfg: SimConfig,
+}
+
+impl<'g> WorkItem<'g> {
+    pub fn new(graph: &'g CsrGraph, cfg: SimConfig) -> WorkItem<'g> {
+        WorkItem { graph, cfg }
+    }
+
+    /// Does this item drive the full graph's transposed edge stream?
+    /// (Sampled backward items transpose their own per-epoch subgraphs,
+    /// so prewarming the shared cache would be wasted work.)
+    pub fn needs_shared_transpose(&self) -> bool {
+        self.cfg.needs_shared_transpose()
+    }
+}
+
+/// Fixed-width worker pool executing [`WorkItem`] batches.
+pub struct EnginePool {
+    threads: usize,
+}
+
+impl EnginePool {
+    pub fn new(threads: usize) -> EnginePool {
+        EnginePool { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the machine (physical parallelism − 1, at least 1).
+    pub fn with_default_threads() -> EnginePool {
+        EnginePool::new(default_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every item. Workers pull items off a shared queue, so a
+    /// long job never blocks the rest of the batch behind it; results
+    /// come back in item order regardless of completion order.
+    pub fn run(&self, items: &[WorkItem<'_>]) -> Vec<Metrics> {
+        par_map_init(
+            items,
+            self.threads,
+            Vec::<Burst>::new,
+            |buf, item| run_sim_with_buffer(&item.cfg, item.graph, buf),
+        )
+    }
+
+    /// Populate the transpose cache of every distinct graph a batch will
+    /// drive backward, before fanning out. The per-graph `OnceLock`
+    /// already guarantees at-most-one O(E) transpose under concurrency;
+    /// prewarming only stops workers from serializing on the first
+    /// backward item per graph.
+    pub fn prewarm_transposes(items: &[WorkItem<'_>]) {
+        let mut warmed: Vec<*const CsrGraph> = Vec::new();
+        for item in items {
+            if item.needs_shared_transpose() {
+                let key = item.graph as *const CsrGraph;
+                if !warmed.contains(&key) {
+                    let _ = item.graph.transposed();
+                    warmed.push(key);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphPreset, SamplerKind, Variant};
+    use crate::sim::run_sim;
+
+    fn tiny_cfg(alpha: f64) -> SimConfig {
+        SimConfig {
+            graph: GraphPreset::Tiny,
+            variant: Variant::T,
+            alpha,
+            flen: 64,
+            capacity: 256,
+            range: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pool_matches_serial_run_sim_in_item_order() {
+        let cfg = tiny_cfg(0.0);
+        let graph = cfg.build_graph();
+        let items: Vec<WorkItem> = [0.0, 0.3, 0.6]
+            .iter()
+            .map(|&alpha| WorkItem::new(&graph, tiny_cfg(alpha)))
+            .collect();
+        let out = EnginePool::new(4).run(&items);
+        assert_eq!(out.len(), 3);
+        for (item, m) in items.iter().zip(&out) {
+            let serial = run_sim(&item.cfg, &graph);
+            assert_eq!(m.alpha, item.cfg.alpha);
+            assert_eq!(m.dram.reads, serial.dram.reads, "α={}", item.cfg.alpha);
+            assert_eq!(m.exec_ns.to_bits(), serial.exec_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn prewarm_touches_only_full_batch_backward_graphs() {
+        let fwd = tiny_cfg(0.5);
+        let mut bwd = tiny_cfg(0.5);
+        bwd.backward = true;
+        let mut sampled_bwd = bwd.clone();
+        sampled_bwd.sampler = SamplerKind::Neighbor;
+        sampled_bwd.fanout = 4;
+
+        let g_fwd = fwd.build_graph();
+        let g_bwd = GraphPreset::Tiny.build(99);
+        let g_sub = GraphPreset::Tiny.build(101);
+        let items = vec![
+            WorkItem::new(&g_fwd, fwd),
+            WorkItem::new(&g_bwd, bwd.clone()),
+            WorkItem::new(&g_bwd, bwd),
+            WorkItem::new(&g_sub, sampled_bwd),
+        ];
+        assert!(!items[0].needs_shared_transpose());
+        assert!(items[1].needs_shared_transpose());
+        assert!(!items[3].needs_shared_transpose(), "subgraph transposes are per-item");
+        EnginePool::prewarm_transposes(&items);
+        assert_eq!(g_fwd.transpose_count(), 0);
+        assert_eq!(g_bwd.transpose_count(), 1, "two backward items share one prewarm");
+        assert_eq!(g_sub.transpose_count(), 0);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(EnginePool::new(0).threads(), 1);
+        assert!(EnginePool::with_default_threads().threads() >= 1);
+    }
+}

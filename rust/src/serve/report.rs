@@ -1,0 +1,166 @@
+//! [`ServeReport`]: per-tenant aggregation of a serve batch.
+//!
+//! Each tenant's jobs are normalized against *that graph's own*
+//! no-dropout reference (α = 0, LG-A), so the paper's row-activation
+//! claim can be checked tenant by tenant even when heterogeneous graphs
+//! share one process — a small graph's speedups are never diluted (or
+//! inflated) by a large co-tenant's absolute counters.
+
+use crate::sim::metrics::Metrics;
+use crate::sim::runs::NormalizedRow;
+
+/// One tenant's aggregated serving outcome.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub tenant: String,
+    pub graph: String,
+    /// The graph's no-dropout baseline every row is normalized against.
+    pub reference: Metrics,
+    /// One normalized row per job, in the tenant's submission order.
+    pub rows: Vec<NormalizedRow>,
+}
+
+impl ServeReport {
+    pub(crate) fn build<'a>(
+        tenant: String,
+        graph: String,
+        reference: Metrics,
+        metrics: impl Iterator<Item = &'a Metrics>,
+    ) -> ServeReport {
+        let rows = metrics
+            .map(|m| NormalizedRow {
+                alpha: m.alpha,
+                speedup: m.speedup_vs(&reference),
+                access_ratio: m.access_ratio_vs(&reference),
+                activation_ratio: m.activation_ratio_vs(&reference),
+                desired_ratio: m.desired_ratio_vs(&reference),
+                metrics: m.clone(),
+            })
+            .collect();
+        ServeReport { tenant, graph, reference, rows }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Summed simulated execution span across the tenant's jobs.
+    pub fn total_exec_ns(&self) -> f64 {
+        self.rows.iter().map(|r| r.metrics.exec_ns).sum()
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.rows.iter().map(|r| r.metrics.dram.reads).sum()
+    }
+
+    pub fn total_activations(&self) -> u64 {
+        self.rows.iter().map(|r| r.metrics.dram.activations).sum()
+    }
+
+    /// Geometric mean of the per-job speedups (ratios compose
+    /// multiplicatively; one outlier job must not swamp the tenant).
+    pub fn mean_speedup(&self) -> f64 {
+        geo_mean(self.rows.iter().map(|r| r.speedup))
+    }
+
+    /// Geometric mean of the per-job row-activation ratios — the
+    /// tenant-level form of the paper's 59–82% reduction claim.
+    pub fn mean_activation_ratio(&self) -> f64 {
+        geo_mean(self.rows.iter().map(|r| r.activation_ratio))
+    }
+
+    /// One-line tenant summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} on `{}`: {} jobs, exec {:.3}ms, {} reads, {} acts, \
+             mean speedup {:.2}x, mean act ratio {:.3}",
+            self.tenant,
+            self.graph,
+            self.jobs(),
+            self.total_exec_ns() / 1e6,
+            self.total_reads(),
+            self.total_activations(),
+            self.mean_speedup(),
+            self.mean_activation_ratio(),
+        )
+    }
+}
+
+fn geo_mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut log_sum, mut n) = (0.0f64, 0u32);
+    for x in xs {
+        log_sum += x.max(f64::MIN_POSITIVE).ln();
+        n += 1;
+    }
+    if n == 0 {
+        1.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphPreset, SimConfig, Variant};
+    use crate::sim::run_sim;
+
+    fn metrics(alpha: f64) -> Metrics {
+        let cfg = SimConfig {
+            graph: GraphPreset::Tiny,
+            variant: Variant::T,
+            alpha,
+            flen: 64,
+            capacity: 256,
+            range: 64,
+            ..Default::default()
+        };
+        run_sim(&cfg, &cfg.build_graph())
+    }
+
+    #[test]
+    fn report_rows_and_totals() {
+        let reference = metrics(0.0);
+        let (a, b) = (metrics(0.3), metrics(0.6));
+        let report = ServeReport::build(
+            "t".into(),
+            "g".into(),
+            reference.clone(),
+            [&a, &b].into_iter(),
+        );
+        assert_eq!(report.jobs(), 2);
+        assert_eq!(report.total_reads(), a.dram.reads + b.dram.reads);
+        assert_eq!(
+            report.total_activations(),
+            a.dram.activations + b.dram.activations
+        );
+        let expected_exec = a.exec_ns + b.exec_ns;
+        assert!((report.total_exec_ns() - expected_exec).abs() < 1e-9);
+        assert_eq!(report.rows[0].alpha, 0.3);
+        assert_eq!(report.rows[1].alpha, 0.6);
+        assert_eq!(
+            report.rows[0].speedup.to_bits(),
+            a.speedup_vs(&reference).to_bits()
+        );
+        let s = report.summary();
+        assert!(s.contains("t on `g`") && s.contains("2 jobs"), "{s}");
+    }
+
+    #[test]
+    fn geometric_means() {
+        let reference = metrics(0.0);
+        let report = ServeReport::build(
+            "t".into(),
+            "g".into(),
+            reference.clone(),
+            [&reference, &reference].into_iter(),
+        );
+        // self-normalized rows: every ratio is exactly 1
+        assert!((report.mean_speedup() - 1.0).abs() < 1e-12);
+        assert!((report.mean_activation_ratio() - 1.0).abs() < 1e-12);
+
+        let empty =
+            ServeReport::build("t".into(), "g".into(), reference, std::iter::empty());
+        assert_eq!(empty.mean_speedup(), 1.0, "empty report defaults neutral");
+    }
+}

@@ -1,0 +1,441 @@
+//! [`ServeRunner`]: execute [`ServeJob`] streams against a
+//! [`GraphStore`] and aggregate per-tenant [`ServeReport`]s.
+
+use crate::fail;
+use crate::config::SimConfig;
+use crate::graph::CsrGraph;
+use crate::sim::metrics::Metrics;
+use crate::util::error::Result;
+use crate::util::par::default_threads;
+
+use super::pool::{EnginePool, WorkItem};
+use super::report::ServeReport;
+use super::store::GraphStore;
+
+/// One serving request: a fully-specified simulation config against a
+/// named graph in the store, attributed to a tenant (defaults to the
+/// graph name — single-tenant-per-graph serving needs no extra labels).
+#[derive(Debug, Clone)]
+pub struct ServeJob {
+    pub graph: String,
+    pub tenant: String,
+    pub cfg: SimConfig,
+}
+
+impl ServeJob {
+    pub fn new(graph: impl Into<String>, cfg: SimConfig) -> ServeJob {
+        let graph = graph.into();
+        ServeJob { tenant: graph.clone(), graph, cfg }
+    }
+
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> ServeJob {
+        self.tenant = tenant.into();
+        self
+    }
+
+    /// Stable display label (also the sort key order-independence tests
+    /// compare under): tenant, graph, and the config axes that
+    /// distinguish jobs in practice.
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{} {} α={:.2} {}",
+            self.tenant,
+            self.graph,
+            self.cfg.variant.name(),
+            self.cfg.alpha,
+            self.cfg.sampler_label()
+        )
+    }
+}
+
+/// One job's outcome, tagged with its store/tenant attribution (the
+/// `Metrics.graph` field carries the synthetic-preset label, not the
+/// store name).
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub graph: String,
+    pub tenant: String,
+    pub label: String,
+    pub metrics: Metrics,
+}
+
+/// Everything one serve batch produced: per-job results in submission
+/// order plus per-tenant aggregated reports in first-seen order.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub results: Vec<JobResult>,
+    pub reports: Vec<ServeReport>,
+}
+
+/// Where a tenant group's no-dropout reference metrics come from:
+/// reused from a submitted job that already is the reference config, or
+/// one of the extra work items appended to the batch.
+enum RefSource {
+    Job(usize),
+    Extra(usize),
+}
+
+/// Executes [`ServeJob`] streams against one shared [`GraphStore`].
+///
+/// All jobs of a batch drain through one [`EnginePool`]: workers pull
+/// jobs off a shared queue and recycle per-worker burst buffers, and
+/// every job on the same graph shares that graph's cached transpose —
+/// a batch performs at most one O(E) transpose per graph, no matter
+/// how many backward jobs reference it.
+pub struct ServeRunner<'s> {
+    store: &'s GraphStore,
+    threads: usize,
+}
+
+impl<'s> ServeRunner<'s> {
+    pub fn new(store: &'s GraphStore) -> ServeRunner<'s> {
+        ServeRunner { store, threads: default_threads() }
+    }
+
+    /// Cap the worker count (default: physical parallelism − 1).
+    pub fn with_threads(mut self, threads: usize) -> ServeRunner<'s> {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn store(&self) -> &GraphStore {
+        self.store
+    }
+
+    /// Validate every job and resolve its graph reference. Fails before
+    /// any simulation runs, so a batch is all-or-nothing.
+    fn resolve(&self, jobs: &[ServeJob]) -> Result<Vec<&'s CsrGraph>> {
+        jobs.iter()
+            .map(|job| {
+                job.cfg
+                    .validate()
+                    .map_err(|e| fail!("job `{}`: {e}", job.label()))?;
+                self.store.get(&job.graph).ok_or_else(|| {
+                    fail!(
+                        "job `{}` references unknown graph `{}` (store has: {})",
+                        job.label(),
+                        job.graph,
+                        self.store.names().join(", ")
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// Execute `jobs` through the engine pool. Metrics come back in
+    /// submission order; results are independent of worker count and of
+    /// the order jobs were pulled off the queue (each simulation is a
+    /// pure function of its `(graph, config)`).
+    pub fn run(&self, jobs: &[ServeJob]) -> Result<Vec<Metrics>> {
+        let graphs = self.resolve(jobs)?;
+        let items: Vec<WorkItem<'_>> = jobs
+            .iter()
+            .zip(&graphs)
+            .map(|(job, &graph)| WorkItem::new(graph, job.cfg.clone()))
+            .collect();
+        EnginePool::prewarm_transposes(&items);
+        Ok(EnginePool::new(self.threads).run(&items))
+    }
+
+    /// Execute `jobs` and aggregate per-tenant [`ServeReport`]s, each
+    /// normalized against its own jobs' no-dropout reference (α = 0,
+    /// LG-A, every other knob kept). Groups are keyed by (tenant,
+    /// graph, reference config): a tenant mixing workload shapes —
+    /// say, full-batch and sampled jobs on one graph — gets one report
+    /// per shape instead of rows silently normalized against a
+    /// mismatched baseline.
+    ///
+    /// References ride the same pool run as the jobs, and are deduped:
+    /// a job that already *is* the reference config doubles as it, and
+    /// groups sharing a graph and reference config share one extra
+    /// simulation — each distinct reference is simulated at most once
+    /// per batch.
+    pub fn serve(&self, jobs: &[ServeJob]) -> Result<ServeOutcome> {
+        let graphs = self.resolve(jobs)?;
+
+        // Group job indices by (tenant, graph, reference config),
+        // first-seen order.
+        let refs: Vec<SimConfig> =
+            jobs.iter().map(|job| job.cfg.no_dropout_reference()).collect();
+        let mut groups: Vec<(String, String, SimConfig, Vec<usize>)> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            match groups.iter_mut().find(|(t, g, r, _)| {
+                *t == job.tenant && *g == job.graph && *r == refs[i]
+            }) {
+                Some((_, _, _, idxs)) => idxs.push(i),
+                None => groups.push((
+                    job.tenant.clone(),
+                    job.graph.clone(),
+                    refs[i].clone(),
+                    vec![i],
+                )),
+            }
+        }
+
+        // Pick each group's reference source, adding extra work items
+        // only for references no job (and no earlier group) covers.
+        let mut extras: Vec<(String, &'s CsrGraph, SimConfig)> = Vec::new();
+        let mut sources: Vec<RefSource> = Vec::new();
+        for (_, graph_name, ref_cfg, idxs) in &groups {
+            let source = if let Some(j) = jobs
+                .iter()
+                .position(|job| job.graph == *graph_name && job.cfg == *ref_cfg)
+            {
+                RefSource::Job(j)
+            } else if let Some(k) = extras
+                .iter()
+                .position(|(g, _, cfg)| g == graph_name && cfg == ref_cfg)
+            {
+                RefSource::Extra(k)
+            } else {
+                extras.push((graph_name.clone(), graphs[idxs[0]], ref_cfg.clone()));
+                RefSource::Extra(extras.len() - 1)
+            };
+            sources.push(source);
+        }
+
+        // One pool run. Reference extras go first: the no-dropout
+        // baselines are the most expensive simulations in the batch and
+        // must not be the last ones off the shared queue.
+        let mut items: Vec<WorkItem<'_>> = extras
+            .iter()
+            .map(|(_, graph, cfg)| WorkItem::new(graph, cfg.clone()))
+            .collect();
+        items.extend(
+            jobs.iter()
+                .zip(&graphs)
+                .map(|(job, &graph)| WorkItem::new(graph, job.cfg.clone())),
+        );
+        EnginePool::prewarm_transposes(&items);
+        let mut metrics = EnginePool::new(self.threads).run(&items);
+        let job_metrics = metrics.split_off(extras.len());
+        let extra_metrics = metrics;
+
+        let results: Vec<JobResult> = jobs
+            .iter()
+            .zip(job_metrics)
+            .map(|(job, m)| JobResult {
+                graph: job.graph.clone(),
+                tenant: job.tenant.clone(),
+                label: job.label(),
+                metrics: m,
+            })
+            .collect();
+        let reports = groups
+            .into_iter()
+            .zip(sources)
+            .map(|((tenant, graph, _, idxs), source)| {
+                let reference = match source {
+                    RefSource::Job(j) => results[j].metrics.clone(),
+                    RefSource::Extra(k) => extra_metrics[k].clone(),
+                };
+                ServeReport::build(
+                    tenant,
+                    graph,
+                    reference,
+                    idxs.iter().map(|&i| &results[i].metrics),
+                )
+            })
+            .collect();
+        Ok(ServeOutcome { results, reports })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphPreset, Variant};
+    use crate::sim::run_sim;
+
+    fn tiny_cfg(variant: Variant, alpha: f64) -> SimConfig {
+        SimConfig {
+            graph: GraphPreset::Tiny,
+            variant,
+            alpha,
+            flen: 64,
+            capacity: 256,
+            range: 64,
+            ..Default::default()
+        }
+    }
+
+    fn two_graph_store() -> GraphStore {
+        let mut store = GraphStore::new();
+        store.insert("warm", GraphPreset::Tiny.build(7)).unwrap();
+        store.insert("cold", GraphPreset::Tiny.build(99)).unwrap();
+        store
+    }
+
+    #[test]
+    fn run_matches_serial_per_job_and_keeps_order() {
+        let store = two_graph_store();
+        let jobs = vec![
+            ServeJob::new("warm", tiny_cfg(Variant::T, 0.5)),
+            ServeJob::new("cold", tiny_cfg(Variant::A, 0.2)),
+            ServeJob::new("warm", tiny_cfg(Variant::S, 0.0)),
+        ];
+        let out = ServeRunner::new(&store).with_threads(3).run(&jobs).unwrap();
+        assert_eq!(out.len(), 3);
+        for (job, m) in jobs.iter().zip(&out) {
+            let serial = run_sim(&job.cfg, store.get(&job.graph).unwrap());
+            assert_eq!(m.variant, job.cfg.variant.name());
+            assert_eq!(m.dram.reads, serial.dram.reads, "{}", job.label());
+            assert_eq!(m.dram.activations, serial.dram.activations);
+            assert_eq!(m.exec_ns.to_bits(), serial.exec_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn unknown_graph_and_invalid_cfg_fail_upfront() {
+        let store = two_graph_store();
+        let jobs = vec![ServeJob::new("missing", tiny_cfg(Variant::T, 0.5))];
+        let err = ServeRunner::new(&store).run(&jobs).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+        assert!(err.to_string().contains("warm"), "error lists the store: {err}");
+
+        let mut bad = tiny_cfg(Variant::T, 0.5);
+        bad.alpha = 1.5;
+        let jobs = vec![ServeJob::new("warm", bad)];
+        assert!(ServeRunner::new(&store).run(&jobs).is_err());
+        assert!(ServeRunner::new(&store).serve(&jobs).is_err());
+    }
+
+    #[test]
+    fn serve_reports_group_by_tenant_and_normalize() {
+        let store = two_graph_store();
+        let jobs = vec![
+            ServeJob::new("warm", tiny_cfg(Variant::T, 0.5)),
+            ServeJob::new("cold", tiny_cfg(Variant::T, 0.5)),
+            ServeJob::new("warm", tiny_cfg(Variant::T, 0.8)),
+        ];
+        let outcome = ServeRunner::new(&store).with_threads(2).serve(&jobs).unwrap();
+        assert_eq!(outcome.results.len(), 3);
+        assert_eq!(outcome.reports.len(), 2, "one report per (tenant, graph)");
+        let warm = &outcome.reports[0];
+        assert_eq!((warm.tenant.as_str(), warm.graph.as_str()), ("warm", "warm"));
+        assert_eq!(warm.jobs(), 2);
+        assert_eq!(outcome.reports[1].jobs(), 1);
+        for report in &outcome.reports {
+            // the reference is the graph's own no-dropout baseline
+            assert_eq!(report.reference.variant, "LG-A");
+            assert_eq!(report.reference.alpha, 0.0);
+            for row in &report.rows {
+                // row dropout at α>0 must beat the tenant's own baseline:
+                // strictly fewer read bursts and opened rows, and never
+                // slower (compute is variant-independent, so exec =
+                // max(mem, compute) can only fall)
+                assert!(
+                    row.metrics.dram.reads < report.reference.dram.reads,
+                    "{}: α={} did not cut reads",
+                    report.tenant,
+                    row.alpha
+                );
+                assert!(row.activation_ratio < 1.0, "{}", report.tenant);
+                assert!(row.speedup >= 1.0, "{}: speedup {}", report.tenant, row.speedup);
+            }
+        }
+        // distinct graphs → distinct baselines (the two R-MAT streams
+        // differ in edge count and/or traffic)
+        let (a, b) = (&outcome.reports[0].reference, &outcome.reports[1].reference);
+        assert!(
+            a.sampled_edges != b.sampled_edges || a.dram.reads != b.dram.reads,
+            "references of distinct graphs should differ"
+        );
+    }
+
+    #[test]
+    fn serve_reuses_a_job_that_is_the_reference() {
+        let store = two_graph_store();
+        // job 1 *is* warm's no-dropout reference config
+        let jobs = vec![
+            ServeJob::new("warm", tiny_cfg(Variant::T, 0.5)),
+            ServeJob::new("warm", tiny_cfg(Variant::A, 0.0)),
+        ];
+        let outcome = ServeRunner::new(&store).serve(&jobs).unwrap();
+        assert_eq!(outcome.reports.len(), 1);
+        let report = &outcome.reports[0];
+        // the reference row and job 1's result are the same simulation
+        assert_eq!(
+            report.reference.exec_ns.to_bits(),
+            outcome.results[1].metrics.exec_ns.to_bits()
+        );
+        // the α=0 LG-A job normalizes to exactly 1.0 against itself
+        let self_row = &report.rows[1];
+        assert_eq!(self_row.speedup.to_bits(), 1.0f64.to_bits());
+        assert_eq!(self_row.activation_ratio.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn tenants_sharing_a_graph_share_one_reference() {
+        let store = two_graph_store();
+        let jobs = vec![
+            ServeJob::new("warm", tiny_cfg(Variant::T, 0.5)).with_tenant("alice"),
+            ServeJob::new("warm", tiny_cfg(Variant::S, 0.5)).with_tenant("bob"),
+        ];
+        let outcome = ServeRunner::new(&store).serve(&jobs).unwrap();
+        assert_eq!(outcome.reports.len(), 2);
+        assert_eq!(outcome.reports[0].tenant, "alice");
+        assert_eq!(outcome.reports[1].tenant, "bob");
+        // both tenants normalize against the identical baseline run
+        assert_eq!(
+            outcome.reports[0].reference.exec_ns.to_bits(),
+            outcome.reports[1].reference.exec_ns.to_bits()
+        );
+        assert_eq!(
+            outcome.reports[0].reference.dram.reads,
+            outcome.reports[1].reference.dram.reads
+        );
+    }
+
+    #[test]
+    fn mixed_workload_shapes_split_into_shape_matched_reports() {
+        // One tenant, one graph, but a full-batch job and a sampled job:
+        // their no-dropout references differ, so they must land in
+        // separate reports — never normalized against the other shape's
+        // (much cheaper / more expensive) baseline.
+        let store = two_graph_store();
+        let full = tiny_cfg(Variant::T, 0.5);
+        let mut sampled = full.clone();
+        sampled.sampler = crate::config::SamplerKind::Neighbor;
+        sampled.fanout = 4;
+        let jobs = vec![
+            ServeJob::new("warm", full),
+            ServeJob::new("warm", sampled.clone()),
+        ];
+        let outcome = ServeRunner::new(&store).serve(&jobs).unwrap();
+        assert_eq!(outcome.reports.len(), 2, "one report per workload shape");
+        let (a, b) = (&outcome.reports[0], &outcome.reports[1]);
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.reference.sampler, "full");
+        assert_eq!(b.reference.sampler, sampled.sampler_label());
+        assert!(
+            b.reference.dram.reads < a.reference.dram.reads,
+            "the sampled shape's baseline is the cheaper one"
+        );
+        // each row still normalizes sanely against its own shape
+        for report in &outcome.reports {
+            assert_eq!(report.jobs(), 1);
+            assert!(report.rows[0].activation_ratio < 1.0);
+        }
+    }
+
+    #[test]
+    fn backward_batch_transposes_each_graph_once() {
+        let store = two_graph_store();
+        let mut cfg = tiny_cfg(Variant::S, 0.5);
+        cfg.backward = true;
+        let jobs: Vec<ServeJob> = (0..6)
+            .map(|i| {
+                let mut c = cfg.clone();
+                c.alpha = 0.1 * (i + 1) as f64;
+                ServeJob::new(if i % 2 == 0 { "warm" } else { "cold" }, c)
+            })
+            .collect();
+        ServeRunner::new(&store).with_threads(4).run(&jobs).unwrap();
+        for (name, g) in store.iter() {
+            assert_eq!(g.transpose_count(), 1, "graph `{name}`");
+        }
+        assert_eq!(store.total_transposes(), 2);
+    }
+}

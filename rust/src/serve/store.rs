@@ -1,0 +1,238 @@
+//! [`GraphStore`]: a registry of named immutable graphs.
+//!
+//! The store owns the graph set a serving process works against. Every
+//! entry is immutable after insertion; the per-graph transpose cache
+//! ([`CsrGraph::transposed`]) rides along with each instance, so all
+//! jobs referencing a graph — across tenants, across worker threads —
+//! share one lazily-computed transpose.
+
+use crate::config::GraphPreset;
+use crate::fail;
+use crate::graph::{generate, CsrGraph};
+use crate::util::error::{Error, Result};
+
+/// Decorrelates per-entry generator seeds when a spec builds several
+/// graphs from one base seed.
+const SPEC_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Largest `k=` vertex count `from_spec` accepts (the R-MAT address
+/// space is rounded up to a power of two; 2^26 already exceeds the
+/// paper's largest stand-in).
+const MAX_SPEC_VERTICES: u64 = 1 << 26;
+
+/// Named immutable graph set served by one process.
+///
+/// Entries keep insertion order (reports and round-robin job synthesis
+/// are deterministic) and names are unique. Lookups are linear — a
+/// serving process holds a handful of graphs, each worth megabytes; the
+/// registry is never the hot path.
+#[derive(Debug, Default)]
+pub struct GraphStore {
+    entries: Vec<(String, CsrGraph)>,
+}
+
+impl GraphStore {
+    pub fn new() -> GraphStore {
+        GraphStore { entries: Vec::new() }
+    }
+
+    /// Register `graph` under `name`. Names are unique and non-empty —
+    /// jobs address graphs by name, so a collision would silently
+    /// re-route tenants.
+    pub fn insert(&mut self, name: impl Into<String>, graph: CsrGraph) -> Result<()> {
+        let name = name.into();
+        if name.is_empty() {
+            return Err(Error::msg("graph name must be non-empty"));
+        }
+        if self.get(&name).is_some() {
+            return Err(fail!("duplicate graph name `{name}` in store"));
+        }
+        self.entries.push((name, graph));
+        Ok(())
+    }
+
+    /// Build and register a preset graph (deterministic in `seed`).
+    pub fn insert_preset(
+        &mut self,
+        name: impl Into<String>,
+        preset: GraphPreset,
+        seed: u64,
+    ) -> Result<()> {
+        self.insert(name, preset.build(seed))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&CsrGraph> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, g)| g)
+    }
+
+    /// Entry names in insertion order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// `(name, graph)` pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &CsrGraph)> {
+        self.entries.iter().map(|(n, g)| (n.as_str(), g))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total O(E) transpose computations performed across the store
+    /// (the serve acceptance bar: ≤ 1 per graph, no matter how many
+    /// backward jobs ran).
+    pub fn total_transposes(&self) -> u64 {
+        self.entries.iter().map(|(_, g)| g.transpose_count()).sum()
+    }
+
+    /// Build a store from a graph-set spec: comma-separated items, each
+    /// either a preset name (`tiny`, `small`, `lj`, …) or a synthetic
+    /// R-MAT shape `k=<vertices>:d=<avg degree>[:seed=<seed>]` — e.g.
+    /// `k=1000:d=8,k=50000:d=16`. The item string doubles as the graph
+    /// name. Vertex counts round up to the next power of two (the R-MAT
+    /// address space); the average degree applies to the rounded size.
+    /// Without an explicit `seed=`, entry `i` derives its stream from
+    /// `base_seed` and `i`, so same-shaped items at different positions
+    /// still produce distinct graphs.
+    pub fn from_spec(spec: &str, base_seed: u64) -> Result<GraphStore> {
+        let mut store = GraphStore::new();
+        for (i, item) in spec.split(',').enumerate() {
+            let item = item.trim();
+            if item.is_empty() {
+                return Err(fail!("empty graph spec item in `{spec}`"));
+            }
+            let seed = base_seed.wrapping_add(SPEC_SEED_STRIDE.wrapping_mul(i as u64));
+            let graph = build_spec_item(item, seed)?;
+            store.insert(item, graph)?;
+        }
+        if store.is_empty() {
+            return Err(Error::msg("graph spec names no graphs"));
+        }
+        Ok(store)
+    }
+}
+
+fn build_spec_item(item: &str, default_seed: u64) -> Result<CsrGraph> {
+    if let Ok(preset) = item.parse::<GraphPreset>() {
+        return Ok(preset.build(default_seed));
+    }
+    let (mut vertices, mut degree, mut seed) = (None, 8.0f64, default_seed);
+    for part in item.split(':') {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| fail!("bad spec part `{part}` in `{item}` (want key=value)"))?;
+        match key {
+            "k" => {
+                vertices = Some(
+                    val.parse::<u64>().map_err(|e| fail!("`{item}`: k={val}: {e}"))?,
+                )
+            }
+            "d" => degree = val.parse::<f64>().map_err(|e| fail!("`{item}`: d={val}: {e}"))?,
+            "seed" => {
+                seed = val.parse::<u64>().map_err(|e| fail!("`{item}`: seed={val}: {e}"))?
+            }
+            other => {
+                return Err(fail!(
+                    "unknown spec key `{other}` in `{item}` (want k=|d=|seed=, or a preset name)"
+                ))
+            }
+        }
+    }
+    let k = vertices
+        .ok_or_else(|| fail!("spec item `{item}` is neither a preset nor a k=…:d=… shape"))?;
+    if k < 2 {
+        return Err(fail!("`{item}`: need k ≥ 2 vertices"));
+    }
+    if k > MAX_SPEC_VERTICES {
+        return Err(fail!("`{item}`: k={k} exceeds the {MAX_SPEC_VERTICES}-vertex spec limit"));
+    }
+    if !(degree > 0.0) || !degree.is_finite() {
+        return Err(fail!("`{item}`: need a positive finite average degree, got {degree}"));
+    }
+    let log_n = k.next_power_of_two().trailing_zeros();
+    let n = 1u64 << log_n;
+    let edges = (n as f64 * degree) as u64;
+    // The preset trio's skew: power-law, self-similar — the regime the
+    // paper's datasets live in (see config::presets).
+    Ok(generate::rmat(log_n, edges, 0.57, 0.19, 0.19, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_and_order() {
+        let mut store = GraphStore::new();
+        store.insert("a", GraphPreset::Tiny.build(1)).unwrap();
+        store.insert_preset("b", GraphPreset::Tiny, 2).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.names(), vec!["a", "b"]);
+        assert!(store.get("a").is_some());
+        assert!(store.get("c").is_none());
+        assert_eq!(store.iter().count(), 2);
+        assert_eq!(store.total_transposes(), 0);
+    }
+
+    #[test]
+    fn rejects_duplicate_and_empty_names() {
+        let mut store = GraphStore::new();
+        store.insert("g", GraphPreset::Tiny.build(1)).unwrap();
+        assert!(store.insert("g", GraphPreset::Tiny.build(2)).is_err());
+        assert!(store.insert("", GraphPreset::Tiny.build(3)).is_err());
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn spec_builds_shapes_and_presets() {
+        let store = GraphStore::from_spec("k=1000:d=8,k=4096:d=16,tiny", 7).unwrap();
+        assert_eq!(store.len(), 3);
+        // k=1000 rounds up to the 1024-vertex R-MAT address space
+        let g = store.get("k=1000:d=8").unwrap();
+        assert_eq!(g.num_vertices(), 1024);
+        let dense = store.get("k=4096:d=16").unwrap();
+        assert_eq!(dense.num_vertices(), 4096);
+        // ~d average degree minus dedup/self-loop losses
+        let avg = dense.num_edges() as f64 / dense.num_vertices() as f64;
+        assert!(avg > 6.0 && avg < 17.0, "avg degree {avg}");
+        assert_eq!(store.get("tiny").unwrap().num_vertices(), 1024);
+    }
+
+    #[test]
+    fn spec_is_deterministic_and_entries_decorrelate() {
+        let a = GraphStore::from_spec("k=512:d=6,k=512:d=6.5", 9).unwrap();
+        let b = GraphStore::from_spec("k=512:d=6,k=512:d=6.5", 9).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.1.targets(), y.1.targets(), "{}", x.0);
+        }
+        // same shape at different positions → different streams
+        let (first, second) = (a.get("k=512:d=6").unwrap(), a.get("k=512:d=6.5").unwrap());
+        assert_ne!(first.targets(), second.targets());
+        // explicit seed pins the stream regardless of position
+        let c = GraphStore::from_spec("k=512:d=6:seed=3", 9).unwrap();
+        let d = GraphStore::from_spec("k=512:d=6:seed=3", 1234).unwrap();
+        assert_eq!(
+            c.get("k=512:d=6:seed=3").unwrap().targets(),
+            d.get("k=512:d=6:seed=3").unwrap().targets()
+        );
+    }
+
+    #[test]
+    fn spec_rejects_malformed_items() {
+        assert!(GraphStore::from_spec("", 1).is_err());
+        assert!(GraphStore::from_spec("k=1000:d=8,,tiny", 1).is_err());
+        assert!(GraphStore::from_spec("d=8", 1).is_err(), "k is required");
+        assert!(GraphStore::from_spec("k=1", 1).is_err(), "k too small");
+        assert!(GraphStore::from_spec("k=zebra:d=8", 1).is_err());
+        assert!(GraphStore::from_spec("k=1024:deg=8", 1).is_err(), "unknown key");
+        assert!(GraphStore::from_spec("k=1024:d=-2", 1).is_err());
+        assert!(GraphStore::from_spec("nosuchpreset", 1).is_err());
+        assert!(GraphStore::from_spec("k=1024:d=8,k=1024:d=8", 1).is_err(), "dup name");
+        assert!(GraphStore::from_spec(&format!("k={}", 1u64 << 40), 1).is_err());
+    }
+}

@@ -603,8 +603,11 @@ pub fn run_sampled_sim(cfg: &SimConfig, graph: &CsrGraph, sampler: &dyn Sampler)
     run_schedule_with(&mut engine, graph, sampler)
 }
 
-/// [`run_sim`] with a caller-owned burst buffer recycled across runs
-/// (the sweep runner's per-worker scratch).
+/// [`run_sim`] with a caller-owned burst buffer recycled across runs —
+/// the per-worker entry point of the shared
+/// [`EnginePool`](crate::serve::EnginePool) scheduler: both sweep
+/// points and serve jobs reach the engine through this function, one
+/// recycled buffer per pool worker.
 pub fn run_sim_with_buffer(cfg: &SimConfig, graph: &CsrGraph, buf: &mut Vec<Burst>) -> Metrics {
     let mut engine = SimEngine::new(cfg);
     engine.recycle_buffer(buf);

@@ -3,20 +3,23 @@
 //!
 //! A [`SweepPlan`] is an ordered list of fully-specified sweep points; a
 //! [`SweepRunner`] executes a plan against one shared graph. The runner
-//! owns the cross-point amortization the figures depend on:
+//! is a thin single-graph view over the serve subsystem's
+//! [`EnginePool`](crate::serve::EnginePool) — sweep points and serve
+//! jobs drain through the same scheduler — and keeps the cross-point
+//! amortization the figures depend on:
 //!
 //! * the graph (and, for backward-enabled points, its transpose) is
 //!   built **once** and shared immutably across all points,
-//! * points run in parallel via [`par_map_init`], each worker recycling
-//!   one burst buffer across every point it executes.
+//! * points run in parallel, each pool worker recycling one burst
+//!   buffer across every point it executes.
 
 use crate::config::{SimConfig, Variant};
 use crate::graph::CsrGraph;
-use crate::lignn::Burst;
 use crate::sample::SamplerKind;
-use crate::util::par::{default_threads, par_map_init};
+use crate::serve::{EnginePool, WorkItem};
+use crate::util::par::default_threads;
 
-use super::driver::{run_sim, run_sim_with_buffer};
+use super::driver::run_sim;
 use super::metrics::Metrics;
 
 /// The α grid the paper sweeps (0.0 .. 0.9 in 0.1 steps; α=1 excluded as
@@ -108,9 +111,7 @@ impl SweepPlan {
     /// (Sampled backward points transpose their own per-epoch subgraphs,
     /// so prewarming the shared cache would be wasted work.)
     pub fn needs_transpose(&self) -> bool {
-        self.points
-            .iter()
-            .any(|c| c.backward && c.sampler == SamplerKind::Full)
+        self.points.iter().any(SimConfig::needs_shared_transpose)
     }
 }
 
@@ -135,21 +136,20 @@ impl<'g> SweepRunner<'g> {
         self.graph
     }
 
-    /// Execute every point (parallel, plan order preserved). Per-worker
-    /// burst buffers are recycled across the points each worker runs.
+    /// Execute every point (parallel, plan order preserved) through the
+    /// shared [`EnginePool`]; per-worker burst buffers are recycled
+    /// across the points each worker runs.
     pub fn run(&self, plan: &SweepPlan) -> Vec<Metrics> {
-        if plan.needs_transpose() {
-            // Populate the shared transpose cache before fanning out so
-            // the whole sweep performs exactly one O(E) transpose (workers
-            // would otherwise serialize on the OnceLock anyway).
-            let _ = self.graph.transposed();
-        }
-        par_map_init(
-            plan.points(),
-            self.threads,
-            Vec::<Burst>::new,
-            |buf, cfg| run_sim_with_buffer(cfg, self.graph, buf),
-        )
+        let items: Vec<WorkItem<'_>> = plan
+            .points()
+            .iter()
+            .map(|cfg| WorkItem::new(self.graph, cfg.clone()))
+            .collect();
+        // Populates the shared transpose cache before fanning out, so a
+        // backward-enabled sweep performs its one O(E) transpose without
+        // workers serializing on the OnceLock.
+        EnginePool::prewarm_transposes(&items);
+        EnginePool::new(self.threads).run(&items)
     }
 
     /// Run `base` for each α in `alphas`.
@@ -160,29 +160,56 @@ impl<'g> SweepRunner<'g> {
     /// The non-dropout reference run (α=0, LG-A degenerates to a pure
     /// pass-through) that Figs 7–14 normalize against.
     pub fn no_dropout_reference(&self, base: &SimConfig) -> Metrics {
-        let mut cfg = base.clone();
-        cfg.alpha = 0.0;
-        cfg.variant = Variant::A;
-        run_sim(&cfg, self.graph)
+        run_sim(&base.no_dropout_reference(), self.graph)
+    }
+
+    /// The plan [`normalized`](SweepRunner::normalized) executes, plus
+    /// the index of the reference point inside it. When the α grid
+    /// already contains the reference configuration (an α=0 point on an
+    /// LG-A base), that point doubles as the reference instead of being
+    /// simulated a second time; otherwise the reference runs as point 0
+    /// — first off the shared queue, since the no-dropout run is the
+    /// most expensive point and must not start last. Exposed so tests
+    /// can pin "the reference is simulated exactly once" — the plan's
+    /// points are exactly the simulations that run.
+    pub fn normalized_plan(base: &SimConfig, alphas: &[f64]) -> (SweepPlan, usize) {
+        let ref_cfg = base.no_dropout_reference();
+        let points: Vec<SimConfig> = alphas
+            .iter()
+            .map(|&alpha| {
+                let mut cfg = base.clone();
+                cfg.alpha = alpha;
+                cfg
+            })
+            .collect();
+        let mut plan = SweepPlan::new();
+        let ref_idx = match points.iter().position(|cfg| *cfg == ref_cfg) {
+            Some(i) => i,
+            None => {
+                plan.push(ref_cfg);
+                0
+            }
+        };
+        for cfg in points {
+            plan.push(cfg);
+        }
+        (plan, ref_idx)
     }
 
     /// Normalized rows (speedup, access ratio, activation ratio) against
-    /// the no-dropout reference. The reference runs as point 0 of the
-    /// same plan, so it executes concurrently with the α points instead
-    /// of serializing ahead of them.
+    /// the no-dropout reference. The reference runs inside the same plan
+    /// — concurrently with the α points — and is deduplicated against
+    /// them (see [`normalized_plan`](SweepRunner::normalized_plan)), so
+    /// an α grid that already contains the reference point simulates it
+    /// exactly once.
     pub fn normalized(&self, base: &SimConfig, alphas: &[f64]) -> (Metrics, Vec<NormalizedRow>) {
-        let mut ref_cfg = base.clone();
-        ref_cfg.alpha = 0.0;
-        ref_cfg.variant = Variant::A;
-        let mut plan = SweepPlan::new();
-        plan.push(ref_cfg);
-        for &alpha in alphas {
-            let mut cfg = base.clone();
-            cfg.alpha = alpha;
-            plan.push(cfg);
-        }
+        let (plan, ref_idx) = Self::normalized_plan(base, alphas);
         let mut results = self.run(&plan);
-        let reference = results.remove(0);
+        let reference = if plan.len() > alphas.len() {
+            results.remove(0)
+        } else {
+            results[ref_idx].clone()
+        };
         let rows = results
             .into_iter()
             .map(|m| NormalizedRow {
@@ -327,6 +354,44 @@ mod tests {
         assert_eq!(rows[0].sampler, "neighbor@2");
         assert_eq!(rows[1].sampler, "neighbor@8");
         assert!(rows[0].sampled_edges < rows[1].sampled_edges);
+    }
+
+    #[test]
+    fn normalized_reference_simulated_exactly_once_when_plan_contains_it() {
+        // An LG-A base whose α grid includes 0.0 already contains the
+        // no-dropout reference: the executed plan must not grow an extra
+        // point (the plan's points are exactly the simulations that run).
+        let base = tiny_cfg(Variant::A);
+        let (plan, ref_idx) = SweepRunner::normalized_plan(&base, &alpha_grid());
+        assert_eq!(plan.len(), alpha_grid().len(), "reference deduped");
+        assert_eq!(ref_idx, 0);
+
+        // An LG-T base's α=0 point still merges — it is *not* the LG-A
+        // pass-through reference, so the reference must stay a separate
+        // simulation, scheduled first (it is the most expensive point).
+        let base_t = tiny_cfg(Variant::T);
+        let (plan, ref_idx) = SweepRunner::normalized_plan(&base_t, &alpha_grid());
+        assert_eq!(plan.len(), alpha_grid().len() + 1);
+        assert_eq!(ref_idx, 0, "reference must run first off the queue");
+        assert_eq!(plan.points()[ref_idx], base_t.no_dropout_reference());
+    }
+
+    #[test]
+    fn normalized_dedup_is_result_neutral() {
+        // The deduped path must yield the same reference and rows as
+        // running the reference separately — and the α=0 row of an LG-A
+        // sweep normalizes to exactly 1.0 against itself.
+        let base = tiny_cfg(Variant::A);
+        let graph = base.build_graph();
+        let runner = SweepRunner::new(&graph).with_threads(3);
+        let (reference, rows) = runner.normalized(&base, &[0.0, 0.4]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].speedup.to_bits(), 1.0f64.to_bits());
+        assert_eq!(rows[0].access_ratio.to_bits(), 1.0f64.to_bits());
+        assert_eq!(rows[0].metrics.dram.reads, reference.dram.reads);
+        let serial_ref = runner.no_dropout_reference(&base);
+        assert_eq!(reference.dram.reads, serial_ref.dram.reads);
+        assert_eq!(reference.exec_ns.to_bits(), serial_ref.exec_ns.to_bits());
     }
 
     #[test]

@@ -387,6 +387,51 @@ fn explicit_layers_one_equals_legacy() {
 }
 
 #[test]
+fn serve_runner_matches_sweep_runner_on_single_graph_store() {
+    // The sweep path is a thin view over the serve subsystem's engine
+    // pool: a ServeRunner on a single-graph store, running a SweepPlan's
+    // points as jobs, must reproduce SweepRunner::run field by field —
+    // merged (LG-T) and plain (LG-S) variants, α ∈ {0, 0.5}, with and
+    // without the backward phase. Both runners drive the *same* graph
+    // instance, so even the shared transpose cache is common.
+    use lignn::serve::{GraphStore, ServeJob, ServeRunner};
+    use lignn::sim::{SweepPlan, SweepRunner};
+
+    let mut store = GraphStore::new();
+    store
+        .insert("solo", GraphPreset::Tiny.build(SimConfig::default().seed))
+        .unwrap();
+    let graph = store.get("solo").unwrap();
+    for variant in [Variant::T, Variant::S] {
+        for backward in [false, true] {
+            let mut base = tiny_cfg(variant, 0.0);
+            base.backward = backward;
+            let plan = SweepPlan::alphas(&base, &[0.0, 0.5]);
+            let sweep = SweepRunner::new(graph).with_threads(3).run(&plan);
+            let jobs: Vec<ServeJob> = plan
+                .points()
+                .iter()
+                .map(|cfg| ServeJob::new("solo", cfg.clone()))
+                .collect();
+            let serve = ServeRunner::new(&store).with_threads(3).run(&jobs).unwrap();
+            assert_eq!(sweep.len(), serve.len());
+            for ((gold, new), cfg) in sweep.iter().zip(&serve).zip(plan.points()) {
+                let label =
+                    format!("serve {variant:?} α={} backward={backward}", cfg.alpha);
+                assert_metrics_identical(new, gold, &label);
+                assert_eq!(new.sampler, gold.sampler, "{label}: sampler");
+                assert_eq!(new.sampled_edges, gold.sampled_edges, "{label}: sampled_edges");
+            }
+        }
+    }
+    assert_eq!(
+        graph.transpose_count(),
+        1,
+        "both paths must share the store graph's single cached transpose"
+    );
+}
+
+#[test]
 fn fullbatch_sampler_matches_legacy() {
     // The FullBatch sampler spelled out — both through `cfg.sampler` and
     // through the explicit-sampler entry point — must reproduce the seed

@@ -174,6 +174,82 @@ fn locality_sampler_cuts_activations_vs_neighbor() {
 }
 
 #[test]
+fn cross_sampler_regression_matrix() {
+    // Every SamplerKind × {1, 2} layers × {1, 2} epochs on the small
+    // graph, checked in one table-driven pass. These invariants were
+    // previously pinned only at single configurations; the matrix makes
+    // them hold across the schedule axes. α=0 on the plain engine
+    // isolates the samplers from dropout.
+    let mut base = small_cfg(Variant::A, 0.0);
+    base.fanout = 8;
+    let g = base.build_graph();
+    let total_edges = g.num_edges() as u64;
+
+    let mut plan = lignn::SweepPlan::new();
+    let mut cells = Vec::new();
+    for layers in [1usize, 2] {
+        for epochs in [1usize, 2] {
+            for sampler in SamplerKind::ALL {
+                let mut cfg = base.clone();
+                cfg.layers = layers;
+                cfg.epochs = epochs;
+                cfg.sampler = sampler;
+                plan.push(cfg);
+                cells.push((layers, epochs, sampler));
+            }
+        }
+    }
+    let results = lignn::SweepRunner::new(&g).run(&plan);
+
+    for (&(layers, epochs, sampler), m) in cells.iter().zip(&results) {
+        let label = format!("{} layers={layers} epochs={epochs}", sampler.name());
+        // sampling can only shrink the driven edge stream
+        assert!(
+            m.sampled_edges <= epochs as u64 * total_edges,
+            "{label}: sampled {} > {} available",
+            m.sampled_edges,
+            epochs as u64 * total_edges
+        );
+        if sampler == SamplerKind::Full {
+            assert_eq!(m.sampled_edges, epochs as u64 * total_edges, "{label}");
+        } else {
+            assert!(
+                m.sampled_edges < epochs as u64 * total_edges,
+                "{label}: fanout 8 must drop edges on a heavy-tailed graph"
+            );
+        }
+        let rpe = m.reads_per_sampled_edge();
+        assert!(rpe.is_finite() && rpe > 0.0, "{label}: reads/edge = {rpe}");
+    }
+
+    // At equal fanout the locality sampler never opens more DRAM rows
+    // than uniform neighbor sampling — in every (layers, epochs) cell,
+    // not just the single configuration pinned elsewhere.
+    for layers in [1usize, 2] {
+        for epochs in [1usize, 2] {
+            let find = |kind: SamplerKind| {
+                cells
+                    .iter()
+                    .position(|&(l, e, s)| l == layers && e == epochs && s == kind)
+                    .expect("cell present")
+            };
+            let nei = &results[find(SamplerKind::Neighbor)];
+            let loc = &results[find(SamplerKind::Locality)];
+            assert_eq!(
+                nei.sampled_edges, loc.sampled_edges,
+                "equal per-vertex budget (layers={layers} epochs={epochs})"
+            );
+            assert!(
+                loc.dram.activations <= nei.dram.activations,
+                "layers={layers} epochs={epochs}: locality acts {} > neighbor acts {}",
+                loc.dram.activations,
+                nei.dram.activations
+            );
+        }
+    }
+}
+
+#[test]
 fn sampled_epoch_traffic_sits_between_zero_and_full() {
     let mut cfg = small_cfg(Variant::T, 0.5);
     let g = cfg.build_graph();

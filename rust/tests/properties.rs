@@ -11,6 +11,7 @@ use lignn::dropout::{Granularity, MaskGen};
 use lignn::lignn::{AddressCalc, Burst, Criteria, Lgt, RecMerger, RowPolicy};
 use lignn::lignn::Edge;
 use lignn::sample::{FullBatch, LocalitySampler, NeighborSampler, Sampler, SamplerKind};
+use lignn::serve::{GraphStore, ServeJob, ServeRunner};
 use lignn::sim::{run_sampled_sim, run_sim};
 use lignn::util::rng::Pcg64;
 
@@ -371,6 +372,118 @@ fn prop_sampled_subgraphs_are_valid_subsets() {
             assert_eq!(sub.seeds(), frontier.as_slice(), "{}", s.name());
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Serve path: scheduling must be invisible in the results
+// ---------------------------------------------------------------------
+
+fn serve_store() -> GraphStore {
+    let mut store = GraphStore::new();
+    store.insert("t7", GraphPreset::Tiny.build(7)).unwrap();
+    store.insert("t9", GraphPreset::Tiny.build(9)).unwrap();
+    store
+}
+
+/// A heterogeneous batch: both graphs, three variants, full-batch and
+/// sampled jobs, distinct labels throughout.
+fn serve_jobs() -> Vec<ServeJob> {
+    let cells = [
+        ("t7", Variant::T, 0.0),
+        ("t9", Variant::T, 0.2),
+        ("t7", Variant::S, 0.4),
+        ("t9", Variant::A, 0.5),
+        ("t7", Variant::T, 0.6),
+        ("t9", Variant::S, 0.8),
+    ];
+    cells
+        .into_iter()
+        .enumerate()
+        .map(|(i, (graph, variant, alpha))| {
+            let mut cfg = sampling_cfg(alpha);
+            cfg.variant = variant;
+            if i % 2 == 1 {
+                cfg.sampler = SamplerKind::Neighbor;
+                cfg.fanout = 4;
+            }
+            ServeJob::new(graph, cfg)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_serve_results_independent_of_worker_count() {
+    // Every job is a pure function of its (graph, config): the pool
+    // width must be invisible in the metrics, bit for bit.
+    let store = serve_store();
+    let jobs = serve_jobs();
+    let baseline = ServeRunner::new(&store).with_threads(1).run(&jobs).unwrap();
+    for threads in [2usize, 4, 7] {
+        let out = ServeRunner::new(&store).with_threads(threads).run(&jobs).unwrap();
+        assert_eq!(out.len(), baseline.len());
+        for ((a, b), job) in baseline.iter().zip(&out).zip(&jobs) {
+            assert_same_run(a, b, &format!("{} threads={threads}", job.label()));
+        }
+    }
+}
+
+#[test]
+fn prop_serve_results_independent_of_submission_order() {
+    // Shuffle the batch, run both orders, sort results by job label,
+    // and require bit-identical metrics pairwise.
+    let store = serve_store();
+    let jobs = serve_jobs();
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    let mut rng = Pcg64::new(47);
+    for i in (1..order.len()).rev() {
+        let j = rng.below(i as u32 + 1) as usize;
+        order.swap(i, j);
+    }
+    if order == (0..jobs.len()).collect::<Vec<_>>() {
+        order.rotate_left(1); // the seed happened to shuffle to identity
+    }
+    let shuffled: Vec<ServeJob> = order.iter().map(|&i| jobs[i].clone()).collect();
+
+    let runner = ServeRunner::new(&store).with_threads(3);
+    let straight = runner.run(&jobs).unwrap();
+    let permuted = runner.run(&shuffled).unwrap();
+
+    let mut a: Vec<(String, lignn::Metrics)> =
+        jobs.iter().map(ServeJob::label).zip(straight).collect();
+    let mut b: Vec<(String, lignn::Metrics)> =
+        shuffled.iter().map(ServeJob::label).zip(permuted).collect();
+    a.sort_by(|x, y| x.0.cmp(&y.0));
+    b.sort_by(|x, y| x.0.cmp(&y.0));
+    for ((la, ma), (lb, mb)) in a.iter().zip(&b) {
+        assert_eq!(la, lb, "label sets must match");
+        assert_same_run(ma, mb, la);
+    }
+}
+
+#[test]
+fn prop_serve_transposes_each_graph_at_most_once_under_concurrency() {
+    // Many concurrent backward jobs per graph; the store-wide invariant
+    // is at most one O(E) transpose per graph (the OnceLock cache), and
+    // zero for graphs that only see sampled-backward or no jobs at all.
+    let mut store = serve_store();
+    store.insert("idle", GraphPreset::Tiny.build(11)).unwrap();
+    let jobs: Vec<ServeJob> = (0..12)
+        .map(|i| {
+            let mut cfg = sampling_cfg(0.1 * (i % 8) as f64);
+            cfg.backward = true;
+            if i % 3 == 2 {
+                // sampled backward transposes its own per-epoch subgraph
+                cfg.sampler = SamplerKind::Neighbor;
+                cfg.fanout = 4;
+            }
+            ServeJob::new(if i % 2 == 0 { "t7" } else { "t9" }, cfg)
+        })
+        .collect();
+    ServeRunner::new(&store).with_threads(8).run(&jobs).unwrap();
+    assert_eq!(store.get("t7").unwrap().transpose_count(), 1, "t7");
+    assert_eq!(store.get("t9").unwrap().transpose_count(), 1, "t9");
+    assert_eq!(store.get("idle").unwrap().transpose_count(), 0, "idle");
+    assert_eq!(store.total_transposes(), 2);
 }
 
 #[test]
