@@ -147,10 +147,15 @@ fn main() {
                             Json::obj(vec![
                                 ("tenant", Json::str(r.tenant.clone())),
                                 ("jobs", Json::num(r.jobs() as f64)),
-                                ("mean_speedup", Json::num(r.mean_speedup())),
+                                (
+                                    "mean_speedup",
+                                    r.mean_speedup().map(Json::num).unwrap_or(Json::Null),
+                                ),
                                 (
                                     "mean_activation_ratio",
-                                    Json::num(r.mean_activation_ratio()),
+                                    r.mean_activation_ratio()
+                                        .map(Json::num)
+                                        .unwrap_or(Json::Null),
                                 ),
                             ])
                         })

@@ -8,7 +8,7 @@ pub use presets::{GraphPreset, SamplingPreset, SchedulePreset, WorkloadPreset};
 pub use crate::sample::SamplerKind;
 
 use crate::dram::standard::DramStandardKind;
-use crate::dram::AddressMapping;
+use crate::dram::{AddressMapping, ChannelSet, DramModel};
 use crate::graph::CsrGraph;
 use crate::sample::{FullBatch, LocalitySampler, NeighborSampler, Sampler};
 
@@ -182,6 +182,17 @@ pub struct SimConfig {
     /// (`usize::MAX` = unbounded, which degenerates to `Full`; ignored
     /// by the `Full` sampler).
     pub fanout: usize,
+    /// Layer-wise fanouts (GraphSAGE's per-hop budgets, `--fanout 10,5`):
+    /// when non-empty, layer `l` samples its *own* subgraph at
+    /// `fanouts[min(l, len-1)]` — missing tail entries repeat the last
+    /// budget. Empty (the default) keeps the single-`fanout` behaviour
+    /// bit-for-bit: one subgraph per epoch drives every layer.
+    pub fanouts: Vec<usize>,
+    /// Memory-channel partition: restrict this run to a subset of the
+    /// DRAM standard's channels (QoS tenant isolation). `None` (the
+    /// default) addresses the full device — bit-identical to the
+    /// pre-partitioning behaviour, as is an explicit full set.
+    pub channels: Option<ChannelSet>,
     /// Keep-side criteria `C` for Algorithm 2 (`any` | `channel-balance`).
     pub channel_balance: bool,
     /// Model §4.3's dropout-mask write-back (1 bit/element, sequential,
@@ -218,6 +229,8 @@ impl Default for SimConfig {
             epochs: 1,
             sampler: SamplerKind::Full,
             fanout: usize::MAX,
+            fanouts: Vec::new(),
+            channels: None,
             channel_balance: false,
             mask_writeback: true,
             backward: false,
@@ -239,22 +252,81 @@ impl SimConfig {
         (self.flen * 4) as u64
     }
 
+    /// The address mapping this run's DRAM traffic decodes through:
+    /// the standard's full mapping, or the channel-subset mapping when
+    /// the run is partitioned.
+    pub fn effective_mapping(&self) -> AddressMapping {
+        let dram_cfg = self.dram.config();
+        match &self.channels {
+            Some(set) => AddressMapping::with_channels(&dram_cfg, set),
+            None => AddressMapping::new(&dram_cfg),
+        }
+    }
+
+    /// Instantiate this run's DRAM device (channel-restricted when a
+    /// partition is set) — the one construction site the engine uses.
+    pub fn build_dram(&self) -> DramModel {
+        match &self.channels {
+            Some(set) => DramModel::with_channel_set(self.dram.config(), set),
+            None => DramModel::new(self.dram.config()),
+        }
+    }
+
+    /// Display label for the channel assignment (`all` or `0-1`-style).
+    pub fn channels_label(&self) -> String {
+        match &self.channels {
+            Some(set) => set.label(),
+            None => "all".to_string(),
+        }
+    }
+
+    /// The fanout budget of layer `l` (hop `l` of a layer-wise
+    /// `fanouts` list; the last entry repeats for deeper layers).
+    pub fn fanout_for_layer(&self, layer: usize) -> usize {
+        match self.fanouts.as_slice() {
+            [] => self.fanout,
+            fs => fs[layer.min(fs.len() - 1)],
+        }
+    }
+
+    /// Does this run sample a distinct subgraph per layer? (Layer-wise
+    /// fanouts under a sampled policy; the empty-`fanouts` single-value
+    /// form keeps the one-subgraph-per-epoch schedule.)
+    pub fn layerwise_sampling(&self) -> bool {
+        self.sampler != SamplerKind::Full && !self.fanouts.is_empty()
+    }
+
     /// Instantiate this run's sampling policy. The locality sampler's
     /// row-group geometry comes from the run's actual DRAM mapping and
     /// feature size, so "same row group" in the sampler is exactly "same
     /// row buffer" in the simulated device.
     pub fn build_sampler(&self) -> Box<dyn Sampler> {
+        self.sampler_with(self.fanout, 0)
+    }
+
+    /// The sampling policy of layer `layer` under layer-wise fanouts:
+    /// each hop gets its own budget and a decorrelated stream. Layer 0
+    /// is seed-identical to [`build_sampler`](Self::build_sampler), so a
+    /// `fanouts` list whose first entry equals `fanout` drives the same
+    /// first-hop subgraphs.
+    pub fn build_sampler_for_layer(&self, layer: usize) -> Box<dyn Sampler> {
+        self.sampler_with(self.fanout_for_layer(layer), layer as u64)
+    }
+
+    fn sampler_with(&self, fanout: usize, layer: u64) -> Box<dyn Sampler> {
         // Decorrelates the sampling stream from the dropout streams
-        // (both derive from `cfg.seed`).
+        // (both derive from `cfg.seed`), and hop streams from each other.
         const SAMPLE_SEED_SALT: u64 = 0x53_414D_504C_4521; // "SAMPLE!"
-        let seed = self.seed ^ SAMPLE_SEED_SALT;
+        const HOP_SEED_STRIDE: u64 = 0xD1B5_4A32_D192_ED03;
+        let seed =
+            (self.seed ^ SAMPLE_SEED_SALT).wrapping_add(HOP_SEED_STRIDE.wrapping_mul(layer));
         match self.sampler {
             SamplerKind::Full => Box::new(FullBatch),
-            SamplerKind::Neighbor => Box::new(NeighborSampler::new(self.fanout, seed)),
+            SamplerKind::Neighbor => Box::new(NeighborSampler::new(fanout, seed)),
             SamplerKind::Locality => {
-                let mapping = AddressMapping::new(&self.dram.config());
+                let mapping = self.effective_mapping();
                 Box::new(LocalitySampler::for_mapping(
-                    self.fanout,
+                    fanout,
                     &mapping,
                     self.flen_bytes(),
                     seed,
@@ -276,21 +348,36 @@ impl SimConfig {
     /// degenerates to a pure pass-through. This is the baseline Figs
     /// 7–14 (and the per-tenant serve reports) normalize against; every
     /// other knob (graph, DRAM standard, sampler, schedule) is kept, so
-    /// the ratio isolates dropout + merge.
+    /// the ratio isolates dropout + merge. `trace_path` is cleared: the
+    /// reference is a metrics baseline, and inheriting the job's path
+    /// would truncate the job's own trace (and make every traced job
+    /// its own reference group, defeating the dedupe).
     pub fn no_dropout_reference(&self) -> SimConfig {
         let mut cfg = self.clone();
         cfg.alpha = 0.0;
         cfg.variant = Variant::A;
+        cfg.trace_path = None;
         cfg
     }
 
     /// Metric-row label for the sampling policy (`full`, `neighbor@10`,
-    /// `locality@inf`, …).
+    /// `locality@inf`, `neighbor@10,5` for layer-wise fanouts, …).
     pub fn sampler_label(&self) -> String {
+        let budget = |f: usize| {
+            if f == usize::MAX {
+                "inf".to_string()
+            } else {
+                f.to_string()
+            }
+        };
         match self.sampler {
             SamplerKind::Full => "full".to_string(),
-            kind if self.fanout == usize::MAX => format!("{}@inf", kind.name()),
-            kind => format!("{}@{}", kind.name(), self.fanout),
+            kind if !self.fanouts.is_empty() => format!(
+                "{}@{}",
+                kind.name(),
+                self.fanouts.iter().map(|&f| budget(f)).collect::<Vec<_>>().join(",")
+            ),
+            kind => format!("{}@{}", kind.name(), budget(self.fanout)),
         }
     }
 
@@ -313,11 +400,24 @@ impl SimConfig {
                 self.layers, self.epochs
             ));
         }
-        if self.sampler != SamplerKind::Full && self.fanout == 0 {
+        if self.sampler != SamplerKind::Full
+            && (self.fanout == 0 || self.fanouts.contains(&0))
+        {
             return Err(format!(
                 "{} sampling needs fanout ≥ 1 (0 samples nothing)",
                 self.sampler.name()
             ));
+        }
+        if self.fanouts.len() > self.layers {
+            return Err(format!(
+                "{} layer-wise fanouts for {} layers — one budget per hop at most",
+                self.fanouts.len(),
+                self.layers
+            ));
+        }
+        if let Some(set) = &self.channels {
+            set.validate_for(self.dram.config().channels)
+                .map_err(|e| format!("channel partition on {}: {e}", self.dram.name()))?;
         }
         if self.layers > 1 {
             if !self.hidden.is_power_of_two() {
@@ -331,7 +431,9 @@ impl SimConfig {
             // are row-group multiples for any power-of-two capacity, so
             // alignment reduces to feat_base itself being row-group
             // aligned — reject here rather than panic inside the engine.
-            let group = crate::dram::AddressMapping::new(&self.dram.config()).row_group_bytes();
+            // (Checked against the *effective* mapping: a channel
+            // partition shrinks the row group.)
+            let group = self.effective_mapping().row_group_bytes();
             if self.feat_base % group != 0 {
                 return Err(format!(
                     "multi-layer runs need feat_base aligned to the {}-byte row group of {} (got {:#x})",
@@ -466,12 +568,14 @@ mod tests {
         c.sampler = SamplerKind::Locality;
         c.fanout = 8;
         c.backward = true;
+        c.trace_path = Some("/tmp/job.trace".into());
         let r = c.no_dropout_reference();
         assert_eq!(r.alpha, 0.0);
         assert_eq!(r.variant, Variant::A);
         assert_eq!(r.sampler, c.sampler, "workload shape must survive");
         assert_eq!(r.fanout, c.fanout);
         assert!(r.backward);
+        assert_eq!(r.trace_path, None, "the reference must not clobber the job's trace");
         // a config that already is the reference maps to itself
         assert_eq!(r.no_dropout_reference(), r);
         assert_ne!(r, c);
@@ -484,6 +588,81 @@ mod tests {
         assert_eq!(a, b);
         b.seed += 1;
         assert_ne!(a, b, "a different seed is a different simulation");
+    }
+
+    #[test]
+    fn layerwise_fanouts_budgets_and_label() {
+        let mut c = SimConfig::default();
+        c.sampler = SamplerKind::Neighbor;
+        c.layers = 3;
+        c.fanout = 10;
+        assert!(!c.layerwise_sampling(), "empty list keeps the single-fanout path");
+        assert_eq!(c.fanout_for_layer(0), 10);
+        assert_eq!(c.fanout_for_layer(2), 10);
+        c.fanouts = vec![10, 5];
+        assert!(c.layerwise_sampling());
+        assert_eq!(c.fanout_for_layer(0), 10);
+        assert_eq!(c.fanout_for_layer(1), 5);
+        assert_eq!(c.fanout_for_layer(2), 5, "tail repeats the last budget");
+        assert_eq!(c.sampler_label(), "neighbor@10,5");
+        assert!(c.validate().is_ok());
+        // more budgets than layers is a spec error
+        c.fanouts = vec![10, 5, 3, 2];
+        assert!(c.validate().is_err());
+        // a zero budget anywhere samples nothing
+        c.fanouts = vec![10, 0];
+        c.layers = 2;
+        assert!(c.validate().is_err());
+        // the Full sampler never goes layer-wise
+        c.sampler = SamplerKind::Full;
+        c.fanouts = vec![10, 5];
+        assert!(!c.layerwise_sampling());
+        assert_eq!(c.sampler_label(), "full");
+    }
+
+    #[test]
+    fn layer0_sampler_matches_uniform_sampler() {
+        // The layer-wise path's first hop must drive the exact subgraphs
+        // the single-fanout path drives (same policy, same seed stream).
+        let mut c = SimConfig::default();
+        c.graph = GraphPreset::Tiny;
+        c.sampler = SamplerKind::Neighbor;
+        c.fanout = 4;
+        let g = c.build_graph();
+        let uniform = c.build_sampler().sample(&g, 3);
+        c.fanouts = vec![4, 2];
+        c.layers = 2;
+        let hop0 = c.build_sampler_for_layer(0).sample(&g, 3);
+        assert_eq!(uniform.graph(), hop0.graph());
+        // deeper hops decorrelate even at equal budget
+        c.fanouts = vec![4, 4];
+        let hop1 = c.build_sampler_for_layer(1).sample(&g, 3);
+        assert_ne!(uniform.graph(), hop1.graph());
+    }
+
+    #[test]
+    fn channel_partition_validate_and_labels() {
+        use crate::dram::ChannelSet;
+        let mut c = SimConfig::default(); // HBM: 8 channels
+        assert_eq!(c.channels_label(), "all");
+        c.channels = Some(ChannelSet::parse("0-1").unwrap());
+        assert!(c.validate().is_ok());
+        assert_eq!(c.channels_label(), "0-1");
+        // subset mapping narrows the row group by the channel ratio
+        let full = {
+            let mut f = c.clone();
+            f.channels = None;
+            f.effective_mapping().row_group_bytes()
+        };
+        assert_eq!(c.effective_mapping().row_group_bytes(), full / 4);
+        // out-of-range and non-power-of-two subsets are rejected
+        c.channels = Some(ChannelSet::parse("6-9").unwrap());
+        assert!(c.validate().is_err());
+        c.channels = Some(ChannelSet::parse("0-2").unwrap());
+        assert!(c.validate().is_err());
+        // the reference keeps the partition (per-tenant baseline)
+        c.channels = Some(ChannelSet::parse("2-3").unwrap());
+        assert_eq!(c.no_dropout_reference().channels, c.channels);
     }
 
     #[test]

@@ -44,6 +44,13 @@ pub struct DramCounters {
     pub refreshes: u64,
     /// DRAM energy estimate in pJ.
     pub energy_pj: f64,
+    /// Row activations per physical channel (`channel_activations[c]` =
+    /// ACTs issued on channel `c`). Sized by [`DramModel`] at
+    /// construction; empty on a bare `DramCounters::default()`. This is
+    /// the attribution channel partitioning is audited with: a run
+    /// restricted to a [`ChannelSet`](super::mapping::ChannelSet) must
+    /// show zero activations outside its subset.
+    pub channel_activations: Vec<u64>,
 }
 
 impl Default for DramCounters {
@@ -58,6 +65,7 @@ impl Default for DramCounters {
             session_hist: vec![0; MAX_SESSION + 1],
             refreshes: 0,
             energy_pj: 0.0,
+            channel_activations: Vec::new(),
         }
     }
 }
@@ -97,6 +105,12 @@ impl DramCounters {
         for (a, b) in self.session_hist.iter_mut().zip(&other.session_hist) {
             *a += b;
         }
+        if self.channel_activations.len() < other.channel_activations.len() {
+            self.channel_activations.resize(other.channel_activations.len(), 0);
+        }
+        for (a, b) in self.channel_activations.iter_mut().zip(&other.channel_activations) {
+            *a += b;
+        }
     }
 }
 
@@ -129,7 +143,19 @@ pub struct DramModel {
 
 impl DramModel {
     pub fn new(cfg: DramConfig) -> DramModel {
-        let mapping = AddressMapping::new(&cfg);
+        Self::with_mapping(cfg, AddressMapping::new(&cfg))
+    }
+
+    /// Device restricted to a channel subset: every bank of every
+    /// physical channel still exists (partitions share the device), but
+    /// this instance's address mapping can only express — and therefore
+    /// only ever touches — the subset's channels.
+    pub fn with_channel_set(cfg: DramConfig, set: &super::mapping::ChannelSet) -> DramModel {
+        let mapping = AddressMapping::with_channels(&cfg, set);
+        Self::with_mapping(cfg, mapping)
+    }
+
+    fn with_mapping(cfg: DramConfig, mapping: AddressMapping) -> DramModel {
         let channels = (0..cfg.channels)
             .map(|_| Channel {
                 banks: (0..cfg.banks_per_channel()).map(|_| Bank::default()).collect(),
@@ -141,7 +167,9 @@ impl DramModel {
                 next_refresh: cfg.timing.t_refi,
             })
             .collect();
-        DramModel { cfg, mapping, channels, counters: DramCounters::default() }
+        let mut counters = DramCounters::default();
+        counters.channel_activations = vec![0; cfg.channels];
+        DramModel { cfg, mapping, channels, counters }
     }
 
     pub fn mapping(&self) -> &AddressMapping {
@@ -208,6 +236,7 @@ impl DramModel {
                 ch.next_act = act + t.t_rrd;
                 bank.open(loc.row, act);
                 self.counters.activations += 1;
+                self.counters.channel_activations[loc.channel as usize] += 1;
                 self.counters.energy_pj += self.cfg.energy.act_pj;
                 activated = true;
                 cmd = act + t.t_rcd;
@@ -222,6 +251,7 @@ impl DramModel {
                 ch.next_act = act + t.t_rrd;
                 bank.open(loc.row, act);
                 self.counters.activations += 1;
+                self.counters.channel_activations[loc.channel as usize] += 1;
                 self.counters.energy_pj += self.cfg.energy.act_pj;
                 activated = true;
                 cmd = act + t.t_rcd;
@@ -442,8 +472,41 @@ mod tests {
         a.reads = 3;
         b.reads = 4;
         b.record_session(5);
+        b.channel_activations = vec![1, 2];
         a.merge(&b);
         assert_eq!(a.reads, 7);
         assert_eq!(a.session_hist[5], 1);
+        assert_eq!(a.channel_activations, vec![1, 2], "merge grows the vector");
+    }
+
+    #[test]
+    fn channel_activations_partition_total() {
+        let mut d = hbm();
+        for i in 0..64u64 {
+            d.read_burst(i * 32 * 97, 0);
+        }
+        let c = &d.counters;
+        assert_eq!(c.channel_activations.len(), 8);
+        assert_eq!(c.channel_activations.iter().sum::<u64>(), c.activations);
+    }
+
+    #[test]
+    fn channel_set_model_only_touches_subset() {
+        use crate::dram::mapping::ChannelSet;
+        let set = ChannelSet::parse("2-3").unwrap();
+        let mut d = DramModel::with_channel_set(DramStandardKind::Hbm.config(), &set);
+        let mut rng_state = 0x9E37_79B9u64;
+        for _ in 0..2_000 {
+            rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            d.read_burst(rng_state % (1 << 28), 0);
+        }
+        assert!(d.counters.activations > 0);
+        for (c, &acts) in d.counters.channel_activations.iter().enumerate() {
+            if set.contains(c as u32) {
+                assert!(acts > 0, "member channel {c} unused");
+            } else {
+                assert_eq!(acts, 0, "activation escaped to channel {c}");
+            }
+        }
     }
 }

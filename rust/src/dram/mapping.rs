@@ -20,6 +20,166 @@
 
 use super::standard::DramConfig;
 
+/// Largest channel count any supported standard exposes. The mapping's
+/// logical→physical channel table is a fixed-size array of this length
+/// so [`AddressMapping`] stays `Copy`.
+pub const MAX_CHANNELS: usize = 16;
+
+/// A subset of a DRAM configuration's channels, as a bitmask.
+///
+/// This is the unit of memory-channel partitioning: a QoS tenant is
+/// assigned a `ChannelSet` and its runs address DRAM through an
+/// [`AddressMapping::with_channels`] mapping that stripes only across
+/// those channels — the tenant physically cannot open a row outside its
+/// subset. Subset sizes must be powers of two (the channel index is a
+/// bit-slice of the address, §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChannelSet {
+    mask: u64,
+}
+
+impl ChannelSet {
+    /// All channels of an `n`-channel configuration.
+    pub fn full(n: usize) -> ChannelSet {
+        assert!(n > 0 && n < 64, "channel count {n} out of range");
+        ChannelSet { mask: (1u64 << n) - 1 }
+    }
+
+    /// Subset from a raw bitmask (bit `c` ⇒ channel `c` included).
+    pub fn from_mask(mask: u64) -> Result<ChannelSet, String> {
+        if mask == 0 {
+            return Err("channel set must be non-empty".into());
+        }
+        Ok(ChannelSet { mask })
+    }
+
+    pub fn from_channels(ids: &[u32]) -> Result<ChannelSet, String> {
+        let mut mask = 0u64;
+        for &c in ids {
+            if c >= 64 {
+                return Err(format!("channel {c} out of range"));
+            }
+            mask |= 1 << c;
+        }
+        ChannelSet::from_mask(mask)
+    }
+
+    /// Parse a channel-subset spec: `+`-joined pieces, each a single
+    /// channel id or an inclusive `lo-hi` range — `0-1`, `4`, `0-1+4`.
+    /// (`+` rather than `,` so specs can ride inside comma-separated
+    /// tenant lists.)
+    pub fn parse(s: &str) -> Result<ChannelSet, String> {
+        let mut mask = 0u64;
+        for piece in s.split('+') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                return Err(format!("empty piece in channel spec `{s}`"));
+            }
+            let (lo, hi) = match piece.split_once('-') {
+                Some((a, b)) => (
+                    a.trim().parse::<u32>().map_err(|e| format!("`{piece}`: {e}"))?,
+                    b.trim().parse::<u32>().map_err(|e| format!("`{piece}`: {e}"))?,
+                ),
+                None => {
+                    let c = piece.parse::<u32>().map_err(|e| format!("`{piece}`: {e}"))?;
+                    (c, c)
+                }
+            };
+            if lo > hi {
+                return Err(format!("descending channel range `{piece}`"));
+            }
+            if hi >= 64 {
+                return Err(format!("channel {hi} out of range in `{piece}`"));
+            }
+            for c in lo..=hi {
+                mask |= 1 << c;
+            }
+        }
+        ChannelSet::from_mask(mask)
+    }
+
+    pub fn mask(&self) -> u64 {
+        self.mask
+    }
+
+    /// Number of channels in the subset.
+    pub fn len(&self) -> usize {
+        self.mask.count_ones() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mask == 0
+    }
+
+    pub fn contains(&self, channel: u32) -> bool {
+        channel < 64 && self.mask & (1 << channel) != 0
+    }
+
+    /// Does this subset cover exactly the `n` channels of a config?
+    pub fn is_full_for(&self, n: usize) -> bool {
+        n < 64 && self.mask == (1u64 << n) - 1
+    }
+
+    pub fn intersects(&self, other: &ChannelSet) -> bool {
+        self.mask & other.mask != 0
+    }
+
+    /// Member channel ids, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..64u32).filter(|&c| self.mask & (1 << c) != 0)
+    }
+
+    /// Fit check against an `n`-channel configuration: every member in
+    /// range, and a power-of-two size (the channel index is a bit-slice
+    /// of the address).
+    pub fn validate_for(&self, channels: usize) -> Result<(), String> {
+        if let Some(max) = self.iter().last() {
+            if max as usize >= channels {
+                return Err(format!(
+                    "channel {max} outside the {channels}-channel device"
+                ));
+            }
+        }
+        if !self.len().is_power_of_two() {
+            return Err(format!(
+                "channel subset size {} must be a power of two (bit-sliced index)",
+                self.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Compact display form: ascending runs joined by `+` (`0-1`,
+    /// `0-1+4`).
+    pub fn label(&self) -> String {
+        let ids: Vec<u32> = self.iter().collect();
+        let mut runs: Vec<(u32, u32)> = Vec::new();
+        for c in ids {
+            match runs.last_mut() {
+                Some((_, hi)) if *hi + 1 == c => *hi = c,
+                _ => runs.push((c, c)),
+            }
+        }
+        runs.iter()
+            .map(|&(lo, hi)| {
+                if lo == hi {
+                    lo.to_string()
+                } else {
+                    format!("{lo}-{hi}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+impl std::str::FromStr for ChannelSet {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ChannelSet::parse(s)
+    }
+}
+
 /// Decoded DRAM location of a physical address.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Loc {
@@ -32,7 +192,15 @@ pub struct Loc {
     pub col: u32,
 }
 
-/// Bit-slicing address mapping for one DRAM configuration.
+/// Bit-slicing address mapping for one DRAM configuration, optionally
+/// restricted to a [`ChannelSet`] subset of its channels.
+///
+/// Under a subset mapping the channel field narrows to
+/// `log2(subset size)` bits and the decoded logical index is remapped
+/// to the subset's physical channel ids — so every address a restricted
+/// mapping can express lands inside the subset, by construction. The
+/// full-set mapping uses the identity table and is bit-identical to the
+/// historical behaviour.
 #[derive(Debug, Clone, Copy)]
 pub struct AddressMapping {
     offset_bits: u32,
@@ -43,6 +211,8 @@ pub struct AddressMapping {
     ra_bits: u32,
     row_bits: u32,
     burst_bytes: u64,
+    /// Logical channel index → physical channel id.
+    ch_table: [u8; MAX_CHANNELS],
 }
 
 fn log2_exact(x: u64, what: &str) -> u32 {
@@ -52,16 +222,30 @@ fn log2_exact(x: u64, what: &str) -> u32 {
 
 impl AddressMapping {
     pub fn new(cfg: &DramConfig) -> AddressMapping {
+        Self::with_channels(cfg, &ChannelSet::full(cfg.channels))
+    }
+
+    /// Mapping restricted to `set`: addresses stripe only across the
+    /// subset's channels (and total capacity shrinks proportionally).
+    /// `set` must fit `cfg` (see [`ChannelSet::validate_for`]).
+    pub fn with_channels(cfg: &DramConfig, set: &ChannelSet) -> AddressMapping {
+        set.validate_for(cfg.channels).expect("channel subset must fit the device");
+        assert!(set.len() <= MAX_CHANNELS, "channel subset exceeds MAX_CHANNELS");
+        let mut ch_table = [0u8; MAX_CHANNELS];
+        for (i, c) in set.iter().enumerate() {
+            ch_table[i] = c as u8;
+        }
         let burst_bytes = cfg.burst_bytes();
         AddressMapping {
             offset_bits: log2_exact(burst_bytes, "burst_bytes"),
-            ch_bits: log2_exact(cfg.channels as u64, "channels"),
+            ch_bits: log2_exact(set.len() as u64, "channel subset size"),
             col_bits: log2_exact(cfg.bursts_per_row(), "bursts_per_row"),
             bg_bits: log2_exact(cfg.bankgroups as u64, "bankgroups"),
             ba_bits: log2_exact(cfg.banks_per_group as u64, "banks_per_group"),
             ra_bits: log2_exact(cfg.ranks as u64, "ranks"),
             row_bits: log2_exact(cfg.rows_per_bank as u64, "rows_per_bank"),
             burst_bytes,
+            ch_table,
         }
     }
 
@@ -87,11 +271,13 @@ impl AddressMapping {
         v
     }
 
-    /// Decode a physical address (wraps modulo capacity).
+    /// Decode a physical address (wraps modulo capacity). The channel
+    /// field decodes through the logical→physical table, so a
+    /// subset-restricted mapping only ever yields member channels.
     pub fn decode(&self, addr: u64) -> Loc {
         let mut shift = self.offset_bits;
         let a = addr;
-        let channel = Self::field(a, &mut shift, self.ch_bits);
+        let channel = self.ch_table[Self::field(a, &mut shift, self.ch_bits) as usize] as u32;
         let col = Self::field(a, &mut shift, self.col_bits);
         let bankgroup = Self::field(a, &mut shift, self.bg_bits);
         let bank = Self::field(a, &mut shift, self.ba_bits);
@@ -241,6 +427,86 @@ mod tests {
         let m = AddressMapping::new(&DramStandardKind::Ddr4.config());
         // 2ch × 16 banks × 64K rows × 8KB rows = 16 GiB
         assert_eq!(m.capacity_bytes(), 16u64 << 30);
+    }
+
+    #[test]
+    fn channel_set_parse_label_roundtrip() {
+        let s = ChannelSet::parse("0-1").unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(0) && s.contains(1) && !s.contains(2));
+        assert_eq!(s.label(), "0-1");
+        let s = ChannelSet::parse("0-1+4").unwrap();
+        assert_eq!(s.label(), "0-1+4");
+        assert_eq!(ChannelSet::parse("3").unwrap().label(), "3");
+        assert_eq!(ChannelSet::full(8).label(), "0-7");
+        assert!(ChannelSet::full(8).is_full_for(8));
+        assert!(!ChannelSet::parse("0-3").unwrap().is_full_for(8));
+        assert_eq!(ChannelSet::parse("2-7").unwrap().iter().collect::<Vec<_>>(),
+                   vec![2, 3, 4, 5, 6, 7]);
+        for bad in ["", "a", "5-2", "0-64", "1+", "0--3"] {
+            assert!(ChannelSet::parse(bad).is_err(), "`{bad}`");
+        }
+    }
+
+    #[test]
+    fn channel_set_validate_and_intersect() {
+        let cfg_channels = 8;
+        ChannelSet::parse("0-3").unwrap().validate_for(cfg_channels).unwrap();
+        ChannelSet::parse("6-7").unwrap().validate_for(cfg_channels).unwrap();
+        // out of range
+        assert!(ChannelSet::parse("6-9").unwrap().validate_for(cfg_channels).is_err());
+        // non-power-of-two size
+        assert!(ChannelSet::parse("0-2").unwrap().validate_for(cfg_channels).is_err());
+        let a = ChannelSet::parse("0-1").unwrap();
+        let b = ChannelSet::parse("2-7").unwrap();
+        assert!(!a.intersects(&b));
+        assert!(a.intersects(&ChannelSet::parse("1-2").unwrap()));
+    }
+
+    #[test]
+    fn full_subset_mapping_is_identity() {
+        let cfg = DramStandardKind::Hbm.config();
+        let full = AddressMapping::new(&cfg);
+        let explicit = AddressMapping::with_channels(&cfg, &ChannelSet::full(cfg.channels));
+        for addr in [0u64, 32, 256, 16 * 1024, 0x1234_5678] {
+            assert_eq!(full.decode(addr), explicit.decode(addr));
+            assert_eq!(full.row_key(addr), explicit.row_key(addr));
+        }
+        assert_eq!(full.capacity_bytes(), explicit.capacity_bytes());
+    }
+
+    #[test]
+    fn subset_mapping_confines_and_remaps_channels() {
+        let cfg = DramStandardKind::Hbm.config(); // 8 channels
+        let set = ChannelSet::parse("2-3").unwrap();
+        let m = AddressMapping::with_channels(&cfg, &set);
+        // capacity shrinks by the channel ratio (2 of 8)
+        assert_eq!(
+            m.capacity_bytes(),
+            AddressMapping::new(&cfg).capacity_bytes() / 4
+        );
+        // consecutive bursts alternate across exactly the two members
+        assert_eq!(m.decode(0).channel, 2);
+        assert_eq!(m.decode(32).channel, 3);
+        assert_eq!(m.decode(64).channel, 2);
+        // a dense scan never leaves the subset
+        for i in 0..4096u64 {
+            let l = m.decode(i * 32 * 7 + 5);
+            assert!(set.contains(l.channel), "addr decoded to channel {}", l.channel);
+        }
+        // row group spans only the subset's channels
+        assert_eq!(m.row_group_bytes(), 32 * 2 * 64);
+        // row keys of distinct member channels still differ
+        assert_ne!(m.row_key(0), m.row_key(32));
+    }
+
+    #[test]
+    fn single_channel_subset() {
+        let cfg = DramStandardKind::Hbm.config();
+        let m = AddressMapping::with_channels(&cfg, &ChannelSet::parse("5").unwrap());
+        for i in 0..256u64 {
+            assert_eq!(m.decode(i * 32).channel, 5);
+        }
     }
 
     #[test]

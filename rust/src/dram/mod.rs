@@ -16,5 +16,5 @@ pub mod mapping;
 pub mod standard;
 
 pub use controller::{DramCounters, DramModel};
-pub use mapping::{AddressMapping, Loc};
+pub use mapping::{AddressMapping, ChannelSet, Loc};
 pub use standard::{DramConfig, DramStandardKind};

@@ -34,6 +34,11 @@
 //!   [`serve::ServeRunner`] engine pool pulling jobs off a shared
 //!   queue; the sweep path is a thin single-graph view over the same
 //!   [`serve::EnginePool`] scheduler,
+//! * [`qos`] — the long-lived serving frontend: async job ingestion
+//!   ([`qos::IngestQueue`] accepts jobs while workers run), weighted-fair
+//!   per-tenant scheduling ([`qos::QosScheduler`]), and per-tenant DRAM
+//!   channel partitioning ([`qos::ChannelPartition`] over
+//!   [`dram::ChannelSet`]) with queue-wait/SLO/isolation reporting,
 //! * [`analytic`] — the closed-form burst/row model of §3.3 and the
 //!   area/power cost model of §5.2.4,
 //! * [`dropout`] — element/burst/row-granular mask generation shared by the
@@ -153,6 +158,30 @@
 //! }
 //! ```
 //!
+//! QoS serving (long-lived: jobs stream in while workers run; each
+//! tenant has a weighted-fair share and its own DRAM channel subset):
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use lignn::config::SimConfig;
+//! use lignn::qos::{QosEngine, TenantSet};
+//! use lignn::serve::{GraphStore, ServeJob};
+//!
+//! let store = Arc::new(GraphStore::from_spec("k=4096:d=8", 7).unwrap());
+//! let tenants = TenantSet::from_spec("fast:weight=2:channels=0-3,slow:channels=4-7").unwrap();
+//! let engine = QosEngine::start(store, tenants, 4).unwrap();
+//! for (i, alpha) in [0.2, 0.5, 0.8].into_iter().enumerate() {
+//!     let mut cfg = SimConfig::default();
+//!     cfg.alpha = alpha;
+//!     let tenant = if i % 2 == 0 { "fast" } else { "slow" };
+//!     engine.submit(ServeJob::new("k=4096:d=8", cfg).with_tenant(tenant)).unwrap();
+//! }
+//! let outcome = engine.finish().unwrap();
+//! for report in &outcome.reports {
+//!     println!("{}", report.summary()); // waits, SLO, isolation, act ratios
+//! }
+//! ```
+//!
 //! Custom phase composition (e.g. epochs with shared engine state):
 //!
 //! ```no_run
@@ -179,6 +208,7 @@ pub mod dram;
 pub mod dropout;
 pub mod graph;
 pub mod lignn;
+pub mod qos;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sample;
@@ -189,6 +219,7 @@ pub mod trainer;
 pub mod util;
 
 pub use config::{SimConfig, Variant};
+pub use qos::{QosEngine, TenantSet};
 pub use sample::{EpochSubgraph, Sampler, SamplerKind};
 pub use serve::{GraphStore, ServeJob, ServeReport, ServeRunner};
 pub use sim::metrics::Metrics;

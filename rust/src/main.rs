@@ -11,7 +11,11 @@
 //!   serve         multi-graph serving: one engine pool over a named
 //!                 graph set (`--graphs k=1000:d=8,k=50000:d=16`), N
 //!                 jobs pulled off a shared queue (`--jobs`), per-tenant
-//!                 reports normalized to each graph's own baseline
+//!                 reports normalized to each graph's own baseline;
+//!                 `--qos` switches to the long-lived frontend: async
+//!                 job ingestion, weighted-fair tenant scheduling and
+//!                 per-tenant DRAM channel partitioning
+//!                 (`--tenants a:weight=2:channels=0-1,b:channels=4-7`)
 //!   train         end-to-end PJRT training with burst/row dropout masks
 //!                 (requires the `pjrt` build feature)
 //!   table5        the full Table-5 accuracy grid (requires `pjrt`)
@@ -24,7 +28,7 @@
 
 use lignn::analytic::{AlgoDropoutModel, CostModel};
 use lignn::config::{GraphPreset, SamplerKind, SimConfig, Variant};
-use lignn::dram::AddressMapping;
+use lignn::qos::{QosEngine, TenantSet};
 use lignn::serve::{GraphStore, ServeJob, ServeRunner};
 use lignn::sim::runs::alpha_grid;
 use lignn::sim::{run_sim, SweepPlan, SweepRunner};
@@ -52,10 +56,23 @@ fn sim_config(a: &Args) -> Result<SimConfig> {
     cfg.layers = a.parse_or("layers", cfg.layers).map_err(Error::msg)?;
     cfg.epochs = a.parse_or("epochs", cfg.epochs).map_err(Error::msg)?;
     cfg.sampler = a.get_or("sampler", "full").parse().map_err(Error::msg)?;
-    cfg.fanout = match a.get("fanout") {
-        None | Some("inf") | Some("max") => cfg.fanout,
-        Some(v) => v.parse().map_err(|e| Error::msg(format!("--fanout {v}: {e}")))?,
-    };
+    // `--fanout 10` keeps the single-budget path; `--fanout 10,5` turns
+    // on layer-wise fanouts (hop l samples at its own budget).
+    if let Some(v) = a.get("fanout") {
+        let budgets: Vec<usize> = v
+            .split(',')
+            .map(|p| match p.trim() {
+                "inf" | "max" => Ok(usize::MAX),
+                p => p
+                    .parse::<usize>()
+                    .map_err(|e| Error::msg(format!("--fanout {v}: `{p}`: {e}"))),
+            })
+            .collect::<Result<_>>()?;
+        cfg.fanout = budgets[0];
+        if budgets.len() > 1 {
+            cfg.fanouts = budgets;
+        }
+    }
     cfg.channel_balance = a.has("channel-balance");
     if a.has("no-mask-writeback") {
         cfg.mask_writeback = false;
@@ -75,6 +92,12 @@ fn load_graph(a: &Args, cfg: &SimConfig) -> Result<lignn::graph::CsrGraph> {
     }
 }
 
+/// `null` for a mean that does not exist (empty report) — never a
+/// fabricated neutral number.
+fn json_opt(v: Option<f64>) -> Json {
+    v.map(Json::num).unwrap_or(Json::Null)
+}
+
 fn metrics_json(m: &lignn::Metrics) -> Json {
     Json::obj(vec![
         ("variant", Json::str(m.variant.clone())),
@@ -89,6 +112,12 @@ fn metrics_json(m: &lignn::Metrics) -> Json {
         ("reads", Json::num(m.dram.reads as f64)),
         ("writes", Json::num(m.dram.writes as f64)),
         ("activations", Json::num(m.dram.activations as f64)),
+        (
+            "channel_activations",
+            Json::Arr(
+                m.dram.channel_activations.iter().map(|&a| Json::num(a as f64)).collect(),
+            ),
+        ),
         ("row_hits", Json::num(m.dram.row_hits as f64)),
         ("mean_session", Json::num(m.dram.mean_session())),
         ("energy_pj", Json::num(m.energy.total_pj)),
@@ -187,7 +216,7 @@ fn cmd_sample(a: &Args) -> Result<()> {
     let plan = SweepPlan::samplers(&cfg, &kinds);
     let results = SweepRunner::new(&graph).run(&plan);
 
-    let mapping = AddressMapping::new(&cfg.dram.config());
+    let mapping = cfg.effective_mapping();
     let group = mapping.vertices_per_row_group(cfg.flen_bytes()) as usize;
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
@@ -259,6 +288,9 @@ fn cmd_serve(a: &Args) -> Result<()> {
         Error::msg("need --graphs <spec> (e.g. --graphs k=1000:d=8,k=50000:d=16)")
     })?;
     let store = GraphStore::from_spec(spec, base.seed)?;
+    if a.has("qos") {
+        return cmd_serve_qos(a, base, store);
+    }
     let n_jobs: usize = a.parse_or("jobs", 2 * store.len()).map_err(Error::msg)?;
     if n_jobs == 0 {
         return Err(Error::msg("need --jobs ≥ 1"));
@@ -306,8 +338,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
                     ("tenant", Json::str(rep.tenant.clone())),
                     ("graph", Json::str(rep.graph.clone())),
                     ("jobs", Json::num(rep.jobs() as f64)),
-                    ("mean_speedup", Json::num(rep.mean_speedup())),
-                    ("mean_activation_ratio", Json::num(rep.mean_activation_ratio())),
+                    ("mean_speedup", json_opt(rep.mean_speedup())),
+                    ("mean_activation_ratio", json_opt(rep.mean_activation_ratio())),
                     ("total_exec_ns", Json::num(rep.total_exec_ns())),
                     ("total_reads", Json::num(rep.total_reads() as f64)),
                     ("total_activations", Json::num(rep.total_activations() as f64)),
@@ -365,6 +397,162 @@ fn cmd_serve(a: &Args) -> Result<()> {
         jobs.len(),
         store.len(),
         threads,
+        store.total_transposes(),
+    );
+    Ok(())
+}
+
+/// QoS serving (`serve --qos`): a long-lived engine with async job
+/// ingestion, weighted-fair per-tenant scheduling, and per-tenant DRAM
+/// channel partitioning. Jobs are synthesized round-robin across
+/// tenants and graphs (α cycling the grid per tenant unless `--alpha`
+/// pins it) and *streamed* into the running engine; the per-tenant
+/// reports add queue-wait latency, SLO attainment, and the channel
+/// isolation audit to the usual normalized rows.
+fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
+    let tenants = match a.get("tenants") {
+        Some(spec) => TenantSet::from_spec(spec)?,
+        None => TenantSet::single("default"),
+    };
+    let n_jobs: usize =
+        a.parse_or("jobs", 2 * tenants.len() * store.len()).map_err(Error::msg)?;
+    if n_jobs == 0 {
+        return Err(Error::msg("need --jobs ≥ 1"));
+    }
+    let threads: usize = a.parse_or("threads", default_threads()).map_err(Error::msg)?;
+
+    let store = std::sync::Arc::new(store);
+    let engine = QosEngine::start(std::sync::Arc::clone(&store), tenants.clone(), threads)?;
+    let grid = alpha_grid();
+    let graph_names: Vec<String> = store.names().iter().map(|n| n.to_string()).collect();
+    let tenant_names = tenants.names();
+    // Walk the full tenant × graph cross product (tenant on the fast
+    // axis, graph on the slow one — a plain shared modulus would pin
+    // each tenant to a fixed graph subset whenever the counts share a
+    // factor), α advancing once per complete round.
+    let round = tenant_names.len() * graph_names.len();
+    for i in 0..n_jobs {
+        let mut cfg = base.clone();
+        if a.get("alpha").is_none() {
+            cfg.alpha = grid[(i / round) % grid.len()];
+        }
+        let graph = &graph_names[(i / tenant_names.len()) % graph_names.len()];
+        let job = ServeJob::new(graph.as_str(), cfg)
+            .with_tenant(tenant_names[i % tenant_names.len()]);
+        engine.submit(job)?;
+    }
+    let partition_desc = engine.partition().describe();
+    let outcome = engine.finish()?;
+
+    if a.has("json") {
+        let results: Vec<Json> = outcome
+            .results
+            .iter()
+            .map(|r| {
+                let mut obj = metrics_json(&r.metrics);
+                if let Json::Obj(fields) = &mut obj {
+                    fields.insert("graph".into(), Json::str(r.graph.clone()));
+                    fields.insert("tenant".into(), Json::str(r.tenant.clone()));
+                    fields.insert("label".into(), Json::str(r.label.clone()));
+                    fields.insert("queue_wait_ms".into(), Json::num(r.queue_wait_ms));
+                    fields.insert("run_ms".into(), Json::num(r.run_ms));
+                }
+                obj
+            })
+            .collect();
+        let reports: Vec<Json> = outcome
+            .reports
+            .iter()
+            .map(|rep| {
+                let (inside, outside) = rep.isolation.unwrap_or((0, 0));
+                Json::obj(vec![
+                    ("tenant", Json::str(rep.tenant().to_string())),
+                    ("graph", Json::str(rep.serve.graph.clone())),
+                    ("weight", Json::num(rep.weight)),
+                    (
+                        "channels",
+                        Json::str(
+                            rep.channels.map(|s| s.label()).unwrap_or_else(|| "all".into()),
+                        ),
+                    ),
+                    ("jobs", Json::num(rep.serve.jobs() as f64)),
+                    ("mean_speedup", json_opt(rep.serve.mean_speedup())),
+                    (
+                        "mean_activation_ratio",
+                        json_opt(rep.serve.mean_activation_ratio()),
+                    ),
+                    ("mean_wait_ms", Json::num(rep.wait.mean_wait_ms)),
+                    ("max_wait_ms", Json::num(rep.wait.max_wait_ms)),
+                    ("mean_run_ms", Json::num(rep.wait.mean_run_ms)),
+                    ("slo_ms", json_opt(rep.slo_ms)),
+                    ("slo_attainment", json_opt(rep.slo_attainment)),
+                    ("acts_inside_partition", Json::num(inside as f64)),
+                    ("acts_outside_partition", Json::num(outside as f64)),
+                    (
+                        "reference_activations",
+                        Json::num(rep.serve.reference.dram.activations as f64),
+                    ),
+                ])
+            })
+            .collect();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("graphs", Json::num(store.len() as f64)),
+                ("tenants", Json::num(tenants.len() as f64)),
+                ("jobs", Json::num(outcome.results.len() as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("partition", Json::str(partition_desc)),
+                ("elapsed_ms", Json::num(outcome.elapsed_ms)),
+                ("jobs_per_sec", Json::num(outcome.jobs_per_sec())),
+                ("transposes", Json::num(store.total_transposes() as f64)),
+                ("results", Json::Arr(results)),
+                ("reports", Json::Arr(reports)),
+            ])
+        );
+        return Ok(());
+    }
+
+    let mut rows = Vec::new();
+    for rep in &outcome.reports {
+        let channels =
+            rep.channels.map(|s| s.label()).unwrap_or_else(|| "all".to_string());
+        for row in &rep.serve.rows {
+            rows.push(vec![
+                rep.tenant().to_string(),
+                rep.serve.graph.clone(),
+                channels.clone(),
+                row.metrics.variant.clone(),
+                format!("{:.1}", row.alpha),
+                format!("{:.3}", row.metrics.exec_ns / 1e6),
+                format!("{}", row.metrics.dram.activations),
+                format!("{:.2}", row.speedup),
+                format!("{:.3}", row.activation_ratio),
+            ]);
+        }
+    }
+    print_table(
+        "QoS serve — per-tenant rows normalized to each group's own baseline \
+         (simulated inside the tenant's channel partition)",
+        &[
+            "tenant", "graph", "channels", "variant", "alpha", "exec ms", "acts", "speedup",
+            "act ratio",
+        ],
+        &rows,
+    );
+    println!("{partition_desc}");
+    for rep in &outcome.reports {
+        println!("{}", rep.summary());
+    }
+    println!(
+        "qos-served {} jobs from {} tenants over {} graphs on {} threads in {:.1} ms \
+         ({:.1} jobs/s, {} shared transposes)",
+        outcome.results.len(),
+        tenants.len(),
+        store.len(),
+        threads,
+        outcome.elapsed_ms,
+        outcome.jobs_per_sec(),
         store.total_transposes(),
     );
     Ok(())
@@ -546,10 +734,13 @@ fn usage() {
          --dram hbm|ddr4|gddr5 --variant A|B|R|S|T|M --alpha 0.5 --json\n\
          engine flags: --layers N --epochs N --backward --channel-balance \\\n\
          --no-mask-writeback --trace <file> --graph-file <path>\n\
-         sampling flags: --sampler full|neighbor|locality --fanout N|inf \\\n\
-         (sample: --compare runs all three policies)\n\
+         sampling flags: --sampler full|neighbor|locality --fanout N|inf|N,M,... \\\n\
+         (layer-wise budgets: --fanout 10,5; sample: --compare runs all three)\n\
          serve flags: --graphs k=N:d=D,...|presets --jobs N --threads N \\\n\
-         (α cycles the sweep grid unless --alpha pins it)"
+         (α cycles the sweep grid unless --alpha pins it)\n\
+         qos flags: serve --qos --tenants a:weight=2:channels=0-1,b:channels=4-7 \\\n\
+         (async ingest + weighted-fair scheduling + per-tenant DRAM channel \\\n\
+         partitioning; tenant keys: weight= channels= slo=)"
     );
 }
 

@@ -1,0 +1,473 @@
+//! [`QosEngine`]: the long-lived QoS serving frontend.
+//!
+//! Where [`ServeRunner`](crate::serve::ServeRunner) executes one closed
+//! batch, the QoS engine keeps a worker pool alive: jobs are
+//! [`submit`](QosEngine::submit)ted while workers are mid-simulation,
+//! admission order is decoupled from service order by the weighted-fair
+//! [`IngestQueue`], and every job is pinned inside its tenant's
+//! [`ChannelPartition`] before it can touch the queue. `finish` closes
+//! admissions, drains the backlog, runs the (deduplicated) no-dropout
+//! reference simulations, and folds everything into per-tenant
+//! [`QosReport`]s: the same normalized rows the serve path produces,
+//! plus queue-wait latency, SLO attainment, and the per-channel
+//! activation attribution that audits the partition.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::fail;
+use crate::lignn::Burst;
+use crate::serve::{
+    build_reports, plan_references, EnginePool, GraphStore, ServeJob, ServeReport, WorkItem,
+};
+use crate::sim::metrics::{Metrics, QueueWaitStats};
+use crate::sim::run_sim_with_buffer;
+use crate::util::error::{Error, Result};
+
+use super::partition::ChannelPartition;
+use super::queue::IngestQueue;
+use super::tenant::TenantSet;
+
+/// One completed job, in the worker that ran it.
+struct Completed {
+    id: u64,
+    job: ServeJob,
+    queue_wait_ms: f64,
+    run_ms: f64,
+    metrics: Metrics,
+}
+
+/// One job's outcome with its serving-latency bookkeeping.
+#[derive(Debug, Clone)]
+pub struct QosJobResult {
+    /// Submission id (results are returned sorted by it).
+    pub id: u64,
+    pub tenant: String,
+    pub graph: String,
+    pub label: String,
+    /// Wall-clock submit → worker-pickup wait.
+    pub queue_wait_ms: f64,
+    /// Wall-clock simulation span on the worker.
+    pub run_ms: f64,
+    pub metrics: Metrics,
+}
+
+/// One tenant group's aggregated QoS outcome: the serve path's
+/// normalized report plus the serving-side QoS signals.
+#[derive(Debug, Clone)]
+pub struct QosReport {
+    /// Normalized rows against the group's own no-dropout reference —
+    /// simulated under the *same* channel partition, so the activation
+    /// ratio isolates dropout+merge within the tenant's channel budget.
+    pub serve: ServeReport,
+    pub weight: f64,
+    /// The tenant's channel assignment (`None` = full device).
+    pub channels: Option<crate::dram::ChannelSet>,
+    /// Queue-wait / run-span aggregation over the group's jobs.
+    pub wait: QueueWaitStats,
+    pub slo_ms: Option<f64>,
+    /// Fraction of jobs whose wait+run met the SLO (`None` without one).
+    pub slo_attainment: Option<f64>,
+    /// Row activations `(inside, outside)` the tenant's channel subset,
+    /// summed over the group's jobs. `outside` must be 0 whenever
+    /// `channels` is set — the partition audit.
+    pub isolation: Option<(u64, u64)>,
+}
+
+impl QosReport {
+    pub fn tenant(&self) -> &str {
+        &self.serve.tenant
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let channels = match &self.channels {
+            Some(s) => s.label(),
+            None => "all".to_string(),
+        };
+        let slo = match (self.slo_ms, self.slo_attainment) {
+            (Some(target), Some(frac)) => {
+                format!(", slo {target:.0}ms met {:.0}%", frac * 100.0)
+            }
+            _ => String::new(),
+        };
+        format!(
+            "{} [w={} ch={channels}] wait {:.2}ms mean / {:.2}ms max{slo} — {}",
+            self.tenant(),
+            self.weight,
+            self.wait.mean_wait_ms,
+            self.wait.max_wait_ms,
+            self.serve.summary(),
+        )
+    }
+}
+
+/// Everything one QoS serving session produced.
+#[derive(Debug, Clone)]
+pub struct QosOutcome {
+    /// Per-job results in submission order.
+    pub results: Vec<QosJobResult>,
+    /// Per-(tenant, graph, workload-shape) reports, first-seen order.
+    pub reports: Vec<QosReport>,
+    /// Wall-clock span from engine start to drain.
+    pub elapsed_ms: f64,
+}
+
+impl QosOutcome {
+    pub fn jobs_per_sec(&self) -> f64 {
+        self.results.len() as f64 / (self.elapsed_ms / 1e3).max(1e-9)
+    }
+}
+
+/// Long-lived asynchronous serving frontend over a shared
+/// [`GraphStore`].
+pub struct QosEngine {
+    store: Arc<GraphStore>,
+    tenants: TenantSet,
+    partition: ChannelPartition,
+    queue: Arc<IngestQueue>,
+    done: Arc<Mutex<Vec<Completed>>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    started: Instant,
+}
+
+impl QosEngine {
+    /// Spawn `threads` workers over `store` (blocked until jobs arrive).
+    pub fn start(store: Arc<GraphStore>, tenants: TenantSet, threads: usize) -> Result<QosEngine> {
+        if store.is_empty() {
+            return Err(Error::msg("QoS engine needs a non-empty graph store"));
+        }
+        let threads = threads.max(1);
+        let partition = ChannelPartition::from_tenants(&tenants);
+        let queue = Arc::new(IngestQueue::new(&tenants));
+        let done = Arc::new(Mutex::new(Vec::new()));
+        let workers = (0..threads)
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let store = Arc::clone(&store);
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || {
+                    // One recycled burst buffer per worker, like the
+                    // engine pool's workers.
+                    let mut buf: Vec<Burst> = Vec::new();
+                    while let Some(pending) = queue.take() {
+                        let graph =
+                            store.get(&pending.job.graph).expect("graph validated at submit");
+                        let picked_up = Instant::now();
+                        let queue_wait_ms =
+                            picked_up.duration_since(pending.submitted).as_secs_f64() * 1e3;
+                        let metrics = run_sim_with_buffer(&pending.job.cfg, graph, &mut buf);
+                        let run_ms = picked_up.elapsed().as_secs_f64() * 1e3;
+                        done.lock().expect("qos results poisoned").push(Completed {
+                            id: pending.id,
+                            job: pending.job,
+                            queue_wait_ms,
+                            run_ms,
+                            metrics,
+                        });
+                    }
+                })
+            })
+            .collect();
+        Ok(QosEngine {
+            store,
+            tenants,
+            partition,
+            queue,
+            done,
+            workers,
+            threads,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn store(&self) -> &GraphStore {
+        &self.store
+    }
+
+    pub fn tenants(&self) -> &TenantSet {
+        &self.tenants
+    }
+
+    pub fn partition(&self) -> &ChannelPartition {
+        &self.partition
+    }
+
+    /// Admit one job: its tenant must be registered (the partition pins
+    /// the job inside the tenant's channel subset — jobs cannot opt
+    /// out), its config valid, its graph present in the store.
+    /// Returns the submission id. Jobs are accepted *while workers are
+    /// running* — this is the async-ingestion half of the subsystem.
+    pub fn submit(&self, mut job: ServeJob) -> Result<u64> {
+        self.partition.apply(&job.tenant, &mut job.cfg)?;
+        job.cfg.validate().map_err(|e| fail!("job `{}`: {e}", job.label()))?;
+        if self.store.get(&job.graph).is_none() {
+            return Err(fail!(
+                "job `{}` references unknown graph `{}` (store has: {})",
+                job.label(),
+                job.graph,
+                self.store.names().join(", ")
+            ));
+        }
+        self.queue.submit(job)
+    }
+
+    /// Jobs admitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.queue.submitted()
+    }
+
+    /// Jobs fully simulated so far (monotonic; safe to poll while
+    /// workers run).
+    pub fn completed(&self) -> usize {
+        self.done.lock().expect("qos results poisoned").len()
+    }
+
+    /// Jobs admitted but not yet picked up by a worker.
+    pub fn backlog(&self) -> usize {
+        self.queue.pending()
+    }
+
+    /// Close admissions, drain the backlog, and aggregate. Reference
+    /// simulations for normalization run after the drain (deduplicated
+    /// across tenants and against jobs that already are the reference,
+    /// exactly like [`ServeRunner::serve`](crate::serve::ServeRunner)),
+    /// each under its group's own channel partition.
+    pub fn finish(mut self) -> Result<QosOutcome> {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| Error::msg("QoS worker panicked"))?;
+        }
+        let elapsed_ms = self.started.elapsed().as_secs_f64() * 1e3;
+
+        let mut completed = std::mem::take(&mut *self.done.lock().expect("qos results poisoned"));
+        completed.sort_by_key(|c| c.id);
+
+        // Decompose by move (jobs and metrics are not cheap to clone —
+        // a long-lived session accumulates thousands of them); the
+        // latency triples stay parallel to both vectors.
+        let mut jobs: Vec<ServeJob> = Vec::with_capacity(completed.len());
+        let mut job_metrics: Vec<Metrics> = Vec::with_capacity(completed.len());
+        let mut latency: Vec<(u64, f64, f64)> = Vec::with_capacity(completed.len());
+        for c in completed {
+            jobs.push(c.job);
+            job_metrics.push(c.metrics);
+            latency.push((c.id, c.queue_wait_ms, c.run_ms));
+        }
+
+        // Reference runs ride a plain engine pool — the queue is closed,
+        // so weighted fairness no longer applies, and each reference
+        // config already carries its group's channel subset.
+        let plan = plan_references(&jobs);
+        let members: Vec<Vec<usize>> =
+            plan.groups.iter().map(|(_, _, _, idxs)| idxs.clone()).collect();
+        let extra_items: Vec<WorkItem<'_>> = plan
+            .extras
+            .iter()
+            .map(|(graph, cfg, _)| {
+                WorkItem::new(self.store.get(graph).expect("graph validated at submit"), cfg.clone())
+            })
+            .collect();
+        EnginePool::prewarm_transposes(&extra_items);
+        let extra_metrics = EnginePool::new(self.threads).run(&extra_items);
+        let serve_reports = build_reports(plan, &job_metrics, &extra_metrics);
+
+        let reports = serve_reports
+            .into_iter()
+            .zip(members)
+            .map(|(serve, idxs)| {
+                let spec = self
+                    .tenants
+                    .get(&serve.tenant)
+                    .expect("group tenants come from submitted jobs");
+                let wait = QueueWaitStats::collect(
+                    idxs.iter().map(|&i| (latency[i].1, latency[i].2)),
+                );
+                let slo_attainment = spec.slo_ms.map(|slo| {
+                    let met = idxs
+                        .iter()
+                        .filter(|&&i| latency[i].1 + latency[i].2 <= slo)
+                        .count();
+                    met as f64 / idxs.len().max(1) as f64
+                });
+                let isolation = spec.channels.map(|set| {
+                    let (mut inside, mut outside) = (0u64, 0u64);
+                    for &i in &idxs {
+                        let (i_acts, o_acts) = job_metrics[i].activation_split(&set);
+                        inside += i_acts;
+                        outside += o_acts;
+                    }
+                    (inside, outside)
+                });
+                QosReport {
+                    serve,
+                    weight: spec.weight,
+                    channels: spec.channels,
+                    wait,
+                    slo_ms: spec.slo_ms,
+                    slo_attainment,
+                    isolation,
+                }
+            })
+            .collect();
+
+        let results = jobs
+            .into_iter()
+            .zip(job_metrics)
+            .zip(latency)
+            .map(|((job, metrics), (id, queue_wait_ms, run_ms))| QosJobResult {
+                id,
+                label: job.label(),
+                tenant: job.tenant,
+                graph: job.graph,
+                queue_wait_ms,
+                run_ms,
+                metrics,
+            })
+            .collect();
+        Ok(QosOutcome { results, reports, elapsed_ms })
+    }
+}
+
+impl Drop for QosEngine {
+    /// Abandoned engines (dropped without [`finish`](QosEngine::finish))
+    /// still close the queue and join their workers — no detached
+    /// threads outlive the handle.
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphPreset, SimConfig, Variant};
+    use crate::sim::run_sim;
+
+    fn tiny_cfg(alpha: f64) -> SimConfig {
+        SimConfig {
+            graph: GraphPreset::Tiny,
+            variant: Variant::T,
+            alpha,
+            flen: 64,
+            capacity: 256,
+            range: 64,
+            ..Default::default()
+        }
+    }
+
+    fn store() -> Arc<GraphStore> {
+        let mut s = GraphStore::new();
+        s.insert("g", GraphPreset::Tiny.build(7)).unwrap();
+        Arc::new(s)
+    }
+
+    #[test]
+    fn submit_run_finish_roundtrip() {
+        let engine =
+            QosEngine::start(store(), TenantSet::from_spec("a:weight=2,b").unwrap(), 2).unwrap();
+        let alphas = [0.2, 0.5, 0.8];
+        for (i, &alpha) in alphas.iter().enumerate() {
+            let tenant = if i % 2 == 0 { "a" } else { "b" };
+            engine.submit(ServeJob::new("g", tiny_cfg(alpha)).with_tenant(tenant)).unwrap();
+        }
+        assert_eq!(engine.submitted(), 3);
+        let outcome = engine.finish().unwrap();
+        assert_eq!(outcome.results.len(), 3);
+        // submission order, regardless of completion order
+        for (r, &alpha) in outcome.results.iter().zip(&alphas) {
+            assert_eq!(r.metrics.alpha, alpha);
+            assert!(r.queue_wait_ms >= 0.0 && r.run_ms > 0.0);
+        }
+        // per-job metrics are the pure-function results
+        let g = GraphPreset::Tiny.build(7);
+        for r in &outcome.results {
+            let serial = run_sim(&tiny_cfg(r.metrics.alpha), &g);
+            assert_eq!(r.metrics.dram.reads, serial.dram.reads);
+            assert_eq!(r.metrics.exec_ns.to_bits(), serial.exec_ns.to_bits());
+        }
+        // one report per tenant, each normalized against the shared
+        // (deduplicated) no-dropout reference
+        assert_eq!(outcome.reports.len(), 2);
+        assert_eq!(outcome.reports[0].tenant(), "a");
+        assert_eq!(outcome.reports[0].weight, 2.0);
+        assert_eq!(
+            outcome.reports[0].serve.reference.exec_ns.to_bits(),
+            outcome.reports[1].serve.reference.exec_ns.to_bits(),
+            "tenants sharing a graph share one reference simulation"
+        );
+        for rep in &outcome.reports {
+            assert!(rep.isolation.is_none(), "unpartitioned tenants skip the audit");
+            for row in &rep.serve.rows {
+                assert!(row.activation_ratio < 1.0);
+            }
+            assert!(rep.summary().contains("ch=all"));
+        }
+        assert!(outcome.elapsed_ms > 0.0 && outcome.jobs_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn submit_validates_tenant_graph_and_cfg() {
+        let engine = QosEngine::start(store(), TenantSet::single("t"), 1).unwrap();
+        let ok = ServeJob::new("g", tiny_cfg(0.5)).with_tenant("t");
+        assert!(engine.submit(ok).is_ok());
+        let ghost = ServeJob::new("g", tiny_cfg(0.5)).with_tenant("ghost");
+        assert!(engine.submit(ghost).is_err(), "unregistered tenant");
+        let missing = ServeJob::new("nope", tiny_cfg(0.5)).with_tenant("t");
+        assert!(engine.submit(missing).is_err(), "unknown graph");
+        let mut bad = tiny_cfg(0.5);
+        bad.alpha = 1.5;
+        assert!(engine.submit(ServeJob::new("g", bad).with_tenant("t")).is_err());
+        let outcome = engine.finish().unwrap();
+        assert_eq!(outcome.results.len(), 1, "only the valid job ran");
+    }
+
+    #[test]
+    fn partitioned_tenants_carry_their_channel_sets() {
+        let tenants = TenantSet::from_spec("left:channels=0-3,right:channels=4-7").unwrap();
+        let engine = QosEngine::start(store(), tenants, 2).unwrap();
+        assert!(engine.partition().is_disjoint());
+        for tenant in ["left", "right"] {
+            for alpha in [0.0, 0.5] {
+                engine.submit(ServeJob::new("g", tiny_cfg(alpha)).with_tenant(tenant)).unwrap();
+            }
+        }
+        let outcome = engine.finish().unwrap();
+        assert_eq!(outcome.reports.len(), 2);
+        for rep in &outcome.reports {
+            let set = rep.channels.expect("partitioned tenant");
+            let (inside, outside) = rep.isolation.expect("audit present");
+            assert!(inside > 0, "{}: no activations inside its partition", rep.tenant());
+            assert_eq!(outside, 0, "{}: activations escaped the partition", rep.tenant());
+            // the reference was simulated under the same partition
+            let ref_split = rep.serve.reference.activation_split(&set);
+            assert!(ref_split.0 > 0 && ref_split.1 == 0, "reference escaped");
+            // LG-T vs the LG-A baseline under the same partition: merge
+            // (and dropout at α>0) must not inflate activations beyond
+            // scheduling noise.
+            assert!(rep.serve.rows.iter().all(|r| r.activation_ratio <= 1.05));
+        }
+        // per-job channel counters agree with the tenant assignment
+        for r in &outcome.results {
+            let acts = &r.metrics.dram.channel_activations;
+            let (lo, hi) = if r.tenant == "left" { (0, 4) } else { (4, 8) };
+            for (c, &a) in acts.iter().enumerate() {
+                if c < lo || c >= hi {
+                    assert_eq!(a, 0, "job {} touched channel {c}", r.label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drop_without_finish_joins_workers() {
+        let engine = QosEngine::start(store(), TenantSet::single("t"), 2).unwrap();
+        engine.submit(ServeJob::new("g", tiny_cfg(0.3)).with_tenant("t")).unwrap();
+        drop(engine); // must not hang or leak blocked workers
+    }
+}

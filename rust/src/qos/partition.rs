@@ -1,0 +1,135 @@
+//! [`ChannelPartition`]: the per-tenant DRAM channel assignment.
+//!
+//! Partitioning is enforced *structurally*: a tenant's jobs are rewritten
+//! to carry its [`ChannelSet`], and the engine builds their DRAM device
+//! from a channel-subset [`AddressMapping`](crate::dram::AddressMapping)
+//! whose address space simply cannot express a foreign channel. There is
+//! no runtime check to bypass — the isolation property test audits the
+//! resulting burst traces anyway.
+
+use crate::config::SimConfig;
+use crate::dram::ChannelSet;
+use crate::fail;
+use crate::util::error::Result;
+
+use super::tenant::TenantSet;
+
+/// Tenant → channel-subset assignment (registration order preserved).
+#[derive(Debug, Clone)]
+pub struct ChannelPartition {
+    entries: Vec<(String, Option<ChannelSet>)>,
+}
+
+impl ChannelPartition {
+    pub fn from_tenants(tenants: &TenantSet) -> ChannelPartition {
+        ChannelPartition {
+            entries: tenants.iter().map(|t| (t.name.clone(), t.channels)).collect(),
+        }
+    }
+
+    pub fn get(&self, tenant: &str) -> Option<Option<ChannelSet>> {
+        self.entries.iter().find(|(n, _)| n == tenant).map(|(_, s)| *s)
+    }
+
+    /// Are the partitioned tenants' subsets pairwise disjoint?
+    /// (Unpartitioned tenants share the whole device and are ignored —
+    /// a deployment mixing both has no isolation story, which
+    /// [`describe`](Self::describe) makes visible.)
+    pub fn is_disjoint(&self) -> bool {
+        let sets: Vec<&ChannelSet> =
+            self.entries.iter().filter_map(|(_, s)| s.as_ref()).collect();
+        for (i, a) in sets.iter().enumerate() {
+            for b in &sets[i + 1..] {
+                if a.intersects(b) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// How many tenants carry an explicit channel subset.
+    pub fn partitioned(&self) -> usize {
+        self.entries.iter().filter(|(_, s)| s.is_some()).count()
+    }
+
+    /// Pin `cfg` inside `tenant`'s partition. A subset covering the
+    /// whole device normalizes to `None`, so a full-channel tenant's
+    /// configs stay bit-identical (and dedupe-equal) to unpartitioned
+    /// ones. Fails for unknown tenants — jobs cannot opt out of the
+    /// partition by misspelling their attribution.
+    pub fn apply(&self, tenant: &str, cfg: &mut SimConfig) -> Result<()> {
+        let set = self.get(tenant).ok_or_else(|| {
+            fail!(
+                "unknown tenant `{tenant}` (registered: {})",
+                self.entries.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        cfg.channels = match set {
+            Some(s) if !s.is_full_for(cfg.dram.config().channels) => Some(s),
+            _ => None,
+        };
+        Ok(())
+    }
+
+    /// One-line description for logs/reports.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(n, s)| match s {
+                Some(s) => format!("{n}={}", s.label()),
+                None => format!("{n}=all"),
+            })
+            .collect();
+        let tag = if self.partitioned() == 0 {
+            "shared"
+        } else if self.is_disjoint() {
+            "disjoint"
+        } else {
+            "OVERLAPPING"
+        };
+        format!("channels[{tag}]: {}", parts.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::tenant::TenantSet;
+
+    fn partition(spec: &str) -> ChannelPartition {
+        ChannelPartition::from_tenants(&TenantSet::from_spec(spec).unwrap())
+    }
+
+    #[test]
+    fn disjointness_audit() {
+        assert!(partition("a:channels=0-1,b:channels=2-7").is_disjoint());
+        assert!(!partition("a:channels=0-3,b:channels=2-7").is_disjoint());
+        // unpartitioned tenants don't break disjointness of the rest
+        let p = partition("a:channels=0-1,b");
+        assert!(p.is_disjoint());
+        assert_eq!(p.partitioned(), 1);
+        assert!(p.describe().contains("a=0-1") && p.describe().contains("b=all"));
+        assert!(partition("a,b").describe().contains("shared"));
+        assert!(partition("a:channels=0-3,b:channels=2-7")
+            .describe()
+            .contains("OVERLAPPING"));
+    }
+
+    #[test]
+    fn apply_pins_and_normalizes() {
+        let p = partition("a:channels=0-1,full:channels=0-7,b");
+        let mut cfg = SimConfig::default(); // HBM: 8 channels
+        p.apply("a", &mut cfg).unwrap();
+        assert_eq!(cfg.channels.unwrap().label(), "0-1");
+        // a full-device subset normalizes to None (bit-identical configs)
+        p.apply("full", &mut cfg).unwrap();
+        assert!(cfg.channels.is_none());
+        // an unpartitioned tenant clears any stale subset
+        cfg.channels = Some(crate::dram::ChannelSet::parse("0-1").unwrap());
+        p.apply("b", &mut cfg).unwrap();
+        assert!(cfg.channels.is_none());
+        assert!(p.apply("ghost", &mut cfg).is_err());
+    }
+}

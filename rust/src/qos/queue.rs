@@ -1,0 +1,315 @@
+//! Job ingestion: the weighted-fair [`QosScheduler`] and the
+//! thread-safe [`IngestQueue`] wrapped around it.
+//!
+//! The serve path's [`EnginePool`](crate::serve::EnginePool) pops a
+//! closed batch off an atomic cursor — submission order *is* service
+//! order. QoS serving replaces that pop with start-time weighted fair
+//! queuing: each tenant owns a FIFO lane and a virtual time that
+//! advances by `1/weight` per served job; the scheduler always serves
+//! the backlogged lane with the smallest virtual time (registration
+//! order breaks ties). A weight-2 tenant therefore drains twice as fast
+//! as a weight-1 tenant under contention, and an idle tenant's lane
+//! re-enters at the current virtual now — returning from idle earns no
+//! monopoly.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::fail;
+use crate::serve::ServeJob;
+use crate::util::error::Result;
+
+use super::tenant::TenantSet;
+
+/// One queued job plus its admission bookkeeping.
+#[derive(Debug, Clone)]
+pub struct PendingJob {
+    /// Monotonic submission id (the outcome's result order).
+    pub id: u64,
+    pub job: ServeJob,
+    /// Wall-clock admission time (queue-wait measurement).
+    pub submitted: Instant,
+}
+
+struct Lane {
+    name: String,
+    weight: f64,
+    /// Served work normalized by weight — the WFQ virtual time.
+    vtime: f64,
+    queue: VecDeque<PendingJob>,
+}
+
+/// Weighted-fair multi-lane queue (single-threaded core; see
+/// [`IngestQueue`] for the concurrent wrapper).
+pub struct QosScheduler {
+    lanes: Vec<Lane>,
+    next_id: u64,
+    pending: usize,
+    /// Virtual time of the most recently served lane (pre-increment):
+    /// the "now" an idle lane re-enters at.
+    vnow: f64,
+}
+
+impl QosScheduler {
+    pub fn new(tenants: &TenantSet) -> QosScheduler {
+        QosScheduler {
+            lanes: tenants
+                .iter()
+                .map(|t| Lane {
+                    name: t.name.clone(),
+                    weight: t.weight,
+                    vtime: 0.0,
+                    queue: VecDeque::new(),
+                })
+                .collect(),
+            next_id: 0,
+            pending: 0,
+            vnow: 0.0,
+        }
+    }
+
+    pub fn lane_index(&self, tenant: &str) -> Option<usize> {
+        self.lanes.iter().position(|l| l.name == tenant)
+    }
+
+    /// Enqueue into lane `lane` (caller resolves the tenant); returns
+    /// the job's submission id.
+    pub fn push(&mut self, lane: usize, job: ServeJob) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let l = &mut self.lanes[lane];
+        if l.queue.is_empty() {
+            // Idle lanes rejoin at the current virtual now: unspent idle
+            // time is not a credit to burn the moment work arrives.
+            l.vtime = l.vtime.max(self.vnow);
+        }
+        l.queue.push_back(PendingJob { id, job, submitted: Instant::now() });
+        self.pending += 1;
+        id
+    }
+
+    /// Serve the backlogged lane with the smallest virtual time
+    /// (registration order breaks ties), advancing it by `1/weight`.
+    pub fn pop(&mut self) -> Option<PendingJob> {
+        let lane = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.queue.is_empty())
+            .min_by(|(_, a), (_, b)| a.vtime.total_cmp(&b.vtime))
+            .map(|(i, _)| i)?;
+        let l = &mut self.lanes[lane];
+        self.vnow = l.vtime;
+        l.vtime += 1.0 / l.weight;
+        self.pending -= 1;
+        l.queue.pop_front()
+    }
+
+    /// Jobs queued and not yet popped.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Jobs ever submitted.
+    pub fn submitted(&self) -> u64 {
+        self.next_id
+    }
+}
+
+struct QueueState {
+    sched: QosScheduler,
+    closed: bool,
+}
+
+/// Thread-safe ingestion front over [`QosScheduler`]: producers
+/// [`submit`](IngestQueue::submit) while worker threads block in
+/// [`take`](IngestQueue::take) — jobs flow in *while workers run*,
+/// unlike the batch-at-a-time serve path. [`close`](IngestQueue::close)
+/// lets workers drain the backlog and then exit.
+pub struct IngestQueue {
+    state: Mutex<QueueState>,
+    available: Condvar,
+}
+
+impl IngestQueue {
+    pub fn new(tenants: &TenantSet) -> IngestQueue {
+        IngestQueue {
+            state: Mutex::new(QueueState { sched: QosScheduler::new(tenants), closed: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Admit one job (its `tenant` must be registered). Fails after
+    /// [`close`](IngestQueue::close).
+    pub fn submit(&self, job: ServeJob) -> Result<u64> {
+        let mut st = self.state.lock().expect("ingest queue poisoned");
+        if st.closed {
+            return Err(fail!("ingest queue is closed; job `{}` rejected", job.label()));
+        }
+        let lane = st
+            .sched
+            .lane_index(&job.tenant)
+            .ok_or_else(|| fail!("job `{}`: unregistered tenant `{}`", job.label(), job.tenant))?;
+        let id = st.sched.push(lane, job);
+        drop(st);
+        self.available.notify_one();
+        Ok(id)
+    }
+
+    /// Stop admissions and wake every blocked worker; queued jobs still
+    /// drain.
+    pub fn close(&self) {
+        self.state.lock().expect("ingest queue poisoned").closed = true;
+        self.available.notify_all();
+    }
+
+    /// Next job by weighted-fair order; blocks while the queue is open
+    /// and empty, returns `None` once it is closed *and* drained.
+    pub fn take(&self) -> Option<PendingJob> {
+        let mut st = self.state.lock().expect("ingest queue poisoned");
+        loop {
+            if let Some(p) = st.sched.pop() {
+                return Some(p);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.available.wait(st).expect("ingest queue poisoned");
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.state.lock().expect("ingest queue poisoned").sched.pending()
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.state.lock().expect("ingest queue poisoned").sched.submitted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphPreset, SimConfig};
+
+    fn job(graph: &str, tenant: &str) -> ServeJob {
+        let mut cfg = SimConfig::default();
+        cfg.graph = GraphPreset::Tiny;
+        ServeJob::new(graph, cfg).with_tenant(tenant)
+    }
+
+    fn two_lane_sched() -> QosScheduler {
+        QosScheduler::new(&TenantSet::from_spec("a:weight=2,b:weight=1").unwrap())
+    }
+
+    #[test]
+    fn weighted_fair_share_under_backlog() {
+        // Both lanes fully backlogged: any 3n-pop prefix serves the
+        // weight-2 lane exactly 2n times. (WFQ invariant: per-lane
+        // served/weight never diverges by more than one job.)
+        let mut s = two_lane_sched();
+        for i in 0..30 {
+            s.push(0, job("g", "a"));
+            s.push(1, job("g", "b"));
+            let _ = i;
+        }
+        assert_eq!(s.pending(), 60);
+        let mut served_a = 0;
+        let mut served_b = 0;
+        for n in 1..=30 {
+            let p = s.pop().unwrap();
+            if p.job.tenant == "a" {
+                served_a += 1;
+            } else {
+                served_b += 1;
+            }
+            if n % 3 == 0 {
+                assert_eq!(served_a, 2 * n / 3, "after {n} pops");
+                assert_eq!(served_b, n / 3, "after {n} pops");
+            }
+        }
+        assert_eq!((served_a, served_b), (20, 10));
+    }
+
+    #[test]
+    fn fifo_within_lane_and_ids_monotonic() {
+        let mut s = two_lane_sched();
+        let id0 = s.push(0, job("g0", "a"));
+        let id1 = s.push(0, job("g1", "a"));
+        assert!(id0 < id1);
+        let first = s.pop().unwrap();
+        let second = s.pop().unwrap();
+        assert_eq!(first.id, id0, "lane must stay FIFO");
+        assert_eq!(second.id, id1);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn idle_lane_rejoins_at_virtual_now() {
+        // b idles while a drains 10 jobs; when b wakes, it must not
+        // monopolize to "catch up" its stale virtual time.
+        let mut s = two_lane_sched();
+        for _ in 0..10 {
+            s.push(0, job("g", "a"));
+        }
+        for _ in 0..10 {
+            assert_eq!(s.pop().unwrap().job.tenant, "a");
+        }
+        for _ in 0..8 {
+            s.push(0, job("g", "a"));
+            s.push(1, job("g", "b"));
+        }
+        // Next 6 pops must interleave 2:1, not be 6 straight b's.
+        let mut b_run = 0;
+        let mut max_b_run = 0;
+        for _ in 0..6 {
+            if s.pop().unwrap().job.tenant == "b" {
+                b_run += 1;
+                max_b_run = max_b_run.max(b_run);
+            } else {
+                b_run = 0;
+            }
+        }
+        assert!(max_b_run <= 1, "idle lane burst-monopolized ({max_b_run} in a row)");
+    }
+
+    #[test]
+    fn ingest_queue_submit_take_close() {
+        let q = IngestQueue::new(&TenantSet::from_spec("a,b").unwrap());
+        q.submit(job("g", "a")).unwrap();
+        q.submit(job("g", "b")).unwrap();
+        assert_eq!(q.pending(), 2);
+        assert!(q.submit(job("g", "ghost")).is_err(), "unknown tenant");
+        assert!(q.take().is_some());
+        q.close();
+        assert!(q.submit(job("g", "a")).is_err(), "closed queue rejects");
+        assert!(q.take().is_some(), "backlog drains after close");
+        assert!(q.take().is_none(), "then signals shutdown");
+        assert_eq!(q.submitted(), 2);
+    }
+
+    #[test]
+    fn ingest_queue_unblocks_concurrent_takers_on_close() {
+        use std::sync::Arc;
+        let q = Arc::new(IngestQueue::new(&TenantSet::single("t")));
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = 0;
+                    while q.take().is_some() {
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        for _ in 0..16 {
+            q.submit(job("g", "t")).unwrap();
+        }
+        q.close();
+        let total: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        assert_eq!(total, 16, "every submitted job is taken exactly once");
+    }
+}

@@ -1,0 +1,211 @@
+//! Tenant declarations: who may submit jobs, at what scheduling weight,
+//! on which DRAM channels, against what latency target.
+
+use crate::dram::ChannelSet;
+use crate::fail;
+use crate::util::error::{Error, Result};
+
+/// One tenant of the QoS serving frontend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Weighted-fair scheduling share (relative; must be positive).
+    pub weight: f64,
+    /// DRAM channel subset this tenant's jobs are confined to. `None`
+    /// means the full device (no partition).
+    pub channels: Option<ChannelSet>,
+    /// Serving-latency objective in wall-clock milliseconds
+    /// (submit → completion). Purely observational: reports carry the
+    /// attainment fraction, the scheduler does not act on it.
+    pub slo_ms: Option<f64>,
+}
+
+impl TenantSpec {
+    pub fn new(name: impl Into<String>) -> TenantSpec {
+        TenantSpec { name: name.into(), weight: 1.0, channels: None, slo_ms: None }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> TenantSpec {
+        self.weight = weight;
+        self
+    }
+
+    pub fn with_channels(mut self, set: ChannelSet) -> TenantSpec {
+        self.channels = Some(set);
+        self
+    }
+
+    pub fn with_slo_ms(mut self, slo_ms: f64) -> TenantSpec {
+        self.slo_ms = Some(slo_ms);
+        self
+    }
+
+    /// Parse one tenant item: `name[:weight=W][:channels=SPEC][:slo=MS]`
+    /// — e.g. `a:weight=2:channels=0-1` (channel specs use `+` for
+    /// unions so they can ride inside comma-separated tenant lists).
+    pub fn parse(item: &str) -> Result<TenantSpec> {
+        let mut parts = item.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        if name.is_empty() {
+            return Err(fail!("empty tenant name in `{item}`"));
+        }
+        if name.contains('=') {
+            return Err(fail!("tenant item `{item}` must start with a name, not a key=value"));
+        }
+        let mut spec = TenantSpec::new(name);
+        for part in parts {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| fail!("bad tenant field `{part}` in `{item}` (want key=value)"))?;
+            match key.trim() {
+                "weight" | "w" => {
+                    spec.weight = val
+                        .parse::<f64>()
+                        .map_err(|e| fail!("`{item}`: weight={val}: {e}"))?;
+                }
+                "channels" | "ch" => {
+                    spec.channels =
+                        Some(ChannelSet::parse(val).map_err(|e| fail!("`{item}`: {e}"))?);
+                }
+                "slo" | "slo_ms" => {
+                    spec.slo_ms = Some(
+                        val.parse::<f64>().map_err(|e| fail!("`{item}`: slo={val}: {e}"))?,
+                    );
+                }
+                other => {
+                    return Err(fail!(
+                        "unknown tenant key `{other}` in `{item}` (want weight=|channels=|slo=)"
+                    ))
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.weight > 0.0) || !self.weight.is_finite() {
+            return Err(fail!(
+                "tenant `{}`: weight must be positive and finite, got {}",
+                self.name,
+                self.weight
+            ));
+        }
+        if let Some(slo) = self.slo_ms {
+            if !(slo > 0.0) || !slo.is_finite() {
+                return Err(fail!("tenant `{}`: slo must be positive, got {slo}", self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An ordered set of tenants with unique names (registration order is
+/// the scheduler's deterministic tie-break).
+#[derive(Debug, Clone)]
+pub struct TenantSet {
+    tenants: Vec<TenantSpec>,
+}
+
+impl TenantSet {
+    pub fn new(tenants: Vec<TenantSpec>) -> Result<TenantSet> {
+        if tenants.is_empty() {
+            return Err(Error::msg("tenant set must be non-empty"));
+        }
+        for (i, t) in tenants.iter().enumerate() {
+            t.validate()?;
+            if tenants[..i].iter().any(|u| u.name == t.name) {
+                return Err(fail!("duplicate tenant name `{}`", t.name));
+            }
+        }
+        Ok(TenantSet { tenants })
+    }
+
+    /// One default tenant, full device, weight 1 — the configuration
+    /// whose serving results are pinned identical to the non-QoS path.
+    pub fn single(name: impl Into<String>) -> TenantSet {
+        TenantSet { tenants: vec![TenantSpec::new(name)] }
+    }
+
+    /// Parse a comma-separated tenant list:
+    /// `a:weight=2:channels=0-1,b:channels=2-7,c`.
+    pub fn from_spec(spec: &str) -> Result<TenantSet> {
+        let tenants: Result<Vec<TenantSpec>> =
+            spec.split(',').map(TenantSpec::parse).collect();
+        TenantSet::new(tenants?)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TenantSpec> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.name == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TenantSpec> {
+        self.tenants.iter()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_item() {
+        let t = TenantSpec::parse("a:weight=2:channels=0-1:slo=50").unwrap();
+        assert_eq!(t.name, "a");
+        assert_eq!(t.weight, 2.0);
+        assert_eq!(t.channels.unwrap().label(), "0-1");
+        assert_eq!(t.slo_ms, Some(50.0));
+        // bare name → defaults
+        let t = TenantSpec::parse("bob").unwrap();
+        assert_eq!(t.weight, 1.0);
+        assert!(t.channels.is_none() && t.slo_ms.is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            ":weight=1",
+            "a:weight=zebra",
+            "a:weight=0",
+            "a:weight=-1",
+            "a:slo=0",
+            "a:channels=9x",
+            "a:shares=2",
+            "a:weight",
+            "weight=2",
+        ] {
+            assert!(TenantSpec::parse(bad).is_err(), "`{bad}`");
+        }
+    }
+
+    #[test]
+    fn set_from_spec_orders_and_dedups() {
+        let set = TenantSet::from_spec("a:weight=2:channels=0-1,b:channels=2-7,c").unwrap();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.names(), vec!["a", "b", "c"]);
+        assert_eq!(set.index_of("b"), Some(1));
+        assert!(set.get("d").is_none());
+        assert!(TenantSet::from_spec("a,a").is_err(), "duplicate names");
+        assert!(TenantSet::from_spec("").is_err());
+        let single = TenantSet::single("only");
+        assert_eq!(single.len(), 1);
+        assert_eq!(single.get("only").unwrap().weight, 1.0);
+    }
+}

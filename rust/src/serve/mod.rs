@@ -43,3 +43,5 @@ pub use pool::{EnginePool, WorkItem};
 pub use report::ServeReport;
 pub use runner::{JobResult, ServeJob, ServeOutcome, ServeRunner};
 pub use store::GraphStore;
+
+pub(crate) use runner::{build_reports, plan_references};

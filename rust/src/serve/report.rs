@@ -59,43 +59,55 @@ impl ServeReport {
 
     /// Geometric mean of the per-job speedups (ratios compose
     /// multiplicatively; one outlier job must not swamp the tenant).
-    pub fn mean_speedup(&self) -> f64 {
+    /// `None` for an empty report — there is no meaningful mean of zero
+    /// jobs, and a fabricated neutral 1.0 would read as "this tenant
+    /// broke even" in dashboards.
+    pub fn mean_speedup(&self) -> Option<f64> {
         geo_mean(self.rows.iter().map(|r| r.speedup))
     }
 
     /// Geometric mean of the per-job row-activation ratios — the
-    /// tenant-level form of the paper's 59–82% reduction claim.
-    pub fn mean_activation_ratio(&self) -> f64 {
+    /// tenant-level form of the paper's 59–82% reduction claim. `None`
+    /// for an empty report.
+    pub fn mean_activation_ratio(&self) -> Option<f64> {
         geo_mean(self.rows.iter().map(|r| r.activation_ratio))
     }
 
-    /// One-line tenant summary.
+    /// One-line tenant summary (`n/a` means where the report is empty).
     pub fn summary(&self) -> String {
+        let speedup = match self.mean_speedup() {
+            Some(v) => format!("{v:.2}x"),
+            None => "n/a".to_string(),
+        };
+        let act_ratio = match self.mean_activation_ratio() {
+            Some(v) => format!("{v:.3}"),
+            None => "n/a".to_string(),
+        };
         format!(
             "{} on `{}`: {} jobs, exec {:.3}ms, {} reads, {} acts, \
-             mean speedup {:.2}x, mean act ratio {:.3}",
+             mean speedup {speedup}, mean act ratio {act_ratio}",
             self.tenant,
             self.graph,
             self.jobs(),
             self.total_exec_ns() / 1e6,
             self.total_reads(),
             self.total_activations(),
-            self.mean_speedup(),
-            self.mean_activation_ratio(),
         )
     }
 }
 
-fn geo_mean(xs: impl Iterator<Item = f64>) -> f64 {
+/// Geometric mean, or `None` over an empty iterator (never a fabricated
+/// neutral value — an empty `ServeReport` must not report a ratio).
+fn geo_mean(xs: impl Iterator<Item = f64>) -> Option<f64> {
     let (mut log_sum, mut n) = (0.0f64, 0u32);
     for x in xs {
         log_sum += x.max(f64::MIN_POSITIVE).ln();
         n += 1;
     }
     if n == 0 {
-        1.0
+        None
     } else {
-        (log_sum / n as f64).exp()
+        Some((log_sum / n as f64).exp())
     }
 }
 
@@ -156,11 +168,26 @@ mod tests {
             [&reference, &reference].into_iter(),
         );
         // self-normalized rows: every ratio is exactly 1
-        assert!((report.mean_speedup() - 1.0).abs() < 1e-12);
-        assert!((report.mean_activation_ratio() - 1.0).abs() < 1e-12);
+        assert!((report.mean_speedup().unwrap() - 1.0).abs() < 1e-12);
+        assert!((report.mean_activation_ratio().unwrap() - 1.0).abs() < 1e-12);
+    }
 
+    #[test]
+    fn empty_report_has_no_means_and_sane_summary() {
+        // Zero rows: no geometric mean exists. The old behaviour
+        // (ln-sum 0 over n = 0) would have produced NaN/1.0 nonsense —
+        // the accessor now says so explicitly and the summary prints
+        // `n/a` instead of a fabricated ratio.
+        let reference = metrics(0.0);
         let empty =
             ServeReport::build("t".into(), "g".into(), reference, std::iter::empty());
-        assert_eq!(empty.mean_speedup(), 1.0, "empty report defaults neutral");
+        assert_eq!(empty.jobs(), 0);
+        assert_eq!(empty.mean_speedup(), None);
+        assert_eq!(empty.mean_activation_ratio(), None);
+        assert_eq!(empty.total_reads(), 0);
+        let s = empty.summary();
+        assert!(s.contains("0 jobs"), "{s}");
+        assert!(s.contains("n/a"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
     }
 }

@@ -70,9 +70,96 @@ pub struct ServeOutcome {
 /// Where a tenant group's no-dropout reference metrics come from:
 /// reused from a submitted job that already is the reference config, or
 /// one of the extra work items appended to the batch.
-enum RefSource {
+pub(crate) enum RefSource {
     Job(usize),
     Extra(usize),
+}
+
+/// Reference plan of a job batch: the per-(tenant, graph,
+/// reference-config) groups, each group's reference source, and the
+/// extra reference simulations no submitted job covers. Shared by
+/// [`ServeRunner::serve`] and the QoS engine — both normalize the same
+/// way, whatever scheduler executed the jobs.
+pub(crate) struct RefPlan {
+    /// `(tenant, graph, reference cfg, member job indices)`,
+    /// first-seen order.
+    pub groups: Vec<(String, String, SimConfig, Vec<usize>)>,
+    /// Each group's reference source, parallel to `groups`.
+    pub sources: Vec<RefSource>,
+    /// `(graph name, reference cfg, exemplar job index)` for references
+    /// that need their own simulation; each distinct `(graph, cfg)` pair
+    /// appears exactly once.
+    pub extras: Vec<(String, SimConfig, usize)>,
+}
+
+/// Group `jobs` by (tenant, graph, reference config) and pick each
+/// group's reference source, deduplicating: a job that already *is* the
+/// reference config doubles as it, and groups sharing a graph and
+/// reference config share one extra simulation.
+pub(crate) fn plan_references(jobs: &[ServeJob]) -> RefPlan {
+    let refs: Vec<SimConfig> =
+        jobs.iter().map(|job| job.cfg.no_dropout_reference()).collect();
+    let mut groups: Vec<(String, String, SimConfig, Vec<usize>)> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        match groups.iter_mut().find(|(t, g, r, _)| {
+            *t == job.tenant && *g == job.graph && *r == refs[i]
+        }) {
+            Some((_, _, _, idxs)) => idxs.push(i),
+            None => groups.push((
+                job.tenant.clone(),
+                job.graph.clone(),
+                refs[i].clone(),
+                vec![i],
+            )),
+        }
+    }
+
+    let mut extras: Vec<(String, SimConfig, usize)> = Vec::new();
+    let mut sources: Vec<RefSource> = Vec::new();
+    for (_, graph_name, ref_cfg, idxs) in &groups {
+        let source = if let Some(j) = jobs
+            .iter()
+            .position(|job| job.graph == *graph_name && job.cfg == *ref_cfg)
+        {
+            RefSource::Job(j)
+        } else if let Some(k) = extras
+            .iter()
+            .position(|(g, cfg, _)| g == graph_name && cfg == ref_cfg)
+        {
+            RefSource::Extra(k)
+        } else {
+            extras.push((graph_name.clone(), ref_cfg.clone(), idxs[0]));
+            RefSource::Extra(extras.len() - 1)
+        };
+        sources.push(source);
+    }
+    RefPlan { groups, sources, extras }
+}
+
+/// Assemble per-group [`ServeReport`]s from executed metrics.
+/// `job_metrics` is in submission order; `extra_metrics` parallels
+/// `plan.extras`.
+pub(crate) fn build_reports(
+    plan: RefPlan,
+    job_metrics: &[Metrics],
+    extra_metrics: &[Metrics],
+) -> Vec<ServeReport> {
+    plan.groups
+        .into_iter()
+        .zip(plan.sources)
+        .map(|((tenant, graph, _, idxs), source)| {
+            let reference = match source {
+                RefSource::Job(j) => job_metrics[j].clone(),
+                RefSource::Extra(k) => extra_metrics[k].clone(),
+            };
+            ServeReport::build(
+                tenant,
+                graph,
+                reference,
+                idxs.iter().map(|&i| &job_metrics[i]),
+            )
+        })
+        .collect()
 }
 
 /// Executes [`ServeJob`] streams against one shared [`GraphStore`].
@@ -152,54 +239,15 @@ impl<'s> ServeRunner<'s> {
     /// per batch.
     pub fn serve(&self, jobs: &[ServeJob]) -> Result<ServeOutcome> {
         let graphs = self.resolve(jobs)?;
-
-        // Group job indices by (tenant, graph, reference config),
-        // first-seen order.
-        let refs: Vec<SimConfig> =
-            jobs.iter().map(|job| job.cfg.no_dropout_reference()).collect();
-        let mut groups: Vec<(String, String, SimConfig, Vec<usize>)> = Vec::new();
-        for (i, job) in jobs.iter().enumerate() {
-            match groups.iter_mut().find(|(t, g, r, _)| {
-                *t == job.tenant && *g == job.graph && *r == refs[i]
-            }) {
-                Some((_, _, _, idxs)) => idxs.push(i),
-                None => groups.push((
-                    job.tenant.clone(),
-                    job.graph.clone(),
-                    refs[i].clone(),
-                    vec![i],
-                )),
-            }
-        }
-
-        // Pick each group's reference source, adding extra work items
-        // only for references no job (and no earlier group) covers.
-        let mut extras: Vec<(String, &'s CsrGraph, SimConfig)> = Vec::new();
-        let mut sources: Vec<RefSource> = Vec::new();
-        for (_, graph_name, ref_cfg, idxs) in &groups {
-            let source = if let Some(j) = jobs
-                .iter()
-                .position(|job| job.graph == *graph_name && job.cfg == *ref_cfg)
-            {
-                RefSource::Job(j)
-            } else if let Some(k) = extras
-                .iter()
-                .position(|(g, _, cfg)| g == graph_name && cfg == ref_cfg)
-            {
-                RefSource::Extra(k)
-            } else {
-                extras.push((graph_name.clone(), graphs[idxs[0]], ref_cfg.clone()));
-                RefSource::Extra(extras.len() - 1)
-            };
-            sources.push(source);
-        }
+        let plan = plan_references(jobs);
 
         // One pool run. Reference extras go first: the no-dropout
         // baselines are the most expensive simulations in the batch and
         // must not be the last ones off the shared queue.
-        let mut items: Vec<WorkItem<'_>> = extras
+        let mut items: Vec<WorkItem<'_>> = plan
+            .extras
             .iter()
-            .map(|(_, graph, cfg)| WorkItem::new(graph, cfg.clone()))
+            .map(|(_, cfg, exemplar)| WorkItem::new(graphs[*exemplar], cfg.clone()))
             .collect();
         items.extend(
             jobs.iter()
@@ -208,9 +256,10 @@ impl<'s> ServeRunner<'s> {
         );
         EnginePool::prewarm_transposes(&items);
         let mut metrics = EnginePool::new(self.threads).run(&items);
-        let job_metrics = metrics.split_off(extras.len());
+        let job_metrics = metrics.split_off(plan.extras.len());
         let extra_metrics = metrics;
 
+        let reports = build_reports(plan, &job_metrics, &extra_metrics);
         let results: Vec<JobResult> = jobs
             .iter()
             .zip(job_metrics)
@@ -219,22 +268,6 @@ impl<'s> ServeRunner<'s> {
                 tenant: job.tenant.clone(),
                 label: job.label(),
                 metrics: m,
-            })
-            .collect();
-        let reports = groups
-            .into_iter()
-            .zip(sources)
-            .map(|((tenant, graph, _, idxs), source)| {
-                let reference = match source {
-                    RefSource::Job(j) => results[j].metrics.clone(),
-                    RefSource::Extra(k) => extra_metrics[k].clone(),
-                };
-                ServeReport::build(
-                    tenant,
-                    graph,
-                    reference,
-                    idxs.iter().map(|&i| &results[i].metrics),
-                )
             })
             .collect();
         Ok(ServeOutcome { results, reports })

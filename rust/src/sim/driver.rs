@@ -157,7 +157,9 @@ pub struct SimEngine<'a> {
 impl<'a> SimEngine<'a> {
     pub fn new(cfg: &'a SimConfig) -> SimEngine<'a> {
         cfg.validate().expect("invalid SimConfig");
-        let dram = DramModel::new(cfg.dram.config());
+        // Channel-partitioned runs get a device whose mapping can only
+        // express the tenant's subset; the default is the full device.
+        let dram = cfg.build_dram();
         let sched = FrFcfs::new(dram.config().channels, DEFAULT_DEPTH);
         let unit = Self::build_unit(cfg, &dram, 0, cfg.seed);
         SimEngine {
@@ -555,8 +557,36 @@ impl<'a> SimEngine<'a> {
 /// `epochs × (sample + layers forward + [backward after the last layer]
 /// + write-backs)`.
 fn run_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metrics {
+    if engine.cfg.layerwise_sampling() {
+        return run_layerwise_schedule(engine, graph);
+    }
     let sampler = engine.cfg.build_sampler();
     run_schedule_with(engine, graph, sampler.as_ref())
+}
+
+/// Layer-wise fanouts (`--fanout 10,5`): every layer samples its *own*
+/// subgraph at its hop budget, re-sampled each epoch; the backward
+/// phase follows the last hop's subset (the gradient stream of the
+/// deepest aggregation). The single-value form never reaches this path
+/// — it keeps the one-subgraph-per-epoch schedule bit-for-bit.
+fn run_layerwise_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metrics {
+    let cfg = engine.cfg;
+    let samplers: Vec<Box<dyn Sampler>> =
+        (0..cfg.layers).map(|l| cfg.build_sampler_for_layer(l)).collect();
+    for epoch in 0..cfg.epochs {
+        for (layer, sampler) in samplers.iter().enumerate() {
+            let sub = sampler.sample(graph, epoch as u64);
+            let g = sub.graph();
+            engine.push_phase(Phase::Forward { layer }, g);
+            if layer + 1 == cfg.layers && cfg.backward {
+                engine.push_phase(Phase::Backward, g);
+            }
+            engine.drain();
+            engine.push_phase(Phase::WriteBack, g);
+            engine.push_phase(Phase::MaskWriteBack, g);
+        }
+    }
+    engine.finish(graph)
 }
 
 /// The subgraph-aware schedule: every epoch re-samples, and the whole
@@ -1056,6 +1086,83 @@ mod tests {
         // double exactly.
         assert_eq!(two.sampled_edges, 2 * one.sampled_edges);
         assert!(two.dram.reads > one.dram.reads);
+    }
+
+    #[test]
+    fn layerwise_single_entry_matches_uniform_fanout() {
+        // `fanouts = [8]` must be metrics-identical to `fanout = 8`: the
+        // layer-wise path's hop 0 shares the uniform path's seed stream,
+        // and with one layer the schedules coincide.
+        let mut uniform = cfg_meaningful(Variant::T, 0.5);
+        uniform.sampler = SamplerKind::Neighbor;
+        uniform.fanout = 8;
+        let g = uniform.build_graph();
+        let a = run_sim(&uniform, &g);
+        let mut listed = uniform.clone();
+        listed.fanouts = vec![8];
+        let b = run_sim(&listed, &g);
+        assert_eq!(a.dram.reads, b.dram.reads);
+        assert_eq!(a.dram.activations, b.dram.activations);
+        assert_eq!(a.exec_ns.to_bits(), b.exec_ns.to_bits());
+        assert_eq!(a.sampled_edges, b.sampled_edges);
+    }
+
+    #[test]
+    fn layerwise_fanouts_shrink_deeper_hops() {
+        let mut c = cfg_meaningful(Variant::S, 0.5);
+        c.sampler = SamplerKind::Neighbor;
+        c.layers = 2;
+        c.fanout = 8;
+        c.fanouts = vec![8, 8];
+        let g = c.build_graph();
+        let equal = run_sim(&c, &g);
+        let mut tapered = c.clone();
+        tapered.fanouts = vec![8, 2];
+        let t = run_sim(&tapered, &g);
+        assert_eq!(t.sampler, "neighbor@8,2");
+        // hop 0 budgets match, so layer-1 traffic is identical…
+        assert_eq!(t.layer_reads[0], equal.layer_reads[0]);
+        assert_eq!(t.sampled_edges, equal.sampled_edges, "layer-0 edge totals match");
+        // …and the tapered second hop reads strictly less
+        assert!(
+            t.layer_reads[1] < equal.layer_reads[1],
+            "fanout 2 hop reads {} !< fanout 8 hop reads {}",
+            t.layer_reads[1],
+            equal.layer_reads[1]
+        );
+        // determinism
+        let t2 = run_sim(&tapered, &g);
+        assert_eq!(t.dram.reads, t2.dram.reads);
+        assert_eq!(t.exec_ns.to_bits(), t2.exec_ns.to_bits());
+    }
+
+    #[test]
+    fn channel_partition_confines_activations() {
+        use crate::dram::ChannelSet;
+        let full = cfg_meaningful(Variant::T, 0.5);
+        let mut part = full.clone();
+        part.channels = Some(ChannelSet::parse("0-1").unwrap());
+        let g = full.build_graph();
+        let mf = run_sim(&full, &g);
+        let mp = run_sim(&part, &g);
+        // full run spreads across all 8 HBM channels
+        assert!(mf.dram.channel_activations.iter().all(|&a| a > 0));
+        // partitioned run never activates outside its subset
+        assert_eq!(mp.dram.channel_activations.len(), 8);
+        for (c, &acts) in mp.dram.channel_activations.iter().enumerate() {
+            if c < 2 {
+                assert!(acts > 0, "member channel {c} unused");
+            } else {
+                assert_eq!(acts, 0, "activation escaped to channel {c}");
+            }
+        }
+        // two channels carry the traffic eight did: the bus serializes
+        assert!(
+            mp.mem_ns > mf.mem_ns,
+            "partitioned mem {} !> full mem {}",
+            mp.mem_ns,
+            mf.mem_ns
+        );
     }
 
     #[test]

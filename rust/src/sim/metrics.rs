@@ -3,7 +3,44 @@
 
 use crate::dram::controller::DramCounters;
 use crate::dram::energy::EnergyReport;
+use crate::dram::ChannelSet;
 use crate::lignn::UnitStats;
+
+/// Queue-side latency aggregation for one tenant of the QoS serving
+/// path: wall-clock waits between job submission and the moment a
+/// worker picked the job up, plus the wall-clock run spans. (Simulated
+/// time lives in [`Metrics::exec_ns`]; this is the *serving* latency a
+/// tenant observes from the ingest queue.)
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueueWaitStats {
+    pub jobs: u64,
+    /// Mean / max submit→start wait in milliseconds.
+    pub mean_wait_ms: f64,
+    pub max_wait_ms: f64,
+    /// Mean wall-clock execution span in milliseconds.
+    pub mean_run_ms: f64,
+}
+
+impl QueueWaitStats {
+    /// Aggregate `(wait_ms, run_ms)` pairs, one per served job.
+    pub fn collect(samples: impl Iterator<Item = (f64, f64)>) -> QueueWaitStats {
+        let mut s = QueueWaitStats::default();
+        let (mut wait_sum, mut run_sum) = (0.0f64, 0.0f64);
+        for (wait, run) in samples {
+            s.jobs += 1;
+            wait_sum += wait;
+            run_sum += run;
+            if wait > s.max_wait_ms {
+                s.max_wait_ms = wait;
+            }
+        }
+        if s.jobs > 0 {
+            s.mean_wait_ms = wait_sum / s.jobs as f64;
+            s.mean_run_ms = run_sum / s.jobs as f64;
+        }
+        s
+    }
+}
 
 /// Full result of one simulation run.
 #[derive(Debug, Clone)]
@@ -99,6 +136,22 @@ impl Metrics {
             return vec![0.0; self.layer_reads.len()];
         }
         self.layer_reads.iter().map(|&r| r as f64 / total as f64).collect()
+    }
+
+    /// Split this run's row activations into `(inside, outside)` a
+    /// channel subset — the attribution a channel-partitioned tenant's
+    /// isolation is audited with (`outside` must be 0 for a run whose
+    /// config carried that partition).
+    pub fn activation_split(&self, set: &ChannelSet) -> (u64, u64) {
+        let (mut inside, mut outside) = (0u64, 0u64);
+        for (c, &acts) in self.dram.channel_activations.iter().enumerate() {
+            if set.contains(c as u32) {
+                inside += acts;
+            } else {
+                outside += acts;
+            }
+        }
+        (inside, outside)
     }
 
     /// Mean DRAM read bursts per sampled edge — the locality figure of
@@ -218,6 +271,28 @@ mod tests {
         assert!(s.contains("edges=200"), "{s}");
         m.sampled_edges = 0;
         assert_eq!(m.reads_per_sampled_edge(), 0.0);
+    }
+
+    #[test]
+    fn queue_wait_stats_aggregate() {
+        let s = QueueWaitStats::collect([(1.0, 10.0), (3.0, 20.0), (2.0, 30.0)].into_iter());
+        assert_eq!(s.jobs, 3);
+        assert!((s.mean_wait_ms - 2.0).abs() < 1e-12);
+        assert!((s.max_wait_ms - 3.0).abs() < 1e-12);
+        assert!((s.mean_run_ms - 20.0).abs() < 1e-12);
+        let empty = QueueWaitStats::collect(std::iter::empty());
+        assert_eq!(empty.jobs, 0);
+        assert_eq!(empty.mean_wait_ms, 0.0);
+    }
+
+    #[test]
+    fn activation_split_partitions() {
+        let mut m = dummy(1000.0, 100, 50);
+        m.dram.channel_activations = vec![5, 7, 0, 3];
+        let set = ChannelSet::parse("0-1").unwrap();
+        assert_eq!(m.activation_split(&set), (12, 3));
+        let all = ChannelSet::full(4);
+        assert_eq!(m.activation_split(&all), (15, 0));
     }
 
     #[test]

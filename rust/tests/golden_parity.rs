@@ -432,6 +432,57 @@ fn serve_runner_matches_sweep_runner_on_single_graph_store() {
 }
 
 #[test]
+fn qos_single_tenant_full_channels_matches_serve_run() {
+    // The acceptance bar for the QoS subsystem: a single tenant at
+    // uniform weight with the full channel set, served through the
+    // async ingest queue + weighted-fair scheduler + channel-partition
+    // plumbing, must be bit-identical (metrics-equal) to the existing
+    // batch `ServeRunner::run` path — whether the full set is implicit
+    // (no partition) or spelled out as `channels=0-7`.
+    use std::sync::Arc;
+    use lignn::qos::{QosEngine, TenantSet};
+    use lignn::serve::{GraphStore, ServeJob, ServeRunner};
+
+    let mut store = GraphStore::new();
+    store
+        .insert("solo", GraphPreset::Tiny.build(SimConfig::default().seed))
+        .unwrap();
+    let jobs: Vec<ServeJob> = [
+        (Variant::T, 0.0, false),
+        (Variant::T, 0.5, false),
+        (Variant::S, 0.5, true),
+        (Variant::A, 0.2, false),
+    ]
+    .into_iter()
+    .map(|(variant, alpha, backward)| {
+        let mut cfg = tiny_cfg(variant, alpha);
+        cfg.backward = backward;
+        ServeJob::new("solo", cfg).with_tenant("only")
+    })
+    .collect();
+
+    let batch = ServeRunner::new(&store).with_threads(2).run(&jobs).unwrap();
+
+    let store = Arc::new(store);
+    for tenant_spec in ["only", "only:weight=1:channels=0-7"] {
+        let tenants = TenantSet::from_spec(tenant_spec).unwrap();
+        let engine = QosEngine::start(Arc::clone(&store), tenants, 2).unwrap();
+        for job in &jobs {
+            engine.submit(job.clone()).unwrap();
+        }
+        let outcome = engine.finish().unwrap();
+        assert_eq!(outcome.results.len(), batch.len());
+        for ((gold, qos), job) in batch.iter().zip(&outcome.results).zip(&jobs) {
+            assert_metrics_identical(
+                &qos.metrics,
+                gold,
+                &format!("qos[{tenant_spec}] {}", job.label()),
+            );
+        }
+    }
+}
+
+#[test]
 fn fullbatch_sampler_matches_legacy() {
     // The FullBatch sampler spelled out — both through `cfg.sampler` and
     // through the explicit-sampler entry point — must reproduce the seed
