@@ -26,8 +26,9 @@ fn main() {
     };
 
     // DRAM model raw service throughput (mixed hit/miss stream).
+    let n_bursts = if common::fast_mode() { 400_000u64 } else { 4_000_000u64 };
     {
-        let n = 4_000_000u64;
+        let n = n_bursts;
         let t = time(3, || {
             let mut d = DramModel::new(DramStandardKind::Hbm.config());
             let mut rng = Pcg64::new(1);
@@ -38,8 +39,8 @@ fn main() {
         });
         record("dram.read_burst(random)", n as f64 / t.best_s, "bursts", t.best_s);
     }
-    {
-        let n = 4_000_000u64;
+    let seq_t = {
+        let n = n_bursts;
         let t = time(3, || {
             let mut d = DramModel::new(DramStandardKind::Hbm.config());
             for i in 0..n {
@@ -47,11 +48,49 @@ fn main() {
             }
         });
         record("dram.read_burst(sequential)", n as f64 / t.best_s, "bursts", t.best_s);
+        t.best_s
+    };
+    // Same sequential burst stream through the run-coalesced fast path:
+    // one O(1) streak service per (row group × channel) instead of one
+    // service per burst.
+    {
+        let n = n_bursts;
+        let t = time(3, || {
+            let mut d = DramModel::new(DramStandardKind::Hbm.config());
+            let mapping = *d.mapping();
+            for run in mapping.runs_for_range(0, n * 32) {
+                d.read_run(run.start, run.bursts, 0);
+            }
+        });
+        record("dram.read_run(streak)", n as f64 / t.best_s, "bursts", t.best_s);
+        let speedup = seq_t / t.best_s;
+        println!(
+            "run-coalesced speedup on the sequential stream: {speedup:.1}x \
+             (acceptance floor: 5x)"
+        );
+        assert!(
+            speedup >= 5.0,
+            "run-coalesced path must be ≥5x the scalar sequential walk, got {speedup:.2}x"
+        );
+        // and it must agree with the scalar oracle, burst for burst
+        let mut scalar = DramModel::new(DramStandardKind::Hbm.config());
+        let mut fast = DramModel::new(DramStandardKind::Hbm.config());
+        let check = 100_000u64.min(n);
+        for i in 0..check {
+            scalar.read_burst(i * 32, 0);
+        }
+        let mapping = *fast.mapping();
+        for run in mapping.runs_for_range(0, check * 32) {
+            fast.read_run(run.start, run.bursts, 0);
+        }
+        assert_eq!(scalar.counters.reads, fast.counters.reads);
+        assert_eq!(scalar.counters.row_hits, fast.counters.row_hits);
+        assert_eq!(scalar.busy_until(), fast.busy_until());
     }
 
     // LRU cache probe throughput.
     {
-        let n = 8_000_000u64;
+        let n = if common::fast_mode() { 800_000u64 } else { 8_000_000u64 };
         let t = time(3, || {
             let mut c = LruCache::new(4096);
             let mut rng = Pcg64::new(2);
@@ -64,7 +103,7 @@ fn main() {
 
     // LiGNN unit (LG-S pipeline: expand + LGT + Algorithm 2).
     {
-        let n_feats = 200_000u64;
+        let n_feats = if common::fast_mode() { 20_000u64 } else { 200_000u64 };
         let mapping = *DramModel::new(DramStandardKind::Hbm.config()).mapping();
         let calc = AddressCalc::new(mapping, 1 << 24, 1024);
         let t = time(3, || {

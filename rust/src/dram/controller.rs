@@ -18,8 +18,8 @@
 
 
 use super::bank::{Bank, RowOutcome};
-use super::mapping::{pack_key, AddressMapping, Loc};
-use super::standard::DramConfig;
+use super::mapping::{key, pack_key, AddressMapping, Loc};
+use super::standard::{DramConfig, Timing};
 
 /// Largest row-open-session size tracked individually in the histogram;
 /// bigger sessions land in the last bucket.
@@ -51,6 +51,10 @@ pub struct DramCounters {
     /// restricted to a [`ChannelSet`](super::mapping::ChannelSet) must
     /// show zero activations outside its subset.
     pub channel_activations: Vec<u64>,
+    /// Sessions longer than [`MAX_SESSION`] bursts, which land clamped
+    /// in the histogram's last bucket (see [`mean_session`]
+    /// (Self::mean_session) for the bias this implies).
+    pub clamped_sessions: u64,
 }
 
 impl Default for DramCounters {
@@ -66,16 +70,31 @@ impl Default for DramCounters {
             refreshes: 0,
             energy_pj: 0.0,
             channel_activations: Vec::new(),
+            clamped_sessions: 0,
         }
     }
 }
 
 impl DramCounters {
     fn record_session(&mut self, bursts: u64) {
-        self.session_hist[(bursts as usize).min(MAX_SESSION)] += 1;
+        let bucket = (bursts as usize).min(MAX_SESSION);
+        if bucket as u64 != bursts {
+            self.clamped_sessions += 1;
+        }
+        // Tolerate histograms trimmed or grown by an external merge.
+        if bucket >= self.session_hist.len() {
+            self.session_hist.resize(bucket + 1, 0);
+        }
+        self.session_hist[bucket] += 1;
     }
 
     /// Mean bursts per row-open session.
+    ///
+    /// Sessions longer than [`MAX_SESSION`] bursts are recorded clamped
+    /// into the histogram's last bucket, so when `clamped_sessions > 0`
+    /// this mean *underestimates* the true session length (a 10 000-burst
+    /// session contributes only `MAX_SESSION` to the numerator). Check
+    /// `clamped_sessions` before trusting the tail.
     pub fn mean_session(&self) -> f64 {
         let (mut n, mut s) = (0u64, 0u64);
         for (size, &count) in self.session_hist.iter().enumerate() {
@@ -102,6 +121,13 @@ impl DramCounters {
         self.row_closed += other.row_closed;
         self.refreshes += other.refreshes;
         self.energy_pj += other.energy_pj;
+        self.clamped_sessions += other.clamped_sessions;
+        // Histograms may disagree in length (older snapshots, trimmed
+        // serialized forms): grow to the longer one instead of silently
+        // dropping the tail buckets.
+        if self.session_hist.len() < other.session_hist.len() {
+            self.session_hist.resize(other.session_hist.len(), 0);
+        }
         for (a, b) in self.session_hist.iter_mut().zip(&other.session_hist) {
             *a += b;
         }
@@ -131,6 +157,37 @@ struct Channel {
     faw_idx: usize,
     /// Cycle of the next scheduled refresh (tREFI cadence).
     next_refresh: u64,
+}
+
+/// Closed-form refresh catch-up: fold every REF pending at command time
+/// `cmd` into the channel state in O(1) and return the command time
+/// pushed past the last refresh window.
+///
+/// Equivalent to stepping `while cmd >= next_refresh { … }` one tREFI at
+/// a time (the historical walk): a command arriving `k·tREFI` late owes
+/// `k = ⌊(cmd − next_refresh)/tREFI⌋ + 1` REFs, the last of which ends at
+/// `next_refresh + (k−1)·tREFI + tRFC`. Because `tRFC < tREFI`, the
+/// intermediate windows never extend `cmd` past the following REF, so
+/// only the final window's end matters for the bank/bus/ACT horizon —
+/// each bank's session still closes exactly once.
+fn catch_up_refresh(counters: &mut DramCounters, ch: &mut Channel, t: &Timing, cmd: u64) -> u64 {
+    if cmd < ch.next_refresh {
+        return cmd;
+    }
+    let k = (cmd - ch.next_refresh) / t.t_refi + 1;
+    let refresh_end = ch.next_refresh + (k - 1) * t.t_refi + t.t_rfc;
+    for (i, b) in ch.banks.iter_mut().enumerate() {
+        if let Some(s) = b.close_session() {
+            counters.record_session(s);
+        }
+        ch.open_keys[i] = NO_ROW;
+        b.ready_at = b.ready_at.max(refresh_end);
+    }
+    ch.bus_free = ch.bus_free.max(refresh_end);
+    ch.next_act = ch.next_act.max(refresh_end);
+    ch.next_refresh += k * t.t_refi;
+    counters.refreshes += k;
+    cmd.max(refresh_end)
 }
 
 /// The multi-channel DRAM device model.
@@ -199,21 +256,7 @@ impl DramModel {
         // Refresh: when the command time crosses the REF cadence, the
         // whole channel stalls for tRFC and every row closes. (All-bank
         // refresh — the common mode for these standards.)
-        while cmd >= ch.next_refresh {
-            let refresh_end = ch.next_refresh + t.t_rfc;
-            for (i, b) in ch.banks.iter_mut().enumerate() {
-                if let Some(s) = b.close_session() {
-                    self.counters.record_session(s);
-                }
-                ch.open_keys[i] = NO_ROW;
-                b.ready_at = b.ready_at.max(refresh_end);
-            }
-            ch.bus_free = ch.bus_free.max(refresh_end);
-            ch.next_act = ch.next_act.max(refresh_end);
-            ch.next_refresh += t.t_refi;
-            self.counters.refreshes += 1;
-            cmd = cmd.max(refresh_end);
-        }
+        cmd = catch_up_refresh(&mut self.counters, ch, t, cmd);
         let bank = &mut ch.banks[bi];
         let mut activated = false;
         match bank.outcome(loc.row) {
@@ -274,6 +317,199 @@ impl DramModel {
         (done, activated)
     }
 
+    /// Run-coalesced fast path: service `n` bursts that all target
+    /// `loc`'s row on `loc`'s bank in O(1) per refresh window instead of
+    /// O(n). The head burst pays the full command walk (refresh
+    /// catch-up, hit/conflict/closed resolution, FAW/RRD bookkeeping);
+    /// every following burst is by construction a row hit whose data
+    /// command advances by `max(tCCD, tBL)`, so the tail collapses to
+    /// closed-form updates of the bus/bank horizon and the counters.
+    /// Only a REF crossing breaks the streak — the loop then re-enters
+    /// the head path (closing the session and re-activating), which
+    /// keeps the math identical to the scalar walk burst by burst.
+    ///
+    /// `on_act(i)` fires for each 0-based burst index that issued an ACT.
+    /// Returns the data completion cycle of the final burst.
+    fn service_streak(
+        &mut self,
+        loc: &Loc,
+        n: u64,
+        arrival: u64,
+        is_write: bool,
+        on_act: &mut dyn FnMut(u64),
+    ) -> u64 {
+        debug_assert!(n > 0);
+        let t = self.cfg.timing;
+        let e = self.cfg.energy;
+        let bi = self.bank_index(loc);
+        let chi = loc.channel as usize;
+        let key = pack_key(loc);
+        let ch = &mut self.channels[chi];
+        let counters = &mut self.counters;
+
+        // Per-burst data-command stride of an uninterrupted hit streak:
+        // the bank allows RD every tCCD, the bus frees every tBL.
+        let gap = t.t_ccd.max(t.t_bl);
+        let mut served = 0u64;
+        let mut last_done = 0;
+        while served < n {
+            // Head burst of the (sub-)streak: the scalar command walk.
+            let mut cmd = arrival.max(ch.banks[bi].ready_at);
+            cmd = catch_up_refresh(counters, ch, &t, cmd);
+            let bank = &mut ch.banks[bi];
+            match bank.outcome(loc.row) {
+                RowOutcome::Hit => {
+                    counters.row_hits += 1;
+                }
+                RowOutcome::Conflict => {
+                    counters.row_conflicts += 1;
+                    ch.open_keys[bi] = key;
+                    let pre = cmd.max(bank.act_at + t.t_ras);
+                    if let Some(s) = bank.close_session() {
+                        counters.record_session(s);
+                    }
+                    let mut act = (pre + t.t_rp).max(ch.next_act);
+                    act = act.max(ch.faw[ch.faw_idx]);
+                    ch.faw[ch.faw_idx] = act + t.t_faw;
+                    ch.faw_idx = (ch.faw_idx + 1) % 4;
+                    ch.next_act = act + t.t_rrd;
+                    bank.open(loc.row, act);
+                    counters.activations += 1;
+                    counters.channel_activations[chi] += 1;
+                    counters.energy_pj += e.act_pj;
+                    on_act(served);
+                    cmd = act + t.t_rcd;
+                }
+                RowOutcome::Closed => {
+                    counters.row_closed += 1;
+                    ch.open_keys[bi] = key;
+                    let mut act = cmd.max(ch.next_act);
+                    act = act.max(ch.faw[ch.faw_idx]);
+                    ch.faw[ch.faw_idx] = act + t.t_faw;
+                    ch.faw_idx = (ch.faw_idx + 1) % 4;
+                    ch.next_act = act + t.t_rrd;
+                    bank.open(loc.row, act);
+                    counters.activations += 1;
+                    counters.channel_activations[chi] += 1;
+                    counters.energy_pj += e.act_pj;
+                    on_act(served);
+                    cmd = act + t.t_rcd;
+                }
+            }
+            let bank = &mut ch.banks[bi];
+            let rd = cmd.max(ch.bus_free.saturating_sub(t.t_cl));
+            last_done = rd + t.t_cl + t.t_bl;
+            ch.bus_free = last_done;
+            bank.ready_at = rd + t.t_ccd;
+            bank.session_bursts += 1;
+            counters.energy_pj += e.rd_pj;
+            served += 1;
+
+            let remaining = n - served;
+            if remaining == 0 {
+                break;
+            }
+            // Closed-form tail: burst j of the streak (1-based past the
+            // head) has command time rd + (j−1)·gap + tCCD and is a
+            // guaranteed row hit while that stays short of the next REF.
+            let hits_before_ref = if ch.next_refresh > rd + t.t_ccd {
+                (ch.next_refresh - rd - t.t_ccd - 1) / gap + 1
+            } else {
+                0
+            };
+            let k = hits_before_ref.min(remaining);
+            if k > 0 {
+                let last_rd = rd + k * gap;
+                bank.ready_at = last_rd + t.t_ccd;
+                bank.session_bursts += k;
+                last_done = last_rd + t.t_cl + t.t_bl;
+                ch.bus_free = last_done;
+                counters.row_hits += k;
+                // Exact: every per-op energy table value is an integral
+                // f64, so the batched sum equals k incremental adds bit
+                // for bit.
+                counters.energy_pj += k as f64 * e.rd_pj;
+                served += k;
+            }
+            // Any remainder crossed a refresh boundary; the next head
+            // iteration performs the REF catch-up and re-ACTs.
+        }
+        if is_write {
+            self.counters.writes += n;
+        } else {
+            self.counters.reads += n;
+        }
+        last_done
+    }
+
+    /// Fan a consecutive-address run out to its per-channel streaks.
+    /// `addr` is burst-aligned down; the run must not cross a row-group
+    /// boundary (use [`AddressMapping::runs_for_range`] to split ranges).
+    /// Cost is O(striped channels), independent of `n`. Returns
+    /// `(completion cycle of the final burst, row activations issued)`.
+    fn service_run(&mut self, addr: u64, n: u64, arrival: u64, is_write: bool) -> (u64, u64) {
+        assert!(n > 0, "empty run");
+        let addr = self.mapping.burst_align(addr);
+        let bb = self.mapping.burst_bytes();
+        let group = self.mapping.row_group_bytes();
+        assert_eq!(
+            addr / group,
+            (addr + (n - 1) * bb) / group,
+            "run of {n} bursts at {addr:#x} crosses a row-group boundary"
+        );
+        let stripe = self.mapping.striped_channels();
+        let last_slot = (n - 1) % stripe;
+        let mut activations = 0u64;
+        let mut last_done = 0u64;
+        // Consecutive bursts cycle through the stripe's channels, so
+        // slot j serves bursts j, j+stripe, … — one same-row streak on
+        // its channel's bank. Channels share no timing state, so
+        // serving the streaks whole, channel by channel, is identical
+        // to the interleaved burst-by-burst order.
+        for j in 0..stripe.min(n) {
+            let loc = self.mapping.decode(addr + j * bb);
+            let count = (n - j).div_ceil(stripe);
+            let done =
+                self.service_streak(&loc, count, arrival, is_write, &mut |_| activations += 1);
+            if j == last_slot {
+                last_done = done;
+            }
+        }
+        (last_done, activations)
+    }
+
+    /// Service `n` consecutive burst *reads* starting at `addr` through
+    /// the run-coalesced fast path. Bit-identical (counters and cycles)
+    /// to `n` calls of [`read_burst`](Self::read_burst) at the same
+    /// `arrival` — pinned by the golden-parity suite. The run must stay
+    /// within one row group ([`AddressMapping::runs_for_range`] yields
+    /// exactly such runs). Returns `(completion cycle of the final
+    /// burst, activations issued)`.
+    pub fn read_run(&mut self, addr: u64, n_bursts: u64, arrival: u64) -> (u64, u64) {
+        self.service_run(addr, n_bursts, arrival, false)
+    }
+
+    /// Write-side twin of [`read_run`](Self::read_run).
+    pub fn write_run(&mut self, addr: u64, n_bursts: u64, arrival: u64) -> (u64, u64) {
+        self.service_run(addr, n_bursts, arrival, true)
+    }
+
+    /// Service `n` bursts that all target `addr`'s row — the FR-FCFS
+    /// drain primitive for a same-`row_key` queue run (column addresses
+    /// never affect timing, so only the row identity matters).
+    /// `on_act(i)` fires for each 0-based burst index that opened the
+    /// row; returns the completion cycle of the final burst.
+    pub fn read_streak(
+        &mut self,
+        addr: u64,
+        n: u64,
+        arrival: u64,
+        on_act: &mut dyn FnMut(u64),
+    ) -> u64 {
+        let loc = self.mapping.decode(addr);
+        self.service_streak(&loc, n, arrival, false, on_act)
+    }
+
     /// Service one burst *read*; returns `(data completion cycle, activated)`.
     pub fn read_burst(&mut self, addr: u64, arrival: u64) -> (u64, bool) {
         self.service(addr, arrival, false)
@@ -289,13 +525,14 @@ impl DramModel {
 
     /// Fast first-ready predicate on a precomputed row key: true iff the
     /// key's row is open in its bank. One array read + compare — the hot
-    /// FR-FCFS scan avoids any address decode.
+    /// FR-FCFS scan avoids any address decode. Field extraction shares
+    /// the [`key`] layout with [`pack_key`], so the two can never drift.
     #[inline]
     pub fn row_key_open(&self, channel: usize, row_key: u64) -> bool {
-        let rank = ((row_key >> 12) & 0xF) as usize;
-        let bg = ((row_key >> 4) & 0xF) as usize;
-        let bank = ((row_key >> 8) & 0xF) as usize;
-        let bi = (rank * self.cfg.bankgroups + bg) * self.cfg.banks_per_group + bank;
+        let bi = (key::rank(row_key) as usize * self.cfg.bankgroups
+            + key::bankgroup(row_key) as usize)
+            * self.cfg.banks_per_group
+            + key::bank(row_key) as usize;
         self.channels[channel].open_keys[bi] == row_key
     }
 
@@ -488,6 +725,135 @@ mod tests {
         let c = &d.counters;
         assert_eq!(c.channel_activations.len(), 8);
         assert_eq!(c.channel_activations.iter().sum::<u64>(), c.activations);
+    }
+
+    #[test]
+    fn closed_form_refresh_matches_iterative_walk() {
+        // Drive one bank with ever-later arrivals and shadow the REF
+        // count with the historical one-tREFI-at-a-time walk, tracked
+        // from the public return values alone.
+        for kind in [DramStandardKind::Hbm, DramStandardKind::Ddr4, DramStandardKind::Lpddr5] {
+            let t = kind.config().timing;
+            let mut d = DramModel::new(kind.config());
+            let mut ready_at = 0u64; // bank 0's column horizon
+            let mut next_refresh = t.t_refi;
+            let mut expected_refreshes = 0u64;
+            for arrival in
+                [0, 1, t.t_refi / 2, 3 * t.t_refi + 7, 3 * t.t_refi + 8, 40 * t.t_refi]
+            {
+                let mut cmd = arrival.max(ready_at);
+                let mut activated_by_ref = false;
+                while cmd >= next_refresh {
+                    let end = next_refresh + t.t_rfc;
+                    next_refresh += t.t_refi;
+                    expected_refreshes += 1;
+                    cmd = cmd.max(end);
+                    activated_by_ref = true;
+                }
+                let (done, act) = d.read_burst(0, arrival);
+                assert_eq!(
+                    d.counters.refreshes, expected_refreshes,
+                    "{} arrival {arrival}",
+                    kind.name()
+                );
+                assert_eq!(act, activated_by_ref || expected_refreshes == 0 && arrival == 0);
+                let rd = done - t.t_cl - t.t_bl;
+                ready_at = rd + t.t_ccd;
+            }
+        }
+    }
+
+    #[test]
+    fn read_run_matches_scalar_oracle() {
+        let mut fast = hbm();
+        let mut slow = hbm();
+        let bb = 32u64;
+        // streaks, a ragged tail, a revisit, and a post-refresh arrival
+        for (addr, n, arrival) in
+            [(0u64, 512u64, 0u64), (1 << 20, 100, 0), (0, 512, 0), (64, 7, 3_900_000)]
+        {
+            let (fd, facts) = fast.read_run(addr, n, arrival);
+            let mut sd = 0;
+            let mut sacts = 0;
+            for i in 0..n {
+                let (done, act) = slow.read_burst(addr + i * bb, arrival);
+                sd = done;
+                sacts += act as u64;
+            }
+            assert_eq!((fd, facts), (sd, sacts), "addr={addr} n={n} arrival={arrival}");
+        }
+        fast.flush_sessions();
+        slow.flush_sessions();
+        assert_eq!(fast.counters.reads, slow.counters.reads);
+        assert_eq!(fast.counters.row_hits, slow.counters.row_hits);
+        assert_eq!(fast.counters.activations, slow.counters.activations);
+        assert_eq!(fast.counters.refreshes, slow.counters.refreshes);
+        assert_eq!(fast.counters.session_hist, slow.counters.session_hist);
+        assert_eq!(fast.counters.channel_activations, slow.counters.channel_activations);
+        assert_eq!(fast.busy_until(), slow.busy_until());
+        assert!(fast.counters.energy_pj == slow.counters.energy_pj, "energy must be bit-exact");
+    }
+
+    #[test]
+    fn read_streak_reports_activation_indices() {
+        let mut d = hbm();
+        let t = DramStandardKind::Hbm.config().timing;
+        // Long enough to cross at least one REF: expect the head ACT at
+        // index 0 plus one re-ACT per crossed refresh window.
+        let n = 4 * t.t_refi / t.t_ccd.max(t.t_bl);
+        let mut acts = Vec::new();
+        d.read_streak(0, n, 0, &mut |i| acts.push(i));
+        assert!(acts.len() >= 2, "streak of {n} bursts must cross a refresh");
+        assert_eq!(acts[0], 0);
+        assert!(acts.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(d.counters.activations as usize, acts.len());
+        assert_eq!(d.counters.reads, n);
+    }
+
+    #[test]
+    #[should_panic(expected = "row-group boundary")]
+    fn run_crossing_row_group_rejected() {
+        let mut d = hbm();
+        // HBM row group = 16 KiB = 512 bursts; 513 from 0 crosses.
+        d.read_run(0, 513, 0);
+    }
+
+    #[test]
+    fn clamped_sessions_surface() {
+        let mut d = hbm();
+        // One uninterrupted session longer than the histogram tracks.
+        let n = (MAX_SESSION as u64) + 10;
+        let mut acts = Vec::new();
+        d.read_streak(0, n, 0, &mut |i| acts.push(i));
+        d.flush_sessions();
+        assert_eq!(d.counters.clamped_sessions, 1);
+        assert_eq!(d.counters.session_hist[MAX_SESSION], 1);
+        assert!((d.counters.mean_session() - MAX_SESSION as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_tolerates_histogram_length_mismatch() {
+        let mut a = DramCounters::default();
+        let mut b = DramCounters::default();
+        b.session_hist = vec![0; 8]; // trimmed snapshot
+        b.session_hist[7] = 3;
+        b.clamped_sessions = 2;
+        a.record_session(7);
+        a.merge(&b);
+        assert_eq!(a.session_hist[7], 4);
+        assert_eq!(a.clamped_sessions, 2);
+        // the short histogram can also absorb the long one
+        let mut c = DramCounters::default();
+        c.record_session(300);
+        b.merge(&c);
+        assert_eq!(b.session_hist.len(), MAX_SESSION + 1);
+        assert_eq!(b.session_hist[MAX_SESSION], 1);
+        assert_eq!(b.clamped_sessions, 3);
+        // and record_session into a trimmed histogram grows it
+        let mut d = DramCounters::default();
+        d.session_hist = vec![0; 4];
+        d.record_session(9);
+        assert_eq!(d.session_hist[9], 1);
     }
 
     #[test]

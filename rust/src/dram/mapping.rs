@@ -235,6 +235,12 @@ impl AddressMapping {
         for (i, c) in set.iter().enumerate() {
             ch_table[i] = c as u8;
         }
+        // Row keys carry physical ids in fixed-width fields (see [`key`]);
+        // a geometry outgrowing a field would silently alias keys.
+        assert!(cfg.channels <= 1 << key::CH_BITS, "channels exceed row-key field");
+        assert!(cfg.bankgroups <= 1 << key::BG_BITS, "bankgroups exceed row-key field");
+        assert!(cfg.banks_per_group <= 1 << key::BA_BITS, "banks exceed row-key field");
+        assert!(cfg.ranks <= 1 << key::RA_BITS, "ranks exceed row-key field");
         let burst_bytes = cfg.burst_bytes();
         AddressMapping {
             offset_bits: log2_exact(burst_bytes, "burst_bytes"),
@@ -247,6 +253,12 @@ impl AddressMapping {
             burst_bytes,
             ch_table,
         }
+    }
+
+    /// Channels this mapping stripes across (subset size under a
+    /// [`ChannelSet`] restriction, the full channel count otherwise).
+    pub fn striped_channels(&self) -> u64 {
+        1u64 << self.ch_bits
     }
 
     pub fn burst_bytes(&self) -> u64 {
@@ -307,6 +319,42 @@ impl AddressMapping {
         BurstRange { next: start, end, step: self.burst_bytes }
     }
 
+    /// Split `[addr, addr+len)` into maximal consecutive-burst [`Run`]s,
+    /// each confined to one row group — the coalesced form of
+    /// [`bursts_for_range`](Self::bursts_for_range). Flattening the runs
+    /// back to burst addresses reproduces `bursts_for_range` exactly;
+    /// each run can be handed to `DramModel::{read,write}_run` as a
+    /// whole because every burst of a run lands in the same row of its
+    /// channel's bank.
+    pub fn runs_for_range(&self, addr: u64, len: u64) -> RunRange {
+        RunRange {
+            next: self.burst_align(addr),
+            end: addr + len,
+            step: self.burst_bytes,
+            group: self.row_group_bytes(),
+        }
+    }
+
+    /// `(addr, row_key)` of every burst in `run`, from a single address
+    /// decode: within one row group the key differs only in its channel
+    /// field, which cycles through the stripe table.
+    pub fn run_bursts(&self, run: Run) -> impl Iterator<Item = (u64, u64)> + '_ {
+        debug_assert!(run.bursts > 0);
+        debug_assert_eq!(
+            run.start / self.row_group_bytes(),
+            (run.start + (run.bursts - 1) * self.burst_bytes) / self.row_group_bytes(),
+            "run crosses a row-group boundary"
+        );
+        let base = pack_key(&Loc { channel: 0, ..self.decode(run.start) });
+        let stripe = self.striped_channels();
+        let logical0 = (run.start >> self.offset_bits) & (stripe - 1);
+        let step = self.burst_bytes;
+        (0..run.bursts).map(move |i| {
+            let ch = self.ch_table[((logical0 + i) & (stripe - 1)) as usize] as u64;
+            (run.start + i * step, base | ch << key::CH_SHIFT)
+        })
+    }
+
     /// Bytes spanned by one row group: one row replicated across all
     /// channels (the channel bits are below the column bits, so
     /// consecutive addresses fill all channels' same-numbered row before
@@ -324,14 +372,114 @@ impl AddressMapping {
     }
 }
 
+/// Bit layout of the canonical row key. [`pack_key`] and every consumer
+/// that slices fields back out of a key (the FR-FCFS first-ready
+/// predicate, the run-burst key synthesizer) derive their shifts and
+/// widths from these constants, so the two sides can never disagree.
+/// [`AddressMapping::with_channels`] asserts the device geometry fits
+/// the field widths.
+pub mod key {
+    pub const CH_BITS: u32 = 4;
+    pub const BG_BITS: u32 = 4;
+    pub const BA_BITS: u32 = 4;
+    pub const RA_BITS: u32 = 4;
+    pub const CH_SHIFT: u32 = 0;
+    pub const BG_SHIFT: u32 = CH_SHIFT + CH_BITS;
+    pub const BA_SHIFT: u32 = BG_SHIFT + BG_BITS;
+    pub const RA_SHIFT: u32 = BA_SHIFT + BA_BITS;
+    pub const ROW_SHIFT: u32 = RA_SHIFT + RA_BITS;
+
+    #[inline]
+    fn field(key: u64, shift: u32, bits: u32) -> u32 {
+        ((key >> shift) & ((1u64 << bits) - 1)) as u32
+    }
+
+    #[inline]
+    pub fn channel(key: u64) -> u32 {
+        field(key, CH_SHIFT, CH_BITS)
+    }
+
+    #[inline]
+    pub fn bankgroup(key: u64) -> u32 {
+        field(key, BG_SHIFT, BG_BITS)
+    }
+
+    #[inline]
+    pub fn bank(key: u64) -> u32 {
+        field(key, BA_SHIFT, BA_BITS)
+    }
+
+    #[inline]
+    pub fn rank(key: u64) -> u32 {
+        field(key, RA_SHIFT, RA_BITS)
+    }
+
+    #[inline]
+    pub fn row(key: u64) -> u32 {
+        (key >> ROW_SHIFT) as u32
+    }
+}
+
 /// Pack a decoded location's row identity into the canonical row key.
 #[inline]
 pub fn pack_key(l: &Loc) -> u64 {
-    (l.row as u64) << 16
-        | (l.rank as u64) << 12
-        | (l.bank as u64) << 8
-        | (l.bankgroup as u64) << 4
-        | l.channel as u64
+    (l.row as u64) << key::ROW_SHIFT
+        | (l.rank as u64) << key::RA_SHIFT
+        | (l.bank as u64) << key::BA_SHIFT
+        | (l.bankgroup as u64) << key::BG_SHIFT
+        | (l.channel as u64) << key::CH_SHIFT
+}
+
+/// Inverse of [`pack_key`]. The column is not part of the key (all
+/// columns of a row share it), so it comes back as 0.
+#[inline]
+pub fn unpack_key(k: u64) -> Loc {
+    Loc {
+        channel: key::channel(k),
+        rank: key::rank(k),
+        bankgroup: key::bankgroup(k),
+        bank: key::bank(k),
+        row: key::row(k),
+        col: 0,
+    }
+}
+
+/// A maximal span of consecutive bursts inside one row group. Every
+/// burst of a run hits the same DRAM row on its channel, so the
+/// controller can service the whole run with one row resolution per
+/// channel instead of one per burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Run {
+    /// Burst-aligned start address.
+    pub start: u64,
+    /// Burst count (≥ 1).
+    pub bursts: u64,
+}
+
+/// Iterator over the [`Run`]s of a byte range (see
+/// [`AddressMapping::runs_for_range`]).
+pub struct RunRange {
+    next: u64,
+    end: u64,
+    step: u64,
+    group: u64,
+}
+
+impl Iterator for RunRange {
+    type Item = Run;
+    fn next(&mut self) -> Option<Run> {
+        if self.next >= self.end {
+            return None;
+        }
+        let start = self.next;
+        // `group` is a power of two and `step` divides it, so capping at
+        // the next group boundary keeps the run burst-aligned.
+        let boundary = (start & !(self.group - 1)) + self.group;
+        let end = self.end.min(boundary);
+        let bursts = (end - start).div_ceil(self.step);
+        self.next = start + bursts * self.step;
+        Some(Run { start, bursts })
+    }
 }
 
 /// Iterator over burst-aligned addresses of a byte range.
@@ -506,6 +654,75 @@ mod tests {
         let m = AddressMapping::with_channels(&cfg, &ChannelSet::parse("5").unwrap());
         for i in 0..256u64 {
             assert_eq!(m.decode(i * 32).channel, 5);
+        }
+    }
+
+    #[test]
+    fn key_roundtrips_for_all_standards() {
+        for k in [
+            DramStandardKind::Ddr3,
+            DramStandardKind::Ddr4,
+            DramStandardKind::Gddr5,
+            DramStandardKind::Gddr6,
+            DramStandardKind::Lpddr4,
+            DramStandardKind::Lpddr5,
+            DramStandardKind::Hbm,
+            DramStandardKind::Hbm2,
+        ] {
+            let m = AddressMapping::new(&k.config());
+            let mut a = 0x2357_1113_1719u64;
+            for _ in 0..200 {
+                a = a.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let loc = m.decode(a % m.capacity_bytes());
+                let key = pack_key(&loc);
+                let back = unpack_key(key);
+                assert_eq!(back, Loc { col: 0, ..loc }, "{}", k.name());
+                assert_eq!(key::channel(key), loc.channel);
+                assert_eq!(key::rank(key), loc.rank);
+                assert_eq!(key::bankgroup(key), loc.bankgroup);
+                assert_eq!(key::bank(key), loc.bank);
+                assert_eq!(key::row(key), loc.row);
+            }
+        }
+    }
+
+    #[test]
+    fn runs_flatten_to_bursts() {
+        let m = hbm_map();
+        // Unaligned start, several row groups, ragged tail.
+        for (addr, len) in [(16u64, 1024u64), (0, 40 * 1024), (1 << 20, 33), (5, 1), (0, 16384)] {
+            let bursts: Vec<u64> = m.bursts_for_range(addr, len).collect();
+            let from_runs: Vec<u64> = m
+                .runs_for_range(addr, len)
+                .flat_map(|r| (0..r.bursts).map(move |i| r.start + i * 32))
+                .collect();
+            assert_eq!(bursts, from_runs, "addr={addr} len={len}");
+            // No run may straddle a row-group boundary.
+            for r in m.runs_for_range(addr, len) {
+                let g = m.row_group_bytes();
+                assert_eq!(r.start / g, (r.start + (r.bursts - 1) * 32) / g);
+            }
+        }
+    }
+
+    #[test]
+    fn run_bursts_match_per_burst_decode() {
+        let cfg = DramStandardKind::Hbm.config();
+        for m in [
+            AddressMapping::new(&cfg),
+            AddressMapping::with_channels(&cfg, &ChannelSet::parse("2-3").unwrap()),
+            AddressMapping::with_channels(&cfg, &ChannelSet::parse("5").unwrap()),
+        ] {
+            for run in m.runs_for_range(96, 3000) {
+                let got: Vec<(u64, u64)> = m.run_bursts(run).collect();
+                let want: Vec<(u64, u64)> = (0..run.bursts)
+                    .map(|i| {
+                        let a = run.start + i * 32;
+                        (a, m.row_key(a))
+                    })
+                    .collect();
+                assert_eq!(got, want);
+            }
         }
     }
 

@@ -16,5 +16,5 @@ pub mod mapping;
 pub mod standard;
 
 pub use controller::{DramCounters, DramModel};
-pub use mapping::{AddressMapping, ChannelSet, Loc};
+pub use mapping::{key, pack_key, unpack_key, AddressMapping, ChannelSet, Loc, Run};
 pub use standard::{DramConfig, DramStandardKind};

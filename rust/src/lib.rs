@@ -74,6 +74,37 @@
 //! with already-sampled vertices (GNNSampler), measurably cutting row
 //! activations at equal fanout.
 //!
+//! ## Performance: run-coalesced DRAM service
+//!
+//! The hot loop of every simulation is DRAM burst service. Feature
+//! reads, write-back and mask traffic are overwhelmingly *streaks* —
+//! consecutive bursts inside one DRAM row — so the model offers a
+//! coalesced fast path next to the scalar one:
+//!
+//! * [`dram::AddressMapping::runs_for_range`] slices a byte range into
+//!   [`dram::Run`]s, one per row group, and
+//!   [`dram::AddressMapping::run_bursts`] synthesizes each run's
+//!   per-burst row keys from a *single* decode (within a run the key
+//!   varies only in its channel field);
+//! * [`dram::DramModel::read_run`] / [`write_run`](dram::DramModel::write_run)
+//!   service a whole same-row run in O(1) per (channel × refresh
+//!   window): one row resolution, closed-form bus/tCCD serialization of
+//!   the row-hit tail, closed-form refresh catch-up, counters updated
+//!   arithmetically;
+//! * the FR-FCFS front ([`sim::frfcfs::FrFcfs`]) drains the maximal
+//!   contiguous same-row run per issue event through
+//!   [`dram::DramModel::read_streak`], and the engine's write-back,
+//!   mask and trace-replay paths batch through `write_run`/`read_run`.
+//!
+//! The fast path is **bit-identical** to the burst-by-burst walk — same
+//! counters (energy included, to the bit), same session histogram, same
+//! completion cycles — pinned for all eight DRAM standards by
+//! `tests/golden_parity.rs` and `tests/properties.rs`; the scalar path
+//! stays as the oracle. `cargo bench --bench hotpath` reports the
+//! speedup (`dram.read_run(streak)` row vs `dram.read_burst(sequential)`,
+//! asserted ≥ 5x), and `--bench serve_throughput` asserts the
+//! end-to-end serving jobs/sec headline.
+//!
 //! ## Quickstart
 //!
 //! One run:

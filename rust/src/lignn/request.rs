@@ -80,17 +80,25 @@ impl AddressCalc {
     }
 
     /// Expand a feature read for vertex `src` into its bursts.
+    ///
+    /// Internally iterates row-group [`Run`](crate::dram::Run)s and
+    /// synthesizes per-burst row keys from one decode per run (the key
+    /// varies only in its channel field within a run) — batched decode
+    /// on the hottest expansion path, bit-identical to decoding each
+    /// burst address.
     pub fn expand(&self, src: u32) -> impl Iterator<Item = Burst> + '_ {
         let k = self.elems_per_burst();
         self.mapping
-            .bursts_for_range(self.feature_addr(src), self.flen_bytes)
-            .map(move |addr| Burst {
-                addr,
-                row_key: self.mapping.row_key(addr),
-                src,
-                seq: 0,
-                effective: k,
-            })
+            .runs_for_range(self.feature_addr(src), self.flen_bytes)
+            .flat_map(move |run| self.mapping.run_bursts(run))
+            .map(move |(addr, row_key)| Burst { addr, row_key, src, seq: 0, effective: k })
+    }
+
+    /// The row-group runs of `src`'s feature read — the coalesced form
+    /// of [`expand`](Self::expand) for paths that need no per-burst
+    /// bookkeeping (write-back, prefetch sizing).
+    pub fn expand_runs(&self, src: u32) -> impl Iterator<Item = crate::dram::Run> + '_ {
+        self.mapping.runs_for_range(self.feature_addr(src), self.flen_bytes)
     }
 }
 
@@ -113,6 +121,16 @@ mod tests {
         assert_eq!(bursts[0].addr, c.feature_addr(3));
         assert!(bursts.iter().all(|b| b.effective == 8));
         assert!(bursts.windows(2).all(|w| w[1].addr == w[0].addr + 32));
+        // run-synthesized keys match a full per-burst decode
+        assert!(bursts.iter().all(|b| b.row_key == c.mapping().row_key(b.addr)));
+    }
+
+    #[test]
+    fn expand_runs_cover_feature() {
+        let c = calc(256);
+        let total: u64 = c.expand_runs(3).map(|r| r.bursts).sum();
+        assert_eq!(total, c.bursts_per_feature());
+        assert_eq!(c.expand_runs(3).next().unwrap().start, c.feature_addr(3));
     }
 
     #[test]

@@ -120,6 +120,9 @@ fn metrics_json(m: &lignn::Metrics) -> Json {
         ),
         ("row_hits", Json::num(m.dram.row_hits as f64)),
         ("mean_session", Json::num(m.dram.mean_session())),
+        // sessions long enough to land clamped in the histogram's last
+        // bucket — nonzero means mean_session underestimates
+        ("clamped_sessions", Json::num(m.dram.clamped_sessions as f64)),
         ("energy_pj", Json::num(m.energy.total_pj)),
         ("cache_hits", Json::num(m.cache_hits as f64)),
         ("cache_misses", Json::num(m.cache_misses as f64)),

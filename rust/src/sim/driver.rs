@@ -519,11 +519,15 @@ impl<'a> SimEngine<'a> {
         let mapping = *self.dram.mapping();
         for v in 0..n as u64 {
             let addr = out_base + v * out_bytes;
-            for a in mapping.bursts_for_range(addr, out_bytes) {
+            // Sequential write-back is exactly the traffic the run-
+            // coalesced path exists for: whole row-group runs at a time.
+            for run in mapping.runs_for_range(addr, out_bytes) {
                 if let Some(t) = &mut self.trace {
-                    t.write(a).expect("trace write");
+                    for (a, _) in mapping.run_bursts(run) {
+                        t.write(a).expect("trace write");
+                    }
                 }
-                self.dram.write_burst(a, 0);
+                self.dram.write_run(run.start, run.bursts, 0);
             }
         }
     }
@@ -544,11 +548,13 @@ impl<'a> SimEngine<'a> {
         let mask_bytes = fresh * (elems as u64).div_ceil(8);
         let mask_base = self.cfg.feat_base + (self.dram.mapping().capacity_bytes() >> 2);
         let mapping = *self.dram.mapping();
-        for a in mapping.bursts_for_range(mask_base, mask_bytes) {
+        for run in mapping.runs_for_range(mask_base, mask_bytes) {
             if let Some(t) = &mut self.trace {
-                t.write(a).expect("trace write");
+                for (a, _) in mapping.run_bursts(run) {
+                    t.write(a).expect("trace write");
+                }
             }
-            self.dram.write_burst(a, 0);
+            self.dram.write_run(run.start, run.bursts, 0);
         }
     }
 }

@@ -4,8 +4,22 @@
 //! (first-come). This sits between LiGNN and the DRAM device model for
 //! every variant — it is part of the platform, not of LiGNN — and gives
 //! the baseline the modest locality recovery a real scheduler achieves.
+//!
+//! # Run-coalesced drain
+//!
+//! An issue event drains the *maximal contiguous same-`row_key` run*
+//! starting at the picked burst through [`DramModel::read_streak`] — one
+//! row resolution for the whole run instead of one scan + one service
+//! per burst. This is bit-identical to issuing burst by burst, not an
+//! approximation: all queue bursts carry arrival 0, and once a burst is
+//! picked its row is open, so the scalar scheduler would keep picking
+//! the run's bursts (oldest row-hit) one event at a time anyway — no
+//! older queued burst can share the picked key (it would have been
+//! picked first), intervening pushes never touch DRAM state, and the
+//! queue contents at the *next* pick event are the same either way. The
+//! legacy oracle in `tests/golden_parity.rs` pins this equivalence.
 
-use crate::dram::DramModel;
+use crate::dram::{key, DramModel};
 use crate::lignn::Burst;
 
 /// Ramulator's default per-channel queue depth.
@@ -14,30 +28,42 @@ pub const DEFAULT_DEPTH: usize = 32;
 pub struct FrFcfs {
     depth: usize,
     queues: Vec<Vec<Burst>>,
+    /// Scratch for the streak's sparse ACT indices (head + the rare
+    /// post-refresh re-opens) — kept here to avoid a per-issue alloc.
+    acts: Vec<u64>,
 }
 
 impl FrFcfs {
     pub fn new(channels: usize, depth: usize) -> FrFcfs {
         assert!(depth > 0);
-        FrFcfs { depth, queues: vec![Vec::with_capacity(depth + 1); channels] }
+        FrFcfs {
+            depth,
+            queues: vec![Vec::with_capacity(depth + 1); channels],
+            acts: Vec::new(),
+        }
     }
 
-    /// Enqueue one burst; if its channel queue exceeds the depth, issue one
-    /// burst to `dram`, reporting `(seq, activated)` through `sink`.
+    /// Enqueue one burst; if its channel queue exceeds the depth, issue
+    /// the best pending run to `dram`, reporting `(seq, activated)` per
+    /// burst through `sink`. The burst's `row_key` must be the mapping's
+    /// key for its address (`AddressMapping::row_key`); the channel is
+    /// sliced out of the key, so the push path performs no decode.
     pub fn push(
         &mut self,
         b: Burst,
         dram: &mut DramModel,
         sink: &mut impl FnMut(u32, bool),
     ) {
-        let ch = dram.mapping().decode(b.addr).channel as usize;
+        let ch = key::channel(b.row_key) as usize;
         self.queues[ch].push(b);
         if self.queues[ch].len() > self.depth {
-            self.issue_one(ch, dram, sink);
+            self.issue_run(ch, dram, sink);
         }
     }
 
-    fn issue_one(&mut self, ch: usize, dram: &mut DramModel, sink: &mut impl FnMut(u32, bool)) {
+    /// One issue event: first-ready pick, then drain its whole
+    /// contiguous same-row run (see module docs).
+    fn issue_run(&mut self, ch: usize, dram: &mut DramModel, sink: &mut impl FnMut(u32, bool)) {
         let q = &mut self.queues[ch];
         debug_assert!(!q.is_empty());
         // first-ready: oldest burst whose row is open (O(1) key compare
@@ -46,16 +72,25 @@ impl FrFcfs {
             .iter()
             .position(|b| dram.row_key_open(ch, b.row_key))
             .unwrap_or(0); // first-come otherwise
-        let b = q.remove(pick);
-        let (_, activated) = dram.read_burst(b.addr, 0);
-        sink(b.seq, activated);
+        let run_key = q[pick].row_key;
+        let run = q[pick..].iter().take_while(|b| b.row_key == run_key).count();
+        let addr = q[pick].addr;
+        self.acts.clear();
+        let acts = &mut self.acts;
+        dram.read_streak(addr, run as u64, 0, &mut |i| acts.push(i));
+        let mut next_act = 0;
+        for (i, b) in q.drain(pick..pick + run).enumerate() {
+            let activated = self.acts.get(next_act) == Some(&(i as u64));
+            next_act += activated as usize;
+            sink(b.seq, activated);
+        }
     }
 
     /// Drain all pending bursts.
     pub fn flush(&mut self, dram: &mut DramModel, sink: &mut impl FnMut(u32, bool)) {
         for ch in 0..self.queues.len() {
             while !self.queues[ch].is_empty() {
-                self.issue_one(ch, dram, sink);
+                self.issue_run(ch, dram, sink);
             }
         }
     }
@@ -69,9 +104,10 @@ impl FrFcfs {
 mod tests {
     use super::*;
     use crate::dram::standard::DramStandardKind;
+    use crate::dram::DramModel;
 
-    fn burst(addr: u64) -> Burst {
-        Burst { addr, row_key: addr >> 14, src: 0, seq: 1, effective: 8 }
+    fn real_burst(d: &DramModel, addr: u64) -> Burst {
+        Burst { addr, row_key: d.mapping().row_key(addr), src: 0, seq: 1, effective: 8 }
     }
 
     #[test]
@@ -79,13 +115,31 @@ mod tests {
         let mut d = DramModel::new(DramStandardKind::Hbm.config());
         let mut f = FrFcfs::new(8, 4);
         let mut served = 0;
+        // distinct rows on one channel: bursts 0..4 stay buffered
         for i in 0..4u64 {
-            f.push(burst(i * 256), &mut d, &mut |_, _| served += 1);
+            let b = real_burst(&d, i << 18);
+            f.push(b, &mut d, &mut |_, _| served += 1);
         }
         assert_eq!(served, 0);
         assert_eq!(f.pending(), 4);
-        f.push(burst(4 * 256), &mut d, &mut |_, _| served += 1);
-        assert_eq!(served, 1);
+        f.push(real_burst(&d, 4 << 18), &mut d, &mut |_, _| served += 1);
+        assert_eq!(served, 1, "distinct rows issue one burst per event");
+    }
+
+    #[test]
+    fn overflow_drains_whole_run() {
+        let mut d = DramModel::new(DramStandardKind::Hbm.config());
+        let mut f = FrFcfs::new(8, 4);
+        let mut served = 0;
+        // five same-row bursts (channel 0, consecutive columns)
+        for i in 0..5u64 {
+            let b = real_burst(&d, i * 256);
+            f.push(b, &mut d, &mut |_, _| served += 1);
+        }
+        assert_eq!(served, 5, "the overflowing run drains as one streak");
+        assert_eq!(f.pending(), 0);
+        assert_eq!(d.counters.reads, 5);
+        assert_eq!(d.counters.activations, 1);
     }
 
     #[test]
@@ -95,19 +149,19 @@ mod tests {
         d.read_burst(0, 0);
         let mut f = FrFcfs::new(8, 2);
         let mut order = Vec::new();
-        // conflicting row first (oldest), then a row-0 hit
+        // conflicting row first (oldest), then two row-0 hits
         let conflict = 1u64 << 18;
         {
             let mut sink = |seq: u32, act: bool| order.push((seq, act));
-            f.push(Burst { seq: 10, ..burst(conflict) }, &mut d, &mut sink);
-            f.push(Burst { seq: 11, ..burst(256) }, &mut d, &mut sink);
-            f.push(Burst { seq: 12, ..burst(512) }, &mut d, &mut sink); // overflow → issue
+            f.push(Burst { seq: 10, ..real_burst(&d, conflict) }, &mut d, &mut sink);
+            f.push(Burst { seq: 11, ..real_burst(&d, 256) }, &mut d, &mut sink);
+            f.push(Burst { seq: 12, ..real_burst(&d, 512) }, &mut d, &mut sink); // overflow
         }
-        // the issued one must be a row hit (seq 11), not the older conflict
-        assert_eq!(order, vec![(11, false)]);
+        // the issued run must be the row hits (11, 12), not the older conflict
+        assert_eq!(order, vec![(11, false), (12, false)]);
         let mut sink = |seq: u32, act: bool| order.push((seq, act));
         f.flush(&mut d, &mut sink);
-        assert_eq!(order.len(), 3);
+        assert_eq!(order, vec![(11, false), (12, false), (10, true)]);
     }
 
     #[test]
@@ -116,7 +170,8 @@ mod tests {
         let mut f = FrFcfs::new(8, 16);
         let mut n = 0;
         for i in 0..10u64 {
-            f.push(burst(i * 32), &mut d, &mut |_, _| n += 1);
+            let b = real_burst(&d, i * 32);
+            f.push(b, &mut d, &mut |_, _| n += 1);
         }
         f.flush(&mut d, &mut |_, _| n += 1);
         assert_eq!(n, 10);

@@ -56,8 +56,26 @@ impl TraceWriter {
 
 /// Replay a trace file against a fresh DRAM model; returns its counters
 /// and the final busy time in device cycles.
+///
+/// Consecutive-address lines of the same op are batched through the
+/// run-coalesced DRAM path (`read_run`/`write_run`) — bit-identical to
+/// the burst-by-burst replay, but O(row groups) instead of O(bursts) on
+/// the sequential spans LiGNN traces are full of.
 pub fn replay(path: &Path, mut dram: DramModel) -> Result<(DramCounters, u64)> {
     let f = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let bb = dram.mapping().burst_bytes();
+    let group = dram.mapping().row_group_bytes();
+    // pending run: (is_write, start addr, bursts)
+    let mut pending: Option<(bool, u64, u64)> = None;
+    let mut flush = |dram: &mut DramModel, p: &mut Option<(bool, u64, u64)>| {
+        if let Some((w, start, n)) = p.take() {
+            if w {
+                dram.write_run(start, n, 0);
+            } else {
+                dram.read_run(start, n, 0);
+            }
+        }
+    };
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
         let line = line?;
         let t = line.trim();
@@ -69,16 +87,26 @@ pub fn replay(path: &Path, mut dram: DramModel) -> Result<(DramCounters, u64)> {
             .ok_or_else(|| fail!("{path:?}:{}: malformed", lineno + 1))?;
         let addr = u64::from_str_radix(addr.trim(), 16)
             .with_context(|| format!("{path:?}:{}", lineno + 1))?;
-        match op {
-            "R" => {
-                dram.read_burst(addr, 0);
-            }
-            "W" => {
-                dram.write_burst(addr, 0);
-            }
+        let is_write = match op {
+            "R" => false,
+            "W" => true,
             other => return Err(fail!("{path:?}:{}: bad op `{other}`", lineno + 1)),
+        };
+        match &mut pending {
+            // extend the run while the stream stays consecutive, same-op
+            // and inside one row group
+            Some((w, start, n))
+                if *w == is_write && addr == *start + *n * bb && addr / group == *start / group =>
+            {
+                *n += 1;
+            }
+            _ => {
+                flush(&mut dram, &mut pending);
+                pending = Some((is_write, addr, 1));
+            }
         }
     }
+    flush(&mut dram, &mut pending);
     dram.flush_sessions();
     let busy = dram.busy_until();
     Ok((dram.counters.clone(), busy))

@@ -482,6 +482,219 @@ fn qos_single_tenant_full_channels_matches_serve_run() {
     }
 }
 
+/// Bit-exact equality of every DRAM counter (energy compared by bits).
+fn assert_counters_identical(
+    new: &lignn::dram::DramCounters,
+    gold: &lignn::dram::DramCounters,
+    label: &str,
+) {
+    assert_eq!(new.reads, gold.reads, "{label}: reads");
+    assert_eq!(new.writes, gold.writes, "{label}: writes");
+    assert_eq!(new.activations, gold.activations, "{label}: activations");
+    assert_eq!(new.row_hits, gold.row_hits, "{label}: row_hits");
+    assert_eq!(new.row_conflicts, gold.row_conflicts, "{label}: row_conflicts");
+    assert_eq!(new.row_closed, gold.row_closed, "{label}: row_closed");
+    assert_eq!(new.refreshes, gold.refreshes, "{label}: refreshes");
+    assert_eq!(new.session_hist, gold.session_hist, "{label}: session_hist");
+    assert_eq!(
+        new.channel_activations, gold.channel_activations,
+        "{label}: channel_activations"
+    );
+    assert_eq!(new.clamped_sessions, gold.clamped_sessions, "{label}: clamped_sessions");
+    assert_eq!(
+        new.energy_pj.to_bits(),
+        gold.energy_pj.to_bits(),
+        "{label}: energy_pj"
+    );
+}
+
+use lignn::dram::DramStandardKind;
+
+const ALL_STANDARDS: [DramStandardKind; 8] = [
+    DramStandardKind::Ddr3,
+    DramStandardKind::Ddr4,
+    DramStandardKind::Gddr5,
+    DramStandardKind::Gddr6,
+    DramStandardKind::Lpddr4,
+    DramStandardKind::Lpddr5,
+    DramStandardKind::Hbm,
+    DramStandardKind::Hbm2,
+];
+
+#[test]
+fn run_service_matches_scalar_oracle_for_all_standards() {
+    // The tentpole's core contract: `read_run`/`write_run` are *bit
+    // identical* to the burst-by-burst scalar walk — same completion
+    // cycle for the stream's last burst, same activation count per call,
+    // same counters down to the energy bits — for every DRAM standard.
+    use lignn::util::rng::Pcg64;
+
+    for kind in ALL_STANDARDS {
+        let cfg = kind.config();
+        let mut scalar = DramModel::new(cfg);
+        let mut fast = DramModel::new(cfg);
+        let mapping = *fast.mapping();
+        let bb = mapping.burst_bytes();
+        let group = mapping.row_group_bytes();
+        let mut rng = Pcg64::new(0xC0A1 + kind as u64);
+        let mut arrival = 0u64;
+        for i in 0..600u64 {
+            // random row group, random offset, run length capped at the
+            // group end (the primitive's precondition); occasional large
+            // arrival jumps force refresh catch-up inside and between
+            // calls.
+            let base = (rng.next_u64() % (mapping.capacity_bytes() / group)) * group;
+            let first = rng.next_u64() % (group / bb);
+            let max_run = group / bb - first;
+            let n = 1 + rng.next_u64() % max_run.min(64);
+            let addr = base + first * bb;
+            if i % 7 == 0 {
+                arrival += cfg.timing.t_refi * (1 + rng.next_u64() % 3);
+            }
+            let is_write = rng.next_u64() % 3 == 0;
+            let (gold_done, gold_acts) = {
+                let mut done = 0;
+                let mut acts = 0u64;
+                for j in 0..n {
+                    let (d, activated) = if is_write {
+                        scalar.write_burst(addr + j * bb, arrival)
+                    } else {
+                        scalar.read_burst(addr + j * bb, arrival)
+                    };
+                    done = d;
+                    acts += activated as u64;
+                }
+                (done, acts)
+            };
+            let (done, acts) = if is_write {
+                fast.write_run(addr, n, arrival)
+            } else {
+                fast.read_run(addr, n, arrival)
+            };
+            assert_eq!(done, gold_done, "{kind:?} run {i}: completion cycle");
+            assert_eq!(acts, gold_acts, "{kind:?} run {i}: activations");
+        }
+        scalar.flush_sessions();
+        fast.flush_sessions();
+        assert_eq!(fast.busy_until(), scalar.busy_until(), "{kind:?}: busy_until");
+        assert_counters_identical(&fast.counters, &scalar.counters, &format!("{kind:?}"));
+    }
+}
+
+mod per_burst_ref {
+    //! The pre-coalescing FR-FCFS scheduler, verbatim: one scan + one
+    //! `read_burst` + one `remove` per issue event. The run-aware
+    //! scheduler's drain must be indistinguishable from this.
+    use lignn::dram::{key, DramModel};
+    use lignn::lignn::Burst;
+
+    pub struct PerBurstFrFcfs {
+        depth: usize,
+        queues: Vec<Vec<Burst>>,
+    }
+
+    impl PerBurstFrFcfs {
+        pub fn new(channels: usize, depth: usize) -> PerBurstFrFcfs {
+            PerBurstFrFcfs { depth, queues: vec![Vec::new(); channels] }
+        }
+
+        pub fn push(
+            &mut self,
+            b: Burst,
+            dram: &mut DramModel,
+            sink: &mut impl FnMut(u32, bool),
+        ) {
+            let ch = key::channel(b.row_key) as usize;
+            self.queues[ch].push(b);
+            if self.queues[ch].len() > self.depth {
+                self.issue_one(ch, dram, sink);
+            }
+        }
+
+        fn issue_one(&mut self, ch: usize, dram: &mut DramModel, sink: &mut impl FnMut(u32, bool)) {
+            let q = &mut self.queues[ch];
+            let pick = q
+                .iter()
+                .position(|b| dram.row_key_open(ch, b.row_key))
+                .unwrap_or(0);
+            let b = q.remove(pick);
+            let (_, activated) = dram.read_burst(b.addr, 0);
+            sink(b.seq, activated);
+        }
+
+        pub fn flush(&mut self, dram: &mut DramModel, sink: &mut impl FnMut(u32, bool)) {
+            for ch in 0..self.queues.len() {
+                while !self.queues[ch].is_empty() {
+                    self.issue_one(ch, dram, sink);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn run_aware_frfcfs_matches_per_burst_reference() {
+    // Same burst stream (real mapping keys, mixed feature-read streaks
+    // and random singles) through the run-coalesced scheduler and the
+    // per-burst reference: the sink event *sequence*, every DRAM
+    // counter and the final busy time must all be identical — at a
+    // shallow queue (issue events dominated by short runs) and at the
+    // production depth (long coalesced drains).
+    use lignn::util::rng::Pcg64;
+    use crate::per_burst_ref::PerBurstFrFcfs;
+
+    for kind in [DramStandardKind::Hbm, DramStandardKind::Ddr4] {
+        for depth in [4usize, DEFAULT_DEPTH] {
+            let cfg = kind.config();
+            let mut gold_dram = DramModel::new(cfg);
+            let mut new_dram = DramModel::new(cfg);
+            let channels = cfg.channels;
+            let mut gold = PerBurstFrFcfs::new(channels, depth);
+            let mut new = FrFcfs::new(channels, depth);
+            let mapping = *new_dram.mapping();
+
+            // Stream: feature-read-like streaks (1..=24 consecutive
+            // bursts from a random base) interleaved with random
+            // one-burst reads, real row keys throughout.
+            let mut stream = Vec::new();
+            let mut rng = Pcg64::new(0xF00D + depth as u64 + kind as u64);
+            let mut seq = 1u32;
+            for _ in 0..400 {
+                let streaky = rng.next_u64() % 2 == 0;
+                let base = mapping.burst_align(rng.next_u64() % (1 << 26));
+                let n = if streaky { 1 + rng.next_u64() % 24 } else { 1 };
+                for run in mapping.runs_for_range(base, n * mapping.burst_bytes()) {
+                    for (addr, row_key) in mapping.run_bursts(run) {
+                        stream.push(Burst { addr, row_key, src: 0, seq, effective: 8 });
+                        seq += 1;
+                    }
+                }
+            }
+
+            let mut gold_events = Vec::new();
+            let mut new_events = Vec::new();
+            {
+                let mut gold_sink = |seq: u32, act: bool| gold_events.push((seq, act));
+                let mut new_sink = |seq: u32, act: bool| new_events.push((seq, act));
+                for b in &stream {
+                    gold.push(*b, &mut gold_dram, &mut gold_sink);
+                    new.push(*b, &mut new_dram, &mut new_sink);
+                }
+                gold.flush(&mut gold_dram, &mut gold_sink);
+                new.flush(&mut new_dram, &mut new_sink);
+            }
+            gold_dram.flush_sessions();
+            new_dram.flush_sessions();
+
+            let label = format!("{kind:?} depth={depth}");
+            assert_eq!(new_events.len(), stream.len(), "{label}: every burst served");
+            assert_eq!(new_events, gold_events, "{label}: sink event sequence");
+            assert_eq!(new_dram.busy_until(), gold_dram.busy_until(), "{label}: busy_until");
+            assert_counters_identical(&new_dram.counters, &gold_dram.counters, &label);
+        }
+    }
+}
+
 #[test]
 fn fullbatch_sampler_matches_legacy() {
     // The FullBatch sampler spelled out — both through `cfg.sampler` and

@@ -90,6 +90,98 @@ fn prop_bursts_for_range_exact_cover() {
 }
 
 #[test]
+fn prop_run_path_matches_scalar_path_every_standard() {
+    // Satellite of the run-coalescing PR: for EVERY standard, and both
+    // for the full channel set and a ChannelSet subset, a seeded mix of
+    // streaky and random read/write traffic (with arrival jumps crossing
+    // several tREFI windows) serviced through `read_run`/`write_run`
+    // must leave the model in *exactly* the state the burst-by-burst
+    // walk produces: every counter, the session histogram, per-channel
+    // activations, clamped_sessions, energy bits, busy_until — and the
+    // per-call (completion, activations) return values.
+    use lignn::dram::ChannelSet;
+
+    for kind in ALL_STANDARDS {
+        let cfg = kind.config();
+        let subset = ChannelSet::from_channels(
+            &(0..(cfg.channels as u32 / 2).max(1)).collect::<Vec<u32>>(),
+        )
+        .unwrap();
+        for (mlabel, scalar, fast) in [
+            ("full", DramModel::new(cfg), DramModel::new(cfg)),
+            (
+                "subset",
+                DramModel::with_channel_set(cfg, &subset),
+                DramModel::with_channel_set(cfg, &subset),
+            ),
+        ] {
+            let (mut scalar, mut fast) = (scalar, fast);
+            let m = *fast.mapping();
+            let (bb, group) = (m.burst_bytes(), m.row_group_bytes());
+            let mut rng = Pcg64::new(0xBEEF ^ (kind as u64) << 1 ^ (mlabel.len() as u64));
+            let mut arrival = 0u64;
+            for i in 0..300u64 {
+                let streaky = rng.next_u64() % 2 == 0;
+                let addr = rng.next_u64() % (m.capacity_bytes() - 4 * group);
+                let len = if streaky {
+                    1 + rng.next_u64() % (3 * group) // spans row groups
+                } else {
+                    1 + rng.next_u64() % (4 * bb)
+                };
+                if rng.next_u64() % 11 == 0 {
+                    arrival += cfg.timing.t_refi * (2 + rng.next_u64() % 4);
+                }
+                let is_write = rng.next_u64() % 4 == 0;
+                for run in m.runs_for_range(addr, len) {
+                    let (mut gold_done, mut gold_acts) = (0u64, 0u64);
+                    for (a, key) in m.run_bursts(run) {
+                        assert_eq!(key, m.row_key(a), "{kind:?}/{mlabel} run_bursts key");
+                        let (d, act) = if is_write {
+                            scalar.write_burst(a, arrival)
+                        } else {
+                            scalar.read_burst(a, arrival)
+                        };
+                        gold_done = d;
+                        gold_acts += act as u64;
+                    }
+                    let (done, acts) = if is_write {
+                        fast.write_run(run.start, run.bursts, arrival)
+                    } else {
+                        fast.read_run(run.start, run.bursts, arrival)
+                    };
+                    assert_eq!(done, gold_done, "{kind:?}/{mlabel} call {i}: completion");
+                    assert_eq!(acts, gold_acts, "{kind:?}/{mlabel} call {i}: activations");
+                }
+            }
+            scalar.flush_sessions();
+            fast.flush_sessions();
+            let s = &scalar.counters;
+            let f = &fast.counters;
+            let label = format!("{kind:?}/{mlabel}");
+            assert_eq!(fast.busy_until(), scalar.busy_until(), "{label}: busy_until");
+            assert_eq!(f.reads, s.reads, "{label}: reads");
+            assert_eq!(f.writes, s.writes, "{label}: writes");
+            assert_eq!(f.activations, s.activations, "{label}: activations");
+            assert_eq!(f.row_hits, s.row_hits, "{label}: row_hits");
+            assert_eq!(f.row_conflicts, s.row_conflicts, "{label}: row_conflicts");
+            assert_eq!(f.row_closed, s.row_closed, "{label}: row_closed");
+            assert_eq!(f.refreshes, s.refreshes, "{label}: refreshes");
+            assert_eq!(f.session_hist, s.session_hist, "{label}: session_hist");
+            assert_eq!(
+                f.channel_activations, s.channel_activations,
+                "{label}: channel_activations"
+            );
+            assert_eq!(f.clamped_sessions, s.clamped_sessions, "{label}: clamped_sessions");
+            assert_eq!(
+                f.energy_pj.to_bits(),
+                s.energy_pj.to_bits(),
+                "{label}: energy bits"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_lru_matches_reference_model() {
     // Reference: Vec-based LRU (O(n) but obviously correct).
     let cap = 8;
