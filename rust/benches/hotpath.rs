@@ -8,7 +8,8 @@ use lignn::cache::LruCache;
 use lignn::config::{GraphPreset, SimConfig, Variant};
 use lignn::dram::{DramModel, DramStandardKind};
 use lignn::lignn::{AddressCalc, Criteria, LignnUnit};
-use lignn::sim::{run_sim, SweepRunner};
+use lignn::sim::{run_sim, run_sim_recorded, SweepRunner};
+use lignn::telemetry::TraceRecorder;
 use lignn::util::benchkit::{print_table, time};
 use lignn::util::json::Json;
 use lignn::util::rng::Pcg64;
@@ -152,6 +153,38 @@ fn main() {
             let _ = run_sim(&cfg, &g);
         });
         record("run_sim(small, LG-T, layers=2)", 2.0 * edges / t.best_s, "edges", t.best_s);
+    }
+
+    // Telemetry overhead: the same small LG-T run with a TraceRecorder
+    // (ring + timeline) attached. The recorder only snapshots counters
+    // at phase boundaries — a handful of spans per run — so the
+    // overhead bar is <3% on the best-of-5 time.
+    {
+        let cfg = SimConfig {
+            graph: GraphPreset::Small,
+            variant: Variant::T,
+            ..Default::default()
+        };
+        let g = cfg.build_graph();
+        let edges = g.num_edges() as f64;
+        let bare = time(5, || {
+            let _ = run_sim(&cfg, &g);
+        });
+        let traced = time(5, || {
+            let mut rec = TraceRecorder::new().with_timeline(4096);
+            let _ = run_sim_recorded(&cfg, &g, &mut rec);
+        });
+        record("run_sim(small, LG-T, traced)", edges / traced.best_s, "edges", traced.best_s);
+        let overhead = traced.best_s / bare.best_s - 1.0;
+        println!(
+            "telemetry overhead on run_sim(small, LG-T): {:.2}% (bar: <3%)",
+            overhead * 100.0
+        );
+        assert!(
+            overhead < 0.03,
+            "TraceRecorder must cost <3% on the hot path, got {:.2}%",
+            overhead * 100.0
+        );
     }
 
     // Sweep executor: 10-point backward α sweep — one shared transpose,

@@ -39,6 +39,12 @@
 //!   per-tenant scheduling ([`qos::QosScheduler`]), and per-tenant DRAM
 //!   channel partitioning ([`qos::ChannelPartition`] over
 //!   [`dram::ChannelSet`]) with queue-wait/SLO/isolation reporting,
+//! * [`telemetry`] — observability: a [`telemetry::Recorder`] the
+//!   engine drives at phase boundaries (per-span DRAM counter deltas
+//!   with cycle stamps), a windowed utilization [`telemetry::Timeline`],
+//!   Chrome/Perfetto + Prometheus exporters, and the serve-side latency
+//!   histograms ([`telemetry::LogHist`]) — provably inert when disabled
+//!   (recorded runs are pinned bit-identical to bare ones),
 //! * [`analytic`] — the closed-form burst/row model of §3.3 and the
 //!   area/power cost model of §5.2.4,
 //! * [`dropout`] — element/burst/row-granular mask generation shared by the
@@ -213,6 +219,34 @@
 //! }
 //! ```
 //!
+//! Recording a trace (per-phase DRAM attribution + utilization
+//! timeline from an embedded run; the recorder is read-only over the
+//! DRAM counters, so the metrics are bit-identical to `run_sim`):
+//!
+//! ```no_run
+//! use lignn::config::SimConfig;
+//! use lignn::sim::run_sim_recorded;
+//! use lignn::telemetry::{chrome_trace, prometheus_text, TraceRecorder};
+//!
+//! let mut cfg = SimConfig::default();
+//! cfg.layers = 2;
+//! cfg.epochs = 2;
+//! let graph = cfg.build_graph();
+//! let mut rec = TraceRecorder::new().with_timeline(4096);
+//! let m = run_sim_recorded(&cfg, &graph, &mut rec);
+//! for span in rec.spans() {
+//!     println!(
+//!         "epoch {} {}: cycles {}..{} acts={}",
+//!         span.epoch, span.kind.label(), span.start_cycle, span.end_cycle,
+//!         span.dram.activations
+//!     );
+//! }
+//! // Open trace.json at https://ui.perfetto.dev
+//! let doc = chrome_trace(&rec, &m, &cfg.dram.config());
+//! std::fs::write("trace.json", doc.to_string()).unwrap();
+//! println!("{}", prometheus_text(&m, Some(&rec)));
+//! ```
+//!
 //! Custom phase composition (e.g. epochs with shared engine state):
 //!
 //! ```no_run
@@ -245,6 +279,7 @@ pub mod runtime;
 pub mod sample;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;
@@ -255,3 +290,4 @@ pub use sample::{EpochSubgraph, Sampler, SamplerKind};
 pub use serve::{GraphStore, ServeJob, ServeReport, ServeRunner};
 pub use sim::metrics::Metrics;
 pub use sim::{Phase, SimEngine, SweepPlan, SweepRunner};
+pub use telemetry::{NullRecorder, Recorder, TraceRecorder};

@@ -30,8 +30,10 @@ use lignn::analytic::{AlgoDropoutModel, CostModel};
 use lignn::config::{GraphPreset, SamplerKind, SimConfig, Variant};
 use lignn::qos::{QosEngine, TenantSet};
 use lignn::serve::{GraphStore, ServeJob, ServeRunner};
+use lignn::sim::metrics::QueueWaitStats;
 use lignn::sim::runs::alpha_grid;
-use lignn::sim::{run_sim, SweepPlan, SweepRunner};
+use lignn::sim::{run_sim, run_sim_recorded, SweepPlan, SweepRunner};
+use lignn::telemetry::{chrome_trace, prometheus_text, PhaseActs, TraceRecorder};
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
 use lignn::util::error::{Error, Result};
@@ -78,7 +80,9 @@ fn sim_config(a: &Args) -> Result<SimConfig> {
         cfg.mask_writeback = false;
     }
     cfg.backward = a.has("backward");
-    cfg.trace_path = a.get("trace").map(str::to_string);
+    // `--trace` now names the Perfetto export (see cmd_simulate); the
+    // raw burst-capture file moved to `--burst-trace`.
+    cfg.trace_path = a.get("burst-trace").map(str::to_string);
     cfg.validate().map_err(Error::msg)?;
     Ok(cfg)
 }
@@ -98,53 +102,68 @@ fn json_opt(v: Option<f64>) -> Json {
     v.map(Json::num).unwrap_or(Json::Null)
 }
 
+/// Every mode's per-run JSON comes from [`Metrics::to_json`] — one
+/// schema site. The mode-specific keys are pre-seeded `null` so
+/// simulate/sample/serve/qos rows all expose the same key set; each
+/// mode overwrites the keys it owns.
 fn metrics_json(m: &lignn::Metrics) -> Json {
+    let mut obj = m.to_json();
+    if let Json::Obj(fields) = &mut obj {
+        for key in [
+            "tenant",
+            "label",
+            "queue_wait_ms",
+            "run_ms",
+            "epoch0_edges",
+            "edge_coverage",
+            "same_group_rate",
+        ] {
+            fields.insert(key.into(), Json::Null);
+        }
+    }
+    obj
+}
+
+/// Per-phase DRAM activation attribution as recorded by the QoS
+/// workers' [`PhaseActs`] recorder.
+fn phase_acts_json(p: &PhaseActs) -> Json {
     Json::obj(vec![
-        ("variant", Json::str(m.variant.clone())),
-        ("graph", Json::str(m.graph.clone())),
-        ("model", Json::str(m.model.clone())),
-        ("dram", Json::str(m.dram_standard.clone())),
-        ("alpha", Json::num(m.alpha)),
-        ("exec_ns", Json::num(m.exec_ns)),
-        ("mem_ns", Json::num(m.mem_ns)),
-        ("compute_ns", Json::num(m.compute_ns)),
-        ("bursts", Json::num(m.dram.total_bursts() as f64)),
-        ("reads", Json::num(m.dram.reads as f64)),
-        ("writes", Json::num(m.dram.writes as f64)),
-        ("activations", Json::num(m.dram.activations as f64)),
+        ("sample", Json::num(p.sample as f64)),
         (
-            "channel_activations",
-            Json::Arr(
-                m.dram.channel_activations.iter().map(|&a| Json::num(a as f64)).collect(),
-            ),
+            "forward",
+            Json::Arr(p.forward.iter().map(|&v| Json::num(v as f64)).collect()),
         ),
-        ("row_hits", Json::num(m.dram.row_hits as f64)),
-        ("mean_session", Json::num(m.dram.mean_session())),
-        // sessions long enough to land clamped in the histogram's last
-        // bucket — nonzero means mean_session underestimates
-        ("clamped_sessions", Json::num(m.dram.clamped_sessions as f64)),
-        ("energy_pj", Json::num(m.energy.total_pj)),
-        ("cache_hits", Json::num(m.cache_hits as f64)),
-        ("cache_misses", Json::num(m.cache_misses as f64)),
-        ("desired_elems", Json::num(m.unit.desired_elems as f64)),
-        ("feat_hit", Json::num(m.feat_hit as f64)),
-        ("feat_new", Json::num(m.feat_new as f64)),
-        ("feat_merge", Json::num(m.feat_merge as f64)),
-        ("feat_dropped", Json::num(m.feat_dropped as f64)),
-        (
-            "layer_reads",
-            Json::Arr(m.layer_reads.iter().map(|&r| Json::num(r as f64)).collect()),
-        ),
-        ("backward_reads", Json::num(m.backward_reads as f64)),
-        ("sampler", Json::str(m.sampler.clone())),
-        ("sampled_edges", Json::num(m.sampled_edges as f64)),
+        ("backward", Json::num(p.backward as f64)),
+        ("write_back", Json::num(p.write_back as f64)),
+        ("mask_write_back", Json::num(p.mask_write_back as f64)),
+        ("total", Json::num(p.total() as f64)),
     ])
 }
 
 fn cmd_simulate(a: &Args) -> Result<()> {
     let cfg = sim_config(a)?;
     let graph = load_graph(a, &cfg)?;
-    let m = run_sim(&cfg, &graph);
+    let trace_path = a.get("trace");
+    let prom_path = a.get("prom");
+    let want_telemetry =
+        trace_path.is_some() || prom_path.is_some() || a.get("timeline").is_some();
+    let m = if want_telemetry {
+        let window: u64 = a.parse_or("timeline", 4096).map_err(Error::msg)?;
+        let mut rec = TraceRecorder::new().with_timeline(window);
+        let m = run_sim_recorded(&cfg, &graph, &mut rec);
+        if let Some(path) = trace_path {
+            let trace = chrome_trace(&rec, &m, &cfg.dram.config());
+            std::fs::write(path, format!("{trace}\n"))
+                .map_err(|e| Error::msg(format!("writing trace `{path}`: {e}")))?;
+        }
+        if let Some(path) = prom_path {
+            std::fs::write(path, prometheus_text(&m, Some(&rec)))
+                .map_err(|e| Error::msg(format!("writing metrics `{path}`: {e}")))?;
+        }
+        m
+    } else {
+        run_sim(&cfg, &graph)
+    };
     if a.has("json") {
         println!("{}", metrics_json(&m));
     } else {
@@ -359,6 +378,17 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 ("elapsed_ms", Json::num(elapsed_ms)),
                 ("jobs_per_sec", Json::num(jobs_per_sec)),
                 ("transposes", Json::num(store.total_transposes() as f64)),
+                // serving-run aggregates under one key, mirroring the
+                // qos-mode `stats` object
+                (
+                    "stats",
+                    Json::obj(vec![
+                        ("jobs", Json::num(jobs.len() as f64)),
+                        ("elapsed_ms", Json::num(elapsed_ms)),
+                        ("jobs_per_sec", Json::num(jobs_per_sec)),
+                        ("transposes", Json::num(store.total_transposes() as f64)),
+                    ]),
+                ),
                 ("results", Json::Arr(results)),
                 ("reports", Json::Arr(reports)),
             ])
@@ -487,6 +517,16 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                     ("mean_wait_ms", Json::num(rep.wait.mean_wait_ms)),
                     ("max_wait_ms", Json::num(rep.wait.max_wait_ms)),
                     ("mean_run_ms", Json::num(rep.wait.mean_run_ms)),
+                    ("jobs_waited", Json::num(rep.wait.jobs as f64)),
+                    ("wait_p50_ms", json_opt(rep.wait.wait_percentile_ms(0.5))),
+                    ("wait_p95_ms", json_opt(rep.wait.wait_percentile_ms(0.95))),
+                    ("wait_p99_ms", json_opt(rep.wait.wait_percentile_ms(0.99))),
+                    ("e2e_p50_ms", json_opt(rep.wait.e2e_percentile_ms(0.5))),
+                    ("e2e_p95_ms", json_opt(rep.wait.e2e_percentile_ms(0.95))),
+                    ("e2e_p99_ms", json_opt(rep.wait.e2e_percentile_ms(0.99))),
+                    ("queue_depth_mean", Json::num(rep.depth.mean())),
+                    ("queue_depth_max", Json::num(rep.depth.max as f64)),
+                    ("phase_activations", phase_acts_json(&rep.phase_acts)),
                     ("slo_ms", json_opt(rep.slo_ms)),
                     ("slo_attainment", json_opt(rep.slo_attainment)),
                     ("acts_inside_partition", Json::num(inside as f64)),
@@ -498,6 +538,41 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                 ])
             })
             .collect();
+        // One merged latency aggregate over every tenant group — the
+        // serve-wide view a dashboard scrapes without re-deriving it
+        // from per-report rows.
+        let mut all_wait = QueueWaitStats::default();
+        for rep in &outcome.reports {
+            all_wait.merge(&rep.wait);
+        }
+        let depth_rows: Vec<Json> = outcome
+            .depth
+            .iter()
+            .map(|(tenant, g)| {
+                Json::obj(vec![
+                    ("tenant", Json::str(tenant.clone())),
+                    ("samples", Json::num(g.samples as f64)),
+                    ("mean", Json::num(g.mean())),
+                    ("max", Json::num(g.max as f64)),
+                    ("last", Json::num(g.last as f64)),
+                ])
+            })
+            .collect();
+        let stats = Json::obj(vec![
+            ("jobs", Json::num(all_wait.jobs as f64)),
+            ("mean_wait_ms", Json::num(all_wait.mean_wait_ms)),
+            ("max_wait_ms", Json::num(all_wait.max_wait_ms)),
+            ("mean_run_ms", Json::num(all_wait.mean_run_ms)),
+            ("wait_p50_ms", json_opt(all_wait.wait_percentile_ms(0.5))),
+            ("wait_p95_ms", json_opt(all_wait.wait_percentile_ms(0.95))),
+            ("wait_p99_ms", json_opt(all_wait.wait_percentile_ms(0.99))),
+            ("e2e_p50_ms", json_opt(all_wait.e2e_percentile_ms(0.5))),
+            ("e2e_p95_ms", json_opt(all_wait.e2e_percentile_ms(0.95))),
+            ("e2e_p99_ms", json_opt(all_wait.e2e_percentile_ms(0.99))),
+            ("elapsed_ms", Json::num(outcome.elapsed_ms)),
+            ("jobs_per_sec", Json::num(outcome.jobs_per_sec())),
+            ("queue_depth", Json::Arr(depth_rows)),
+        ]);
         println!(
             "{}",
             Json::obj(vec![
@@ -509,6 +584,7 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                 ("elapsed_ms", Json::num(outcome.elapsed_ms)),
                 ("jobs_per_sec", Json::num(outcome.jobs_per_sec())),
                 ("transposes", Json::num(store.total_transposes() as f64)),
+                ("stats", stats),
                 ("results", Json::Arr(results)),
                 ("reports", Json::Arr(reports)),
             ])
@@ -736,7 +812,10 @@ fn usage() {
          common flags: --graph lj|or|pa|small|tiny --model gcn|sage|gin \\\n\
          --dram hbm|ddr4|gddr5 --variant A|B|R|S|T|M --alpha 0.5 --json\n\
          engine flags: --layers N --epochs N --backward --channel-balance \\\n\
-         --no-mask-writeback --trace <file> --graph-file <path>\n\
+         --no-mask-writeback --burst-trace <file> --graph-file <path>\n\
+         telemetry flags (simulate): --trace <trace.json> --timeline <cycles> \\\n\
+         --prom <file> (Perfetto span trace / DRAM-utilization window / \\\n\
+         Prometheus text snapshot)\n\
          sampling flags: --sampler full|neighbor|locality --fanout N|inf|N,M,... \\\n\
          (layer-wise budgets: --fanout 10,5; sample: --compare runs all three)\n\
          serve flags: --graphs k=N:d=D,...|presets --jobs N --threads N \\\n\

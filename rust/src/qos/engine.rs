@@ -22,7 +22,8 @@ use crate::serve::{
     build_reports, plan_references, EnginePool, GraphStore, ServeJob, ServeReport, WorkItem,
 };
 use crate::sim::metrics::{Metrics, QueueWaitStats};
-use crate::sim::run_sim_with_buffer;
+use crate::sim::run_sim_recorded_with_buffer;
+use crate::telemetry::{DepthGauge, PhaseActs};
 use crate::util::error::{Error, Result};
 
 use super::partition::ChannelPartition;
@@ -36,6 +37,8 @@ struct Completed {
     queue_wait_ms: f64,
     run_ms: f64,
     metrics: Metrics,
+    /// Per-phase activation attribution recorded during the run.
+    phase: PhaseActs,
 }
 
 /// One job's outcome with its serving-latency bookkeeping.
@@ -73,6 +76,12 @@ pub struct QosReport {
     /// summed over the group's jobs. `outside` must be 0 whenever
     /// `channels` is set — the partition audit.
     pub isolation: Option<(u64, u64)>,
+    /// Per-phase activation attribution summed over the group's jobs
+    /// (`total()` equals the group's total DRAM activations).
+    pub phase_acts: PhaseActs,
+    /// The tenant's ingest-lane queue-depth gauge (shared across the
+    /// tenant's groups — one lane per tenant).
+    pub depth: DepthGauge,
 }
 
 impl QosReport {
@@ -92,8 +101,12 @@ impl QosReport {
             }
             _ => String::new(),
         };
+        let p95 = match self.wait.wait_percentile_ms(0.95) {
+            Some(p) => format!(" / {p:.2}ms p95"),
+            None => String::new(),
+        };
         format!(
-            "{} [w={} ch={channels}] wait {:.2}ms mean / {:.2}ms max{slo} — {}",
+            "{} [w={} ch={channels}] wait {:.2}ms mean{p95} / {:.2}ms max{slo} — {}",
             self.tenant(),
             self.weight,
             self.wait.mean_wait_ms,
@@ -110,6 +123,9 @@ pub struct QosOutcome {
     pub results: Vec<QosJobResult>,
     /// Per-(tenant, graph, workload-shape) reports, first-seen order.
     pub reports: Vec<QosReport>,
+    /// Per-lane `(tenant, gauge)` queue-depth gauges, registration
+    /// order (includes tenants that never submitted).
+    pub depth: Vec<(String, DepthGauge)>,
     /// Wall-clock span from engine start to drain.
     pub elapsed_ms: f64,
 }
@@ -158,7 +174,17 @@ impl QosEngine {
                         let picked_up = Instant::now();
                         let queue_wait_ms =
                             picked_up.duration_since(pending.submitted).as_secs_f64() * 1e3;
-                        let metrics = run_sim_with_buffer(&pending.job.cfg, graph, &mut buf);
+                        // PhaseActs only reads counter deltas at phase
+                        // boundaries — simulation results stay
+                        // bit-identical to the unrecorded path (pinned
+                        // by the golden parity tests).
+                        let mut phase = PhaseActs::default();
+                        let metrics = run_sim_recorded_with_buffer(
+                            &pending.job.cfg,
+                            graph,
+                            &mut buf,
+                            &mut phase,
+                        );
                         let run_ms = picked_up.elapsed().as_secs_f64() * 1e3;
                         done.lock().expect("qos results poisoned").push(Completed {
                             id: pending.id,
@@ -166,6 +192,7 @@ impl QosEngine {
                             queue_wait_ms,
                             run_ms,
                             metrics,
+                            phase,
                         });
                     }
                 })
@@ -251,11 +278,14 @@ impl QosEngine {
         let mut jobs: Vec<ServeJob> = Vec::with_capacity(completed.len());
         let mut job_metrics: Vec<Metrics> = Vec::with_capacity(completed.len());
         let mut latency: Vec<(u64, f64, f64)> = Vec::with_capacity(completed.len());
+        let mut phases: Vec<PhaseActs> = Vec::with_capacity(completed.len());
         for c in completed {
             jobs.push(c.job);
             job_metrics.push(c.metrics);
             latency.push((c.id, c.queue_wait_ms, c.run_ms));
+            phases.push(c.phase);
         }
+        let depth = self.queue.depth_gauges();
 
         // Reference runs ride a plain engine pool — the queue is closed,
         // so weighted fairness no longer applies, and each reference
@@ -301,6 +331,15 @@ impl QosEngine {
                     }
                     (inside, outside)
                 });
+                let mut phase_acts = PhaseActs::default();
+                for &i in &idxs {
+                    phase_acts.merge(&phases[i]);
+                }
+                let lane_depth = depth
+                    .iter()
+                    .find(|(name, _)| name == &serve.tenant)
+                    .map(|(_, g)| g.clone())
+                    .unwrap_or_default();
                 QosReport {
                     serve,
                     weight: spec.weight,
@@ -309,6 +348,8 @@ impl QosEngine {
                     slo_ms: spec.slo_ms,
                     slo_attainment,
                     isolation,
+                    phase_acts,
+                    depth: lane_depth,
                 }
             })
             .collect();
@@ -327,7 +368,7 @@ impl QosEngine {
                 metrics,
             })
             .collect();
-        Ok(QosOutcome { results, reports, elapsed_ms })
+        Ok(QosOutcome { results, reports, depth, elapsed_ms })
     }
 }
 
@@ -384,7 +425,9 @@ mod tests {
             assert_eq!(r.metrics.alpha, alpha);
             assert!(r.queue_wait_ms >= 0.0 && r.run_ms > 0.0);
         }
-        // per-job metrics are the pure-function results
+        // per-job metrics are the pure-function results — the worker's
+        // attached PhaseActs recorder must not perturb the simulation
+        assert!(outcome.results.iter().any(|r| r.metrics.dram.activations > 0));
         let g = GraphPreset::Tiny.build(7);
         for r in &outcome.results {
             let serial = run_sim(&tiny_cfg(r.metrics.alpha), &g);
@@ -407,7 +450,18 @@ mod tests {
                 assert!(row.activation_ratio < 1.0);
             }
             assert!(rep.summary().contains("ch=all"));
+            // phase attribution partitions the group's activations
+            let group_acts: u64 =
+                rep.serve.rows.iter().map(|r| r.metrics.dram.activations).sum();
+            assert_eq!(rep.phase_acts.total(), group_acts, "{}", rep.tenant());
+            assert!(rep.depth.samples > 0, "{}: lane gauge never sampled", rep.tenant());
+            assert!(rep.wait.wait_percentile_ms(0.95).is_some());
         }
+        // per-lane gauges are surfaced on the outcome too, in
+        // registration order
+        assert_eq!(outcome.depth.len(), 2);
+        assert_eq!(outcome.depth[0].0, "a");
+        assert!(outcome.depth.iter().all(|(_, g)| g.last == 0), "queues drained");
         assert!(outcome.elapsed_ms > 0.0 && outcome.jobs_per_sec() > 0.0);
     }
 

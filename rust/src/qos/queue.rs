@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use crate::fail;
 use crate::serve::ServeJob;
+use crate::telemetry::DepthGauge;
 use crate::util::error::Result;
 
 use super::tenant::TenantSet;
@@ -38,6 +39,8 @@ struct Lane {
     /// Served work normalized by weight — the WFQ virtual time.
     vtime: f64,
     queue: VecDeque<PendingJob>,
+    /// Queue length sampled at every admit and dispatch.
+    depth: DepthGauge,
 }
 
 /// Weighted-fair multi-lane queue (single-threaded core; see
@@ -61,6 +64,7 @@ impl QosScheduler {
                     weight: t.weight,
                     vtime: 0.0,
                     queue: VecDeque::new(),
+                    depth: DepthGauge::default(),
                 })
                 .collect(),
             next_id: 0,
@@ -85,6 +89,7 @@ impl QosScheduler {
             l.vtime = l.vtime.max(self.vnow);
         }
         l.queue.push_back(PendingJob { id, job, submitted: Instant::now() });
+        l.depth.sample(l.queue.len());
         self.pending += 1;
         id
     }
@@ -103,7 +108,9 @@ impl QosScheduler {
         self.vnow = l.vtime;
         l.vtime += 1.0 / l.weight;
         self.pending -= 1;
-        l.queue.pop_front()
+        let job = l.queue.pop_front();
+        l.depth.sample(l.queue.len());
+        job
     }
 
     /// Jobs queued and not yet popped.
@@ -114,6 +121,12 @@ impl QosScheduler {
     /// Jobs ever submitted.
     pub fn submitted(&self) -> u64 {
         self.next_id
+    }
+
+    /// Per-lane queue-depth gauges (sampled at admit and dispatch), in
+    /// registration order.
+    pub fn depth_gauges(&self) -> Vec<(String, DepthGauge)> {
+        self.lanes.iter().map(|l| (l.name.clone(), l.depth.clone())).collect()
     }
 }
 
@@ -185,6 +198,11 @@ impl IngestQueue {
 
     pub fn submitted(&self) -> u64 {
         self.state.lock().expect("ingest queue poisoned").sched.submitted()
+    }
+
+    /// Snapshot of the per-lane queue-depth gauges.
+    pub fn depth_gauges(&self) -> Vec<(String, DepthGauge)> {
+        self.state.lock().expect("ingest queue poisoned").sched.depth_gauges()
     }
 }
 
@@ -272,6 +290,28 @@ mod tests {
             }
         }
         assert!(max_b_run <= 1, "idle lane burst-monopolized ({max_b_run} in a row)");
+    }
+
+    #[test]
+    fn depth_gauges_track_admit_and_dispatch() {
+        let mut s = two_lane_sched();
+        s.push(0, job("g", "a")); // lane a depth 1
+        s.push(0, job("g", "a")); // lane a depth 2
+        s.push(1, job("g", "b")); // lane b depth 1
+        while s.pop().is_some() {}
+        let gauges = s.depth_gauges();
+        assert_eq!(gauges.len(), 2);
+        let (ref name_a, ref depth_a) = gauges[0];
+        assert_eq!(name_a, "a");
+        // Samples: admit→1, admit→2, dispatch→1, dispatch→0.
+        assert_eq!(depth_a.samples, 4);
+        assert_eq!(depth_a.max, 2);
+        assert_eq!(depth_a.last, 0);
+        assert_eq!(depth_a.mean(), 1.0);
+        let (ref name_b, ref depth_b) = gauges[1];
+        assert_eq!(name_b, "b");
+        assert_eq!(depth_b.samples, 2);
+        assert_eq!(depth_b.max, 1);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::dram::DramModel;
 use crate::graph::CsrGraph;
 use crate::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger, UnitStats};
 use crate::sample::Sampler;
+use crate::telemetry::{DramSnapshot, Recorder, SpanEvent, SpanKind};
 
 use super::frfcfs::{FrFcfs, DEFAULT_DEPTH};
 use super::metrics::Metrics;
@@ -93,6 +94,15 @@ fn intermediate_base(cfg: &SimConfig, dram: &DramModel, buf: usize) -> u64 {
     cfg.feat_base + (cap >> 1) + if buf & 1 == 1 { cap >> 2 } else { 0 }
 }
 
+/// A telemetry span the engine has opened but not yet closed: the next
+/// phase boundary (or `finish`) closes it against a fresh snapshot.
+struct OpenSpan {
+    kind: SpanKind,
+    epoch: u32,
+    start_cycle: u64,
+    start: DramSnapshot,
+}
+
 fn merge_stats(into: &mut UnitStats, s: &UnitStats) {
     into.features_in += s.features_in;
     into.total_elems += s.total_elems;
@@ -152,6 +162,15 @@ pub struct SimEngine<'a> {
     sampled_edges: u64,
     /// Sampling-policy label reported in [`Metrics::sampler`].
     sampler_label: String,
+    /// Telemetry sink, attached via [`set_recorder`](Self::set_recorder)
+    /// only when enabled — the hot path pays a single `None` branch per
+    /// *phase*, never per burst, and the recorder only ever reads the
+    /// public DRAM counters (so recorded runs stay bit-identical).
+    rec: Option<&'a mut dyn Recorder>,
+    /// Span currently accumulating (closed by the next boundary).
+    open_span: Option<OpenSpan>,
+    /// Epoch stamp applied to spans opened from here on.
+    epoch: u32,
 }
 
 impl<'a> SimEngine<'a> {
@@ -190,6 +209,72 @@ impl<'a> SimEngine<'a> {
             compute_ns: 0.0,
             sampled_edges: 0,
             sampler_label: cfg.sampler_label(),
+            rec: None,
+            open_span: None,
+            epoch: 0,
+        }
+    }
+
+    /// Attach a telemetry recorder for this run. A disabled recorder
+    /// (`enabled() == false`, e.g. [`NullRecorder`]
+    /// (crate::telemetry::NullRecorder)) is not stored at all, so the
+    /// disabled path is exactly the bare engine.
+    pub fn set_recorder(&mut self, rec: &'a mut dyn Recorder) {
+        if rec.enabled() {
+            self.rec = Some(rec);
+        }
+    }
+
+    /// Stamp subsequently opened spans with `epoch` (the canonical
+    /// schedules call this at each epoch top).
+    pub fn set_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+    }
+
+    /// Mark the start of per-epoch sampling (subgraph construction).
+    /// Opens a `Sample` span; under full-batch training it closes
+    /// zero-length at the first forward phase.
+    pub fn note_sample(&mut self) {
+        self.mark_span(SpanKind::Sample);
+    }
+
+    /// Phase boundary: close the open span against the current DRAM
+    /// state and open a new one. In-flight bursts left in the scheduling
+    /// window are serviced inside whichever span is open when they
+    /// drain — the same "at most a scheduling window bleeds into the
+    /// next bucket" semantics as `credit_reads`. Per-span deltas are
+    /// consecutive differences of one counter stream, so they telescope
+    /// to the run totals exactly.
+    fn mark_span(&mut self, kind: SpanKind) {
+        let Some(rec) = self.rec.as_deref_mut() else { return };
+        let cycle = self.dram.busy_until();
+        let snap = DramSnapshot::capture(&self.dram.counters);
+        if let Some(open) = self.open_span.take() {
+            rec.record_span(SpanEvent {
+                kind: open.kind,
+                epoch: open.epoch,
+                start_cycle: open.start_cycle,
+                end_cycle: cycle,
+                dram: snap.delta_since(&open.start),
+            });
+        }
+        self.open_span = Some(OpenSpan { kind, epoch: self.epoch, start_cycle: cycle, start: snap });
+    }
+
+    /// Close the trailing span (called by `finish` after the final
+    /// drain, so the last phase's counters are fully settled).
+    fn close_span(&mut self) {
+        let Some(rec) = self.rec.as_deref_mut() else { return };
+        let cycle = self.dram.busy_until();
+        let snap = DramSnapshot::capture(&self.dram.counters);
+        if let Some(open) = self.open_span.take() {
+            rec.record_span(SpanEvent {
+                kind: open.kind,
+                epoch: open.epoch,
+                start_cycle: open.start_cycle,
+                end_cycle: cycle,
+                dram: snap.delta_since(&open.start),
+            });
         }
     }
 
@@ -223,6 +308,7 @@ impl<'a> SimEngine<'a> {
                     "phase layer {layer} out of range (cfg.layers = {})",
                     self.cfg.layers
                 );
+                self.mark_span(SpanKind::Forward { layer });
                 // Attribution boundary only — no drain, so the DRAM
                 // traffic (and the golden-parity metrics) are untouched;
                 // at most a scheduling window of in-flight bursts bleeds
@@ -247,6 +333,7 @@ impl<'a> SimEngine<'a> {
                 self.drive_edges(graph.edge_iter());
             }
             Phase::Backward => {
+                self.mark_span(SpanKind::Backward);
                 self.credit_reads();
                 self.crediting_backward = true;
                 // A backward drive is a full-gradient pass over every
@@ -258,8 +345,14 @@ impl<'a> SimEngine<'a> {
                 // rebuild exactly once.
                 self.drive_edges(graph.transposed().edge_iter());
             }
-            Phase::WriteBack => self.write_back(graph.num_vertices() as u32),
-            Phase::MaskWriteBack => self.write_masks(),
+            Phase::WriteBack => {
+                self.mark_span(SpanKind::WriteBack);
+                self.write_back(graph.num_vertices() as u32);
+            }
+            Phase::MaskWriteBack => {
+                self.mark_span(SpanKind::MaskWriteBack);
+                self.write_masks();
+            }
         }
     }
 
@@ -303,6 +396,7 @@ impl<'a> SimEngine<'a> {
         // No-op when the canonical schedule already drained; salvages
         // stragglers otherwise.
         self.drain();
+        self.close_span();
         if let Some(t) = self.trace.take() {
             t.finish().expect("flushing trace");
         }
@@ -580,7 +674,9 @@ fn run_layerwise_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metri
     let samplers: Vec<Box<dyn Sampler>> =
         (0..cfg.layers).map(|l| cfg.build_sampler_for_layer(l)).collect();
     for epoch in 0..cfg.epochs {
+        engine.set_epoch(epoch as u32);
         for (layer, sampler) in samplers.iter().enumerate() {
+            engine.note_sample();
             let sub = sampler.sample(graph, epoch as u64);
             let g = sub.graph();
             engine.push_phase(Phase::Forward { layer }, g);
@@ -607,6 +703,8 @@ fn run_schedule_with(
 ) -> Metrics {
     let cfg = engine.cfg;
     for epoch in 0..cfg.epochs {
+        engine.set_epoch(epoch as u32);
+        engine.note_sample();
         let sub = sampler.sample(graph, epoch as u64);
         let g = sub.graph();
         for layer in 0..cfg.layers {
@@ -647,6 +745,35 @@ pub fn run_sampled_sim(cfg: &SimConfig, graph: &CsrGraph, sampler: &dyn Sampler)
 pub fn run_sim_with_buffer(cfg: &SimConfig, graph: &CsrGraph, buf: &mut Vec<Burst>) -> Metrics {
     let mut engine = SimEngine::new(cfg);
     engine.recycle_buffer(buf);
+    let m = run_schedule(&mut engine, graph);
+    engine.reclaim_buffer(buf);
+    m
+}
+
+/// [`run_sim`] with a telemetry [`Recorder`] attached: identical
+/// schedule, identical metrics (golden parity pins recorded runs
+/// bit-identical to bare ones), plus per-phase span events delivered to
+/// `rec` at each boundary. Pass a
+/// [`TraceRecorder`](crate::telemetry::TraceRecorder) for export or a
+/// [`PhaseActs`](crate::telemetry::PhaseActs) for attribution only.
+pub fn run_sim_recorded(cfg: &SimConfig, graph: &CsrGraph, rec: &mut dyn Recorder) -> Metrics {
+    let mut engine = SimEngine::new(cfg);
+    engine.set_recorder(rec);
+    run_schedule(&mut engine, graph)
+}
+
+/// [`run_sim_recorded`] with a caller-owned recycled burst buffer — the
+/// QoS workers' entry point (per-job phase attribution on a long-lived
+/// worker's buffer).
+pub fn run_sim_recorded_with_buffer(
+    cfg: &SimConfig,
+    graph: &CsrGraph,
+    buf: &mut Vec<Burst>,
+    rec: &mut dyn Recorder,
+) -> Metrics {
+    let mut engine = SimEngine::new(cfg);
+    engine.recycle_buffer(buf);
+    engine.set_recorder(rec);
     let m = run_schedule(&mut engine, graph);
     engine.reclaim_buffer(buf);
     m
@@ -1169,6 +1296,38 @@ mod tests {
             mp.mem_ns,
             mf.mem_ns
         );
+    }
+
+    #[test]
+    fn recorded_spans_cover_the_canonical_schedule() {
+        use crate::telemetry::{SpanKind, TraceRecorder};
+        let mut c = cfg(Variant::T, 0.5);
+        c.epochs = 2;
+        c.backward = true;
+        let g = c.build_graph();
+        let mut rec = TraceRecorder::new();
+        let m = run_sim_recorded(&c, &g, &mut rec);
+        let spans: Vec<_> = rec.spans().collect();
+        // Per epoch: sample, forward, backward, write-back, mask WB.
+        assert_eq!(spans.len(), 10);
+        for e in 0..2u32 {
+            let epoch: Vec<_> = spans.iter().filter(|s| s.epoch == e).collect();
+            assert_eq!(epoch.len(), 5);
+            assert_eq!(epoch[0].kind, SpanKind::Sample);
+            assert_eq!(epoch[1].kind, SpanKind::Forward { layer: 0 });
+            assert_eq!(epoch[2].kind, SpanKind::Backward);
+            assert_eq!(epoch[3].kind, SpanKind::WriteBack);
+            assert_eq!(epoch[4].kind, SpanKind::MaskWriteBack);
+        }
+        // Spans partition the run's cycle axis: each starts exactly
+        // where the previous ended, and the deltas telescope to totals.
+        for w in spans.windows(2) {
+            assert_eq!(w[0].end_cycle, w[1].start_cycle);
+            assert!(w[0].start_cycle <= w[0].end_cycle);
+        }
+        assert_eq!(rec.totals().reads, m.dram.reads);
+        assert_eq!(rec.totals().writes, m.dram.writes);
+        assert_eq!(rec.dropped(), 0);
     }
 
     #[test]

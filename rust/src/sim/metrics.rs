@@ -5,12 +5,19 @@ use crate::dram::controller::DramCounters;
 use crate::dram::energy::EnergyReport;
 use crate::dram::ChannelSet;
 use crate::lignn::UnitStats;
+use crate::telemetry::LogHist;
+use crate::util::json::Json;
 
 /// Queue-side latency aggregation for one tenant of the QoS serving
 /// path: wall-clock waits between job submission and the moment a
 /// worker picked the job up, plus the wall-clock run spans. (Simulated
 /// time lives in [`Metrics::exec_ns`]; this is the *serving* latency a
 /// tenant observes from the ingest queue.)
+///
+/// Beyond mean/max, the struct carries log-bucketed histograms of the
+/// queue wait and the end-to-end latency (wait + run), so p50/p95/p99
+/// survive [`merge`](Self::merge)-aggregation across batches without
+/// retaining samples.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct QueueWaitStats {
     pub jobs: u64,
@@ -19,10 +26,20 @@ pub struct QueueWaitStats {
     pub max_wait_ms: f64,
     /// Mean wall-clock execution span in milliseconds.
     pub mean_run_ms: f64,
+    /// Sums backing the means — kept so [`merge`](Self::merge) can
+    /// recombine exactly instead of averaging averages.
+    pub wait_sum_ms: f64,
+    pub run_sum_ms: f64,
+    /// Submit→start wait distribution (µs ticks).
+    pub wait_hist: LogHist,
+    /// End-to-end (submit→completion, wait + run) distribution.
+    pub e2e_hist: LogHist,
 }
 
 impl QueueWaitStats {
-    /// Aggregate `(wait_ms, run_ms)` pairs, one per served job.
+    /// Aggregate `(wait_ms, run_ms)` pairs, one per served job. The
+    /// mean/max accumulation order matches the pre-histogram version
+    /// bit-for-bit.
     pub fn collect(samples: impl Iterator<Item = (f64, f64)>) -> QueueWaitStats {
         let mut s = QueueWaitStats::default();
         let (mut wait_sum, mut run_sum) = (0.0f64, 0.0f64);
@@ -33,12 +50,44 @@ impl QueueWaitStats {
             if wait > s.max_wait_ms {
                 s.max_wait_ms = wait;
             }
+            s.wait_hist.record_ms(wait);
+            s.e2e_hist.record_ms(wait + run);
         }
         if s.jobs > 0 {
             s.mean_wait_ms = wait_sum / s.jobs as f64;
             s.mean_run_ms = run_sum / s.jobs as f64;
         }
+        s.wait_sum_ms = wait_sum;
+        s.run_sum_ms = run_sum;
         s
+    }
+
+    /// Fold another batch in: sums add, max takes the larger, means are
+    /// recomputed from the combined sums (not averaged averages), and
+    /// the histograms merge losslessly.
+    pub fn merge(&mut self, other: &QueueWaitStats) {
+        self.jobs += other.jobs;
+        self.wait_sum_ms += other.wait_sum_ms;
+        self.run_sum_ms += other.run_sum_ms;
+        if other.max_wait_ms > self.max_wait_ms {
+            self.max_wait_ms = other.max_wait_ms;
+        }
+        if self.jobs > 0 {
+            self.mean_wait_ms = self.wait_sum_ms / self.jobs as f64;
+            self.mean_run_ms = self.run_sum_ms / self.jobs as f64;
+        }
+        self.wait_hist.merge(&other.wait_hist);
+        self.e2e_hist.merge(&other.e2e_hist);
+    }
+
+    /// Queue-wait quantile in ms (`None` when no jobs were recorded).
+    pub fn wait_percentile_ms(&self, q: f64) -> Option<f64> {
+        self.wait_hist.percentile_ms(q)
+    }
+
+    /// End-to-end (wait + run) quantile in ms.
+    pub fn e2e_percentile_ms(&self, q: f64) -> Option<f64> {
+        self.e2e_hist.percentile_ms(q)
     }
 }
 
@@ -164,6 +213,55 @@ impl Metrics {
         }
     }
 
+    /// The one shared JSON schema every CLI mode emits (`simulate`,
+    /// `sample`, `serve`, `serve --qos` all serialize through here), so
+    /// the CI smoke artifacts are diffable across modes. Mode-specific
+    /// context keys (`tenant`, `queue_wait_ms`, `epoch0_edges`, …) are
+    /// pre-seeded `null` by the CLI and overwritten where they apply —
+    /// the key *set* is identical everywhere.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant.clone())),
+            ("graph", Json::str(self.graph.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("dram", Json::str(self.dram_standard.clone())),
+            ("alpha", Json::num(self.alpha)),
+            ("exec_ns", Json::num(self.exec_ns)),
+            ("mem_ns", Json::num(self.mem_ns)),
+            ("compute_ns", Json::num(self.compute_ns)),
+            ("bursts", Json::num(self.dram.total_bursts() as f64)),
+            ("reads", Json::num(self.dram.reads as f64)),
+            ("writes", Json::num(self.dram.writes as f64)),
+            ("activations", Json::num(self.dram.activations as f64)),
+            (
+                "channel_activations",
+                Json::Arr(
+                    self.dram.channel_activations.iter().map(|&a| Json::num(a as f64)).collect(),
+                ),
+            ),
+            ("row_hits", Json::num(self.dram.row_hits as f64)),
+            ("mean_session", Json::num(self.dram.mean_session())),
+            // sessions long enough to land clamped in the histogram's
+            // last bucket — nonzero means mean_session underestimates
+            ("clamped_sessions", Json::num(self.dram.clamped_sessions as f64)),
+            ("energy_pj", Json::num(self.energy.total_pj)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("desired_elems", Json::num(self.unit.desired_elems as f64)),
+            ("feat_hit", Json::num(self.feat_hit as f64)),
+            ("feat_new", Json::num(self.feat_new as f64)),
+            ("feat_merge", Json::num(self.feat_merge as f64)),
+            ("feat_dropped", Json::num(self.feat_dropped as f64)),
+            (
+                "layer_reads",
+                Json::Arr(self.layer_reads.iter().map(|&r| Json::num(r as f64)).collect()),
+            ),
+            ("backward_reads", Json::num(self.backward_reads as f64)),
+            ("sampler", Json::str(self.sampler.clone())),
+            ("sampled_edges", Json::num(self.sampled_edges as f64)),
+        ])
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         let sampler = if self.sampler == "full" {
@@ -283,6 +381,50 @@ mod tests {
         let empty = QueueWaitStats::collect(std::iter::empty());
         assert_eq!(empty.jobs, 0);
         assert_eq!(empty.mean_wait_ms, 0.0);
+    }
+
+    #[test]
+    fn queue_wait_merge_across_batches() {
+        let a_samples = [(1.0, 10.0), (3.0, 20.0)];
+        let b_samples = [(2.0, 30.0), (7.0, 5.0)];
+        let mut a = QueueWaitStats::collect(a_samples.into_iter());
+        let b = QueueWaitStats::collect(b_samples.into_iter());
+        a.merge(&b);
+        let all = QueueWaitStats::collect(a_samples.iter().chain(b_samples.iter()).copied());
+        assert_eq!(a.jobs, all.jobs);
+        assert_eq!(a.jobs, 4, "sample count is surfaced");
+        assert!((a.mean_wait_ms - all.mean_wait_ms).abs() < 1e-12);
+        assert_eq!(a.max_wait_ms, all.max_wait_ms);
+        assert!((a.mean_run_ms - all.mean_run_ms).abs() < 1e-12);
+        // histograms merge losslessly: identical to single-stream collect
+        assert_eq!(a.wait_hist, all.wait_hist);
+        assert_eq!(a.e2e_hist, all.e2e_hist);
+        assert_eq!(a.wait_hist.count(), 4);
+        // percentiles come out of the merged histogram
+        let p99 = a.wait_percentile_ms(0.99).unwrap();
+        assert!((p99 - 7.0).abs() / 7.0 <= 0.125, "p99 {p99} vs exact 7.0");
+        assert!(a.e2e_percentile_ms(0.5).is_some());
+        // merging into an empty accumulator equals the source
+        let mut acc = QueueWaitStats::default();
+        acc.merge(&all);
+        assert_eq!(acc, all);
+    }
+
+    #[test]
+    fn metrics_json_shares_one_schema() {
+        let m = dummy(1000.0, 100, 50);
+        let j = m.to_json();
+        for key in [
+            "variant", "graph", "model", "dram", "alpha", "exec_ns", "mem_ns", "compute_ns",
+            "bursts", "reads", "writes", "activations", "channel_activations", "row_hits",
+            "mean_session", "clamped_sessions", "energy_pj", "cache_hits", "cache_misses",
+            "desired_elems", "feat_hit", "feat_new", "feat_merge", "feat_dropped",
+            "layer_reads", "backward_reads", "sampler", "sampled_edges",
+        ] {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(j.get("reads").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("sampler").unwrap().as_str(), Some("full"));
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Latency/metric primitives: the log-bucketed [`LogHist`] histogram
+//! (serve-side p50/p95/p99 without retaining samples) and the
+//! [`DepthGauge`] queue-depth sampler.
+//!
+//! The histogram is HDR-style: values below `2·SUBS` get exact
+//! single-value buckets; above that every octave is split into `SUBS`
+//! sub-buckets, so a bucket's width never exceeds 1/`SUBS` of its lower
+//! bound. With `SUBS = 8` a percentile read back from the histogram is
+//! within 12.5% (one bucket) of the exact sorted quantile — pinned by
+//! `tests/properties.rs`.
+
+/// log2 of the sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+/// Sub-buckets per octave (bucket relative width ≤ 1/SUBS).
+const SUBS: u64 = 1 << SUB_BITS;
+
+/// Log-bucketed histogram over `u64` ticks (the serving paths record
+/// microseconds). Counts only — O(~500) buckets cover the full `u64`
+/// range, so merging across batches is cheap and lossless.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LogHist {
+    /// `counts[bucket_of(v)]`, grown on demand.
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl LogHist {
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        let idx = Self::bucket_of(v);
+        if self.counts.len() <= idx {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Record a latency in milliseconds (stored at µs resolution).
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record((ms.max(0.0) * 1e3).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn min(&self) -> u64 {
+        self.min
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another histogram in — lossless (bucket counts add).
+    pub fn merge(&mut self, other: &LogHist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Value at quantile `q ∈ [0, 1]`: the midpoint of the bucket
+    /// holding the `⌈q·count⌉`-th smallest sample, clamped into the
+    /// observed `[min, max]` range (exact below 16 ticks, within one
+    /// bucket — ≤ 12.5% relative — beyond). `None` when empty.
+    pub fn percentile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = Self::bucket_lo(i);
+                let mid = lo + (Self::bucket_width(i) - 1) / 2;
+                return Some(mid.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// [`percentile`](Self::percentile) converted back to milliseconds.
+    pub fn percentile_ms(&self, q: f64) -> Option<f64> {
+        self.percentile(q).map(|us| us as f64 / 1e3)
+    }
+
+    /// Bucket index of `v`: exact for `v < 2·SUBS`, then `SUBS`
+    /// sub-buckets per octave.
+    fn bucket_of(v: u64) -> usize {
+        if v < 2 * SUBS {
+            return v as usize;
+        }
+        let bits = 64 - v.leading_zeros(); // ≥ SUB_BITS + 2 here
+        let shift = bits - (SUB_BITS + 1);
+        let sub = ((v >> shift) & (SUBS - 1)) as usize;
+        (shift as usize + 1) * SUBS as usize + sub
+    }
+
+    /// Inclusive lower bound of bucket `idx` (inverse of `bucket_of`).
+    fn bucket_lo(idx: usize) -> u64 {
+        if idx < (2 * SUBS) as usize {
+            return idx as u64;
+        }
+        let shift = (idx as u32 / SUBS as u32) - 1;
+        let sub = (idx as u64) % SUBS;
+        (SUBS + sub) << shift
+    }
+
+    fn bucket_width(idx: usize) -> u64 {
+        if idx < (2 * SUBS) as usize {
+            1
+        } else {
+            1u64 << ((idx as u32 / SUBS as u32) - 1)
+        }
+    }
+}
+
+/// Queue-depth gauge: [`sample`](Self::sample)d at admit and dispatch,
+/// keeps the running mean/max/last depth of one ingest lane.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DepthGauge {
+    pub samples: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub last: u64,
+}
+
+impl DepthGauge {
+    pub fn sample(&mut self, depth: usize) {
+        let d = depth as u64;
+        self.samples += 1;
+        self.sum += d;
+        self.max = self.max.max(d);
+        self.last = d;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.samples as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_contiguous_and_invert() {
+        let mut prev = 0usize;
+        for v in 0u64..100_000 {
+            let idx = LogHist::bucket_of(v);
+            assert!(idx == prev || idx == prev + 1, "gap at v={v}");
+            prev = idx;
+            let lo = LogHist::bucket_lo(idx);
+            let w = LogHist::bucket_width(idx);
+            assert!(lo <= v && v < lo + w, "v={v} outside bucket [{lo}, {})", lo + w);
+            // relative width bound that backs the percentile guarantee
+            if v >= 2 * SUBS {
+                assert!(w <= lo / SUBS, "bucket {idx} too wide");
+            }
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHist::default();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        for q in [0.1, 0.5, 0.9] {
+            let rank = ((q * 16.0).ceil() as u64).clamp(1, 16);
+            assert_eq!(h.percentile(q), Some(rank - 1));
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut h = LogHist::default();
+        assert_eq!(h.percentile(0.5), None);
+        h.record(12_345);
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.percentile(q), Some(12_345), "single sample is every quantile");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!((h.min(), h.max()), (12_345, 12_345));
+    }
+
+    #[test]
+    fn all_equal_is_exact_via_clamp() {
+        let mut h = LogHist::default();
+        for _ in 0..1000 {
+            h.record(99_999);
+        }
+        assert_eq!(h.percentile(0.99), Some(99_999));
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let (mut a, mut b) = (LogHist::default(), LogHist::default());
+        for v in [1u64, 100, 10_000] {
+            a.record(v);
+        }
+        for v in [5u64, 1_000_000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.min(), 1);
+        assert_eq!(a.max(), 1_000_000);
+        let empty = LogHist::default();
+        let before = a.clone();
+        a.merge(&empty);
+        assert_eq!(a, before, "merging empty is a no-op");
+    }
+
+    #[test]
+    fn record_ms_quantizes_to_micros() {
+        let mut h = LogHist::default();
+        h.record_ms(1.5);
+        assert_eq!(h.percentile(1.0), Some(1500));
+        assert!((h.percentile_ms(1.0).unwrap() - 1.5).abs() < 1e-12);
+        h.record_ms(-3.0); // clamped, never panics
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn depth_gauge_tracks_mean_max_last() {
+        let mut g = DepthGauge::default();
+        assert_eq!(g.mean(), 0.0);
+        for d in [1usize, 4, 2] {
+            g.sample(d);
+        }
+        assert_eq!(g.samples, 3);
+        assert_eq!(g.max, 4);
+        assert_eq!(g.last, 2);
+        assert!((g.mean() - 7.0 / 3.0).abs() < 1e-12);
+    }
+}

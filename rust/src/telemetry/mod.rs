@@ -1,0 +1,28 @@
+//! Observability: span recording, utilization timelines, latency
+//! histograms, and trace/metric exporters.
+//!
+//! The engine drives a [`Recorder`] at phase boundaries — each span
+//! carries its `[start, end)` DRAM busy-cycle window and the exact
+//! counter delta the phase produced (reads, writes, ACTs, row hits,
+//! energy, per-channel split). The default [`NullRecorder`] keeps the
+//! hot path free of telemetry (a single `Option` branch; golden parity
+//! pins recorded runs bit-identical to bare ones); the ring-buffered
+//! [`TraceRecorder`] retains spans and an optional [`Timeline`] of
+//! windowed DRAM utilization, exportable as Chrome/Perfetto trace JSON
+//! ([`chrome_trace`]) or a Prometheus-style text snapshot
+//! ([`prometheus_text`]). The serving paths use [`PhaseActs`] for
+//! per-tenant per-phase activation attribution and [`LogHist`] /
+//! [`DepthGauge`] for queue-latency percentiles and depth gauges.
+
+mod export;
+mod hist;
+mod recorder;
+mod timeline;
+
+pub use export::{chrome_trace, prometheus_text};
+pub use hist::{DepthGauge, LogHist};
+pub use recorder::{
+    DramDelta, DramSnapshot, NullRecorder, PhaseActs, Recorder, SpanEvent, SpanKind,
+    TraceRecorder, DEFAULT_CAPACITY,
+};
+pub use timeline::{Timeline, TimelineBucket, MAX_BUCKETS};

@@ -1,0 +1,409 @@
+//! Span recording: the [`Recorder`] trait the engine drives at phase
+//! boundaries, the zero-cost [`NullRecorder`], the ring-buffered
+//! [`TraceRecorder`], and the counters-only [`PhaseActs`] attribution
+//! used by the QoS workers.
+//!
+//! Inertness contract: recorders only ever *read* the DRAM model —
+//! the engine captures a [`DramSnapshot`] of the public counters at
+//! each phase boundary and hands the recorder the delta. Nothing here
+//! can perturb timing, counters, or energy, which is why the
+//! golden-parity suite can pin recorded runs bit-identical to bare
+//! ones (including the run-coalesced fast path: both service paths
+//! update the same `DramCounters`, so a read-only snapshot cannot
+//! tell them apart).
+
+use super::timeline::Timeline;
+use crate::dram::DramCounters;
+use std::collections::VecDeque;
+
+/// Which phase a span covers. Mirrors `sim::Phase` but owns no
+/// payload besides the layer index, so events stay `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Per-epoch mini-batch sampling (subgraph construction; a
+    /// zero-cycle span under full-batch training).
+    Sample,
+    /// Forward aggregation of one layer.
+    Forward { layer: usize },
+    /// Backward pass over the transposed graph.
+    Backward,
+    /// Feature/intermediate write-back.
+    WriteBack,
+    /// Dropout-mask write-back.
+    MaskWriteBack,
+}
+
+impl SpanKind {
+    /// Stable label used by the exporters ("forward[L2]", ...).
+    pub fn label(&self) -> String {
+        match self {
+            SpanKind::Sample => "sample".into(),
+            SpanKind::Forward { layer } => format!("forward[L{}]", layer + 1),
+            SpanKind::Backward => "backward".into(),
+            SpanKind::WriteBack => "write_back".into(),
+            SpanKind::MaskWriteBack => "mask_write_back".into(),
+        }
+    }
+}
+
+/// Read-only copy of the DRAM counters at one instant.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DramSnapshot {
+    pub reads: u64,
+    pub writes: u64,
+    pub activations: u64,
+    pub row_hits: u64,
+    pub refreshes: u64,
+    pub energy_pj: f64,
+    pub channel_activations: Vec<u64>,
+}
+
+impl DramSnapshot {
+    pub fn capture(c: &DramCounters) -> Self {
+        DramSnapshot {
+            reads: c.reads,
+            writes: c.writes,
+            activations: c.activations,
+            row_hits: c.row_hits,
+            refreshes: c.refreshes,
+            energy_pj: c.energy_pj,
+            channel_activations: c.channel_activations.clone(),
+        }
+    }
+
+    /// Counter growth since `since`. Exact: every counter is integral
+    /// (the energy tables hold integral pJ), so the f64 subtraction
+    /// introduces no rounding and per-span deltas telescope to the run
+    /// totals bit-for-bit.
+    pub fn delta_since(&self, since: &DramSnapshot) -> DramDelta {
+        let mut channel_activations = self.channel_activations.clone();
+        for (now, &before) in channel_activations.iter_mut().zip(&since.channel_activations) {
+            *now -= before;
+        }
+        DramDelta {
+            reads: self.reads - since.reads,
+            writes: self.writes - since.writes,
+            activations: self.activations - since.activations,
+            row_hits: self.row_hits - since.row_hits,
+            refreshes: self.refreshes - since.refreshes,
+            energy_pj: self.energy_pj - since.energy_pj,
+            channel_activations,
+        }
+    }
+}
+
+/// Per-span DRAM counter growth.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DramDelta {
+    pub reads: u64,
+    pub writes: u64,
+    pub activations: u64,
+    pub row_hits: u64,
+    pub refreshes: u64,
+    pub energy_pj: f64,
+    pub channel_activations: Vec<u64>,
+}
+
+impl DramDelta {
+    /// Data bursts this span serviced.
+    pub fn bursts(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// Row-buffer hit rate over this span's bursts (0 when idle).
+    pub fn row_hit_rate(&self) -> f64 {
+        let b = self.bursts();
+        if b == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / b as f64
+        }
+    }
+
+    /// Fold another delta in (used to re-derive run totals from spans).
+    pub fn accumulate(&mut self, other: &DramDelta) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.activations += other.activations;
+        self.row_hits += other.row_hits;
+        self.refreshes += other.refreshes;
+        self.energy_pj += other.energy_pj;
+        if self.channel_activations.len() < other.channel_activations.len() {
+            self.channel_activations.resize(other.channel_activations.len(), 0);
+        }
+        for (a, &b) in self.channel_activations.iter_mut().zip(&other.channel_activations) {
+            *a += b;
+        }
+    }
+}
+
+/// One closed span: a phase instance inside one epoch, with its DRAM
+/// busy-cycle bounds and counter delta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub epoch: u32,
+    /// DRAM busy-clock cycle at which the phase was opened.
+    pub start_cycle: u64,
+    /// DRAM busy-clock cycle at which the next phase took over.
+    pub end_cycle: u64,
+    pub dram: DramDelta,
+}
+
+/// Sink for span events. The engine checks [`enabled`](Self::enabled)
+/// once at attach time; a disabled recorder costs the hot loop nothing
+/// (the engine holds `None` and every hook is a single branch).
+pub trait Recorder {
+    fn enabled(&self) -> bool;
+    fn record_span(&mut self, span: SpanEvent);
+}
+
+/// The default: records nothing, reports disabled, never attached.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record_span(&mut self, _span: SpanEvent) {}
+}
+
+/// Default span capacity of a [`TraceRecorder`] ring (64Ki spans —
+/// far beyond any smoke run; long serving sessions wrap and count
+/// [`dropped`](TraceRecorder::dropped) oldest-first).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Ring-buffered span recorder with an optional utilization
+/// [`Timeline`]. Feed it to `run_sim_recorded`, then export with
+/// `telemetry::chrome_trace` / `telemetry::prometheus_text`.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    spans: VecDeque<SpanEvent>,
+    capacity: usize,
+    dropped: u64,
+    timeline: Option<Timeline>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Ring holding at most `capacity` spans (oldest dropped first).
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceRecorder {
+            spans: VecDeque::with_capacity(capacity.max(1).min(DEFAULT_CAPACITY)),
+            capacity: capacity.max(1),
+            dropped: 0,
+            timeline: None,
+        }
+    }
+
+    /// Also sample DRAM utilization into `window_cycles`-wide buckets.
+    pub fn with_timeline(mut self, window_cycles: u64) -> Self {
+        self.timeline = Some(Timeline::new(window_cycles));
+        self
+    }
+
+    /// Retained spans, oldest first.
+    pub fn spans(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.spans.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans evicted because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn timeline(&self) -> Option<&Timeline> {
+        self.timeline.as_ref()
+    }
+
+    /// Sum of all *retained* spans' deltas. With `dropped() == 0` this
+    /// equals the run totals bit-for-bit (pinned in golden parity).
+    pub fn totals(&self) -> DramDelta {
+        let mut t = DramDelta::default();
+        for s in &self.spans {
+            t.accumulate(&s.dram);
+        }
+        t
+    }
+}
+
+impl Recorder for TraceRecorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record_span(&mut self, span: SpanEvent) {
+        if let Some(tl) = &mut self.timeline {
+            tl.add(span.start_cycle, span.end_cycle, &span.dram);
+        }
+        if self.spans.len() == self.capacity {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(span);
+    }
+}
+
+/// Counters-only per-phase activation attribution — what the QoS
+/// workers attach per job (no ring, no timeline; five integers plus a
+/// per-layer vec), aggregated into `QosReport.phase_acts`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseActs {
+    pub sample: u64,
+    /// Forward activations per layer (grown on demand).
+    pub forward: Vec<u64>,
+    pub backward: u64,
+    pub write_back: u64,
+    pub mask_write_back: u64,
+}
+
+impl PhaseActs {
+    /// Sum over phases — partitions the run's total activations.
+    pub fn total(&self) -> u64 {
+        self.sample
+            + self.forward.iter().sum::<u64>()
+            + self.backward
+            + self.write_back
+            + self.mask_write_back
+    }
+
+    pub fn merge(&mut self, other: &PhaseActs) {
+        self.sample += other.sample;
+        if self.forward.len() < other.forward.len() {
+            self.forward.resize(other.forward.len(), 0);
+        }
+        for (a, &b) in self.forward.iter_mut().zip(&other.forward) {
+            *a += b;
+        }
+        self.backward += other.backward;
+        self.write_back += other.write_back;
+        self.mask_write_back += other.mask_write_back;
+    }
+}
+
+impl Recorder for PhaseActs {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record_span(&mut self, span: SpanEvent) {
+        let acts = span.dram.activations;
+        match span.kind {
+            SpanKind::Sample => self.sample += acts,
+            SpanKind::Forward { layer } => {
+                if self.forward.len() <= layer {
+                    self.forward.resize(layer + 1, 0);
+                }
+                self.forward[layer] += acts;
+            }
+            SpanKind::Backward => self.backward += acts,
+            SpanKind::WriteBack => self.write_back += acts,
+            SpanKind::MaskWriteBack => self.mask_write_back += acts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, start: u64, end: u64, acts: u64) -> SpanEvent {
+        SpanEvent {
+            kind,
+            epoch: 0,
+            start_cycle: start,
+            end_cycle: end,
+            dram: DramDelta { activations: acts, reads: acts * 2, ..DramDelta::default() },
+        }
+    }
+
+    #[test]
+    fn null_recorder_is_disabled() {
+        assert!(!NullRecorder.enabled());
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_every_field() {
+        let mut c = DramCounters::default();
+        c.reads = 10;
+        c.activations = 4;
+        c.energy_pj = 1000.0;
+        c.channel_activations = vec![3, 1];
+        let before = DramSnapshot::capture(&c);
+        c.reads = 25;
+        c.activations = 9;
+        c.row_hits = 7;
+        c.energy_pj = 4500.0;
+        c.channel_activations = vec![8, 2];
+        let d = DramSnapshot::capture(&c).delta_since(&before);
+        assert_eq!((d.reads, d.activations, d.row_hits), (15, 5, 7));
+        assert_eq!(d.energy_pj, 3500.0);
+        assert_eq!(d.channel_activations, vec![5, 1]);
+        assert!((d.row_hit_rate() - 7.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut rec = TraceRecorder::with_capacity(2);
+        for i in 0..5u64 {
+            rec.record_span(span(SpanKind::Backward, i, i + 1, i));
+        }
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped(), 3);
+        let kept: Vec<u64> = rec.spans().map(|s| s.dram.activations).collect();
+        assert_eq!(kept, vec![3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn totals_accumulate_all_retained_spans() {
+        let mut rec = TraceRecorder::new().with_timeline(16);
+        rec.record_span(span(SpanKind::Forward { layer: 0 }, 0, 100, 5));
+        rec.record_span(span(SpanKind::WriteBack, 100, 130, 2));
+        let t = rec.totals();
+        assert_eq!(t.activations, 7);
+        assert_eq!(t.reads, 14);
+        let tl = rec.timeline().unwrap();
+        assert_eq!(tl.buckets().iter().map(|b| b.activations).sum::<u64>(), 7);
+    }
+
+    #[test]
+    fn phase_acts_attributes_by_kind_and_merges() {
+        let mut p = PhaseActs::default();
+        p.record_span(span(SpanKind::Sample, 0, 1, 1));
+        p.record_span(span(SpanKind::Forward { layer: 1 }, 1, 2, 10));
+        p.record_span(span(SpanKind::Backward, 2, 3, 4));
+        p.record_span(span(SpanKind::MaskWriteBack, 3, 4, 2));
+        assert_eq!(p.forward, vec![0, 10]);
+        assert_eq!(p.total(), 17);
+        let mut q = PhaseActs::default();
+        q.record_span(span(SpanKind::Forward { layer: 0 }, 0, 1, 3));
+        q.merge(&p);
+        assert_eq!(q.forward, vec![3, 10]);
+        assert_eq!(q.total(), 20);
+    }
+
+    #[test]
+    fn span_labels_are_stable() {
+        assert_eq!(SpanKind::Forward { layer: 1 }.label(), "forward[L2]");
+        assert_eq!(SpanKind::Sample.label(), "sample");
+        assert_eq!(SpanKind::MaskWriteBack.label(), "mask_write_back");
+    }
+}

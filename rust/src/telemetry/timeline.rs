@@ -1,0 +1,242 @@
+//! Windowed DRAM-utilization timeline: span deltas are spread over
+//! fixed-width cycle buckets so a run can be read as "what was the bus
+//! doing during cycles [kW, (k+1)W)" instead of one end-of-run total.
+//!
+//! The recorder feeds each finished span's counter delta in here; the
+//! delta is apportioned linearly over the span's `[start, end)` cycle
+//! range with *exact conservation* (cumulative floor division — the
+//! last bucket absorbs the rounding remainder), so summing any field
+//! across the buckets reproduces the run total bit-for-bit. When a run
+//! outgrows [`MAX_BUCKETS`], the window doubles and adjacent buckets
+//! merge — attribution coarsens but is never dropped.
+
+use super::recorder::DramDelta;
+
+/// Fixed storage ceiling: the timeline never holds more than this many
+/// buckets; past it the window doubles (buckets pairwise merge).
+pub const MAX_BUCKETS: usize = 512;
+
+/// Aggregated DRAM activity inside one `[k·window, (k+1)·window)` slice.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimelineBucket {
+    pub reads: u64,
+    pub writes: u64,
+    pub activations: u64,
+    pub row_hits: u64,
+}
+
+impl TimelineBucket {
+    /// Total data bursts serviced in this window.
+    pub fn bursts(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// Row-buffer hit rate over the window's bursts (0 when idle).
+    pub fn row_hit_rate(&self) -> f64 {
+        let b = self.bursts();
+        if b == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / b as f64
+        }
+    }
+
+    fn merge(&mut self, other: &TimelineBucket) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.activations += other.activations;
+        self.row_hits += other.row_hits;
+    }
+}
+
+/// The sampler itself: `window` cycles per bucket, buckets grown (and,
+/// at the [`MAX_BUCKETS`] ceiling, coarsened) on demand.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    window: u64,
+    buckets: Vec<TimelineBucket>,
+}
+
+impl Timeline {
+    /// A timeline with `window` cycles per bucket (clamped to ≥ 1).
+    pub fn new(window: u64) -> Self {
+        Timeline { window: window.max(1), buckets: Vec::new() }
+    }
+
+    /// Current cycles-per-bucket (grows if the run outlived the ceiling).
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    pub fn buckets(&self) -> &[TimelineBucket] {
+        &self.buckets
+    }
+
+    /// Attribute one span's delta over its `[start, end)` cycle range.
+    pub fn add(&mut self, start_cycle: u64, end_cycle: u64, delta: &DramDelta) {
+        let end = end_cycle.max(start_cycle);
+        self.fit(end);
+        let first = (start_cycle / self.window) as usize;
+        // Instant spans (drains can leave zero-length phases) land whole
+        // in their start bucket; ranged spans cover buckets of cycles
+        // start..end-1 inclusive.
+        let last = if end > start_cycle { ((end - 1) / self.window) as usize } else { first };
+        if self.buckets.len() <= last {
+            self.buckets.resize(last + 1, TimelineBucket::default());
+        }
+        if first == last {
+            self.buckets[first].merge(&TimelineBucket {
+                reads: delta.reads,
+                writes: delta.writes,
+                activations: delta.activations,
+                row_hits: delta.row_hits,
+            });
+            return;
+        }
+        let span_len = end - start_cycle;
+        let mut prev = [0u64; 4];
+        let mut covered = 0u64;
+        for idx in first..=last {
+            let bucket_end = ((idx as u64 + 1) * self.window).min(end);
+            covered = bucket_end - start_cycle;
+            let fields = [delta.reads, delta.writes, delta.activations, delta.row_hits];
+            let mut here = TimelineBucket::default();
+            let slots =
+                [&mut here.reads, &mut here.writes, &mut here.activations, &mut here.row_hits];
+            for ((slot, &total), prev_f) in slots.into_iter().zip(&fields).zip(&mut prev) {
+                // Exact cumulative apportioning: bucket k gets
+                // floor(total·covered/len) − floor(total·covered'/len),
+                // which telescopes to `total` over the whole span.
+                let upto = ((total as u128 * covered as u128) / span_len as u128) as u64;
+                *slot = upto - *prev_f;
+                *prev_f = upto;
+            }
+            self.buckets[idx].merge(&here);
+        }
+        debug_assert_eq!(covered, span_len);
+    }
+
+    /// Double the window (merging bucket pairs) until `end_cycle`'s
+    /// bucket index fits under [`MAX_BUCKETS`].
+    fn fit(&mut self, end_cycle: u64) {
+        let last_cycle = end_cycle.saturating_sub(1);
+        while (last_cycle / self.window) as usize >= MAX_BUCKETS {
+            self.window *= 2;
+            self.coalesce();
+        }
+    }
+
+    fn coalesce(&mut self) {
+        let mut merged = Vec::with_capacity(self.buckets.len().div_ceil(2));
+        for pair in self.buckets.chunks(2) {
+            let mut b = pair[0];
+            if let Some(second) = pair.get(1) {
+                b.merge(second);
+            }
+            merged.push(b);
+        }
+        self.buckets = merged;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(reads: u64, writes: u64, acts: u64, hits: u64) -> DramDelta {
+        DramDelta { reads, writes, activations: acts, row_hits: hits, ..DramDelta::default() }
+    }
+
+    fn sums(tl: &Timeline) -> (u64, u64, u64, u64) {
+        tl.buckets().iter().fold((0, 0, 0, 0), |acc, b| {
+            (acc.0 + b.reads, acc.1 + b.writes, acc.2 + b.activations, acc.3 + b.row_hits)
+        })
+    }
+
+    #[test]
+    fn span_inside_one_bucket() {
+        let mut tl = Timeline::new(100);
+        tl.add(10, 90, &delta(7, 3, 2, 5));
+        assert_eq!(tl.buckets().len(), 1);
+        assert_eq!(tl.buckets()[0].reads, 7);
+        assert_eq!(tl.buckets()[0].bursts(), 10);
+        assert!((tl.buckets()[0].row_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_cycles_land_left() {
+        // A span ending exactly on a boundary must not touch the next
+        // bucket; one starting exactly on a boundary must not touch the
+        // previous one.
+        let mut tl = Timeline::new(100);
+        tl.add(0, 100, &delta(10, 0, 0, 0));
+        assert_eq!(tl.buckets().len(), 1, "end==boundary stays in bucket 0");
+        tl.add(100, 200, &delta(4, 0, 0, 0));
+        assert_eq!(tl.buckets().len(), 2);
+        assert_eq!(tl.buckets()[0].reads, 10);
+        assert_eq!(tl.buckets()[1].reads, 4);
+    }
+
+    #[test]
+    fn instant_span_lands_whole() {
+        let mut tl = Timeline::new(100);
+        tl.add(200, 200, &delta(5, 5, 1, 1));
+        assert_eq!(tl.buckets().len(), 3);
+        assert_eq!(tl.buckets()[2].bursts(), 10);
+    }
+
+    #[test]
+    fn apportioning_conserves_exactly() {
+        // 7 reads over 3 buckets of 10 cycles: floor-cumulative split
+        // must hand out exactly 7 with the remainder in the tail.
+        let mut tl = Timeline::new(10);
+        tl.add(5, 35, &delta(7, 0, 0, 0));
+        assert_eq!(tl.buckets().len(), 4);
+        let per: Vec<u64> = tl.buckets().iter().map(|b| b.reads).collect();
+        assert_eq!(per.iter().sum::<u64>(), 7);
+        // covered: 5,15,25,30 of 30 → cum floor(7·c/30): 1,3,5,7
+        assert_eq!(per, vec![1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn conservation_under_many_random_spans() {
+        let mut tl = Timeline::new(64);
+        let (mut r, mut w, mut a, mut h) = (0u64, 0, 0, 0);
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let mut cycle = 0u64;
+        for _ in 0..200 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let len = x % 1000;
+            let d = delta(x % 97, (x >> 8) % 53, (x >> 16) % 17, (x >> 24) % 41);
+            tl.add(cycle, cycle + len, &d);
+            cycle += len;
+            r += d.reads;
+            w += d.writes;
+            a += d.activations;
+            h += d.row_hits;
+        }
+        assert_eq!(sums(&tl), (r, w, a, h), "every field conserved exactly");
+    }
+
+    #[test]
+    fn window_doubles_at_ceiling_and_conserves() {
+        let mut tl = Timeline::new(1);
+        // Push a span ending far past MAX_BUCKETS cycles: window must
+        // double until the index fits, and earlier content must survive
+        // the pairwise merges.
+        tl.add(0, 2, &delta(3, 0, 0, 0));
+        let far = (MAX_BUCKETS as u64) * 8;
+        tl.add(2, far, &delta(1000, 0, 0, 0));
+        assert!(tl.buckets().len() <= MAX_BUCKETS);
+        assert_eq!(tl.window(), 8, "1 → 8 via doubling");
+        assert_eq!(sums(&tl).0, 1003);
+        // the final cycle's bucket index is in range
+        assert_eq!(((far - 1) / tl.window()) as usize, MAX_BUCKETS - 1);
+    }
+
+    #[test]
+    fn zero_window_clamps() {
+        let tl = Timeline::new(0);
+        assert_eq!(tl.window(), 1);
+    }
+}

@@ -696,6 +696,80 @@ fn run_aware_frfcfs_matches_per_burst_reference() {
 }
 
 #[test]
+fn telemetry_recorder_is_inert_and_spans_sum_to_totals() {
+    // The tentpole's hard requirement: attaching a TraceRecorder (ring
+    // + timeline) must not change a single bit of the simulation —
+    // across the canonical multi-layer/backward schedule (which
+    // exercises the run-coalesced DRAM fast path), a sampled epoch
+    // schedule, and a channel-partitioned config — and the per-span
+    // deltas must telescope exactly to the run totals.
+    use lignn::sim::run_sim_recorded;
+    use lignn::telemetry::TraceRecorder;
+    use lignn::SamplerKind;
+
+    let mut canonical = tiny_cfg(Variant::T, 0.5);
+    canonical.layers = 2;
+    canonical.epochs = 2;
+    canonical.backward = true;
+
+    let mut sampled = tiny_cfg(Variant::T, 0.5);
+    sampled.sampler = SamplerKind::Neighbor;
+    sampled.fanout = 8;
+    sampled.epochs = 2;
+
+    let mut partitioned = tiny_cfg(Variant::T, 0.5);
+    partitioned.channels = Some(lignn::dram::ChannelSet::parse("0-1").unwrap());
+
+    for (cfg, label) in
+        [(canonical, "canonical"), (sampled, "sampled"), (partitioned, "partitioned")]
+    {
+        let graph = cfg.build_graph();
+        let gold = run_sim(&cfg, &graph);
+        let mut rec = TraceRecorder::new().with_timeline(2048);
+        let new = run_sim_recorded(&cfg, &graph, &mut rec);
+
+        assert_metrics_identical(&new, &gold, label);
+        assert_counters_identical(&new.dram, &gold.dram, label);
+        assert_eq!(rec.dropped(), 0, "{label}: ring overflowed");
+        assert!(!rec.is_empty(), "{label}: no spans recorded");
+
+        // Per-span deltas partition the run: their sums reproduce the
+        // totals exactly (energy included — the tables are integral pJ,
+        // so f64 sums below 2^53 are exact).
+        let t = rec.totals();
+        assert_eq!(t.reads, gold.dram.reads, "{label}: span reads");
+        assert_eq!(t.writes, gold.dram.writes, "{label}: span writes");
+        assert_eq!(t.activations, gold.dram.activations, "{label}: span activations");
+        assert_eq!(t.row_hits, gold.dram.row_hits, "{label}: span row_hits");
+        assert_eq!(t.refreshes, gold.dram.refreshes, "{label}: span refreshes");
+        assert_eq!(
+            t.energy_pj.to_bits(),
+            gold.dram.energy_pj.to_bits(),
+            "{label}: span energy"
+        );
+        assert_eq!(
+            t.channel_activations, gold.dram.channel_activations,
+            "{label}: span channel_activations"
+        );
+
+        // The windowed timeline is a second, independent partition of
+        // the same counters.
+        let tl = rec.timeline().expect("timeline attached");
+        let (mut reads, mut writes, mut acts, mut hits) = (0u64, 0u64, 0u64, 0u64);
+        for b in tl.buckets() {
+            reads += b.reads;
+            writes += b.writes;
+            acts += b.activations;
+            hits += b.row_hits;
+        }
+        assert_eq!(reads, gold.dram.reads, "{label}: timeline reads");
+        assert_eq!(writes, gold.dram.writes, "{label}: timeline writes");
+        assert_eq!(acts, gold.dram.activations, "{label}: timeline activations");
+        assert_eq!(hits, gold.dram.row_hits, "{label}: timeline row_hits");
+    }
+}
+
+#[test]
 fn fullbatch_sampler_matches_legacy() {
     // The FullBatch sampler spelled out — both through `cfg.sampler` and
     // through the explicit-sampler entry point — must reproduce the seed

@@ -599,3 +599,98 @@ fn prop_mask_rate_converges_all_granularities() {
         }
     }
 }
+
+#[test]
+fn prop_log_hist_percentiles_within_one_bucket() {
+    // The histogram's accuracy contract: any quantile estimate lands in
+    // the same sub-bucket as the exact order statistic, so the absolute
+    // error is bounded by one bucket width — ≤ exact/8 (+1 for the
+    // midpoint's integer floor). Exercised over uniform and heavy-tail
+    // random streams, all-equal streams, and a single sample.
+    use lignn::telemetry::LogHist;
+
+    let quantiles = [0.0, 0.5, 0.9, 0.95, 0.99, 1.0];
+    let check = |values: &[u64], label: &str| {
+        let mut h = LogHist::default();
+        for &v in values {
+            h.record(v);
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(h.count(), values.len() as u64, "{label}: count");
+        assert_eq!(h.min(), sorted[0], "{label}: min");
+        assert_eq!(h.max(), *sorted.last().unwrap(), "{label}: max");
+        for &q in &quantiles {
+            let rank = ((q * values.len() as f64).ceil() as usize).clamp(1, values.len());
+            let exact = sorted[rank - 1];
+            let got = h.percentile(q).unwrap();
+            let tol = exact / 8 + 1;
+            assert!(
+                got.abs_diff(exact) <= tol,
+                "{label} q={q}: got {got}, exact {exact} (tol {tol})"
+            );
+        }
+    };
+
+    let mut rng = Pcg64::new(0x1157);
+    // uniform in [0, 10^6)
+    let uniform: Vec<u64> = (0..4_000).map(|_| rng.next_u64() % 1_000_000).collect();
+    check(&uniform, "uniform");
+    // heavy tail: small mantissa shifted by a random number of octaves
+    let heavy: Vec<u64> =
+        (0..4_000).map(|_| (1 + rng.next_u64() % 1_000) << (rng.next_u64() % 24)).collect();
+    check(&heavy, "heavy-tail");
+    // all-equal streams are exact at every quantile (midpoint clamps
+    // into [min, max])
+    for v in [0u64, 7, 16, 1_000, 123_456_789] {
+        let equal = vec![v; 257];
+        let mut h = LogHist::default();
+        for &x in &equal {
+            h.record(x);
+        }
+        for &q in &quantiles {
+            assert_eq!(h.percentile(q), Some(v), "all-equal {v} q={q}");
+        }
+    }
+    // single sample
+    let mut h = LogHist::default();
+    h.record(42);
+    for &q in &quantiles {
+        assert_eq!(h.percentile(q), Some(42), "single-sample q={q}");
+    }
+    assert_eq!(LogHist::default().percentile(0.5), None, "empty hist has no quantiles");
+}
+
+#[test]
+fn prop_log_hist_merge_equals_single_stream() {
+    // Splitting a stream into arbitrary batches and merging the batch
+    // histograms must reproduce the single-stream histogram exactly —
+    // the property QueueWaitStats::merge relies on for cross-batch
+    // percentile aggregation.
+    use lignn::telemetry::LogHist;
+
+    let mut rng = Pcg64::new(0x4D45_52474);
+    for trial in 0..20u32 {
+        let n = 100 + (rng.next_u64() % 2_000) as usize;
+        // batch `trial` draws from a 2^(trial+1)-wide range, so the
+        // trials sweep narrow exact buckets through wide log buckets
+        let values: Vec<u64> =
+            (0..n).map(|_| rng.next_u64() % (1u64 << (1 + trial))).collect();
+        let mut whole = LogHist::default();
+        for &v in &values {
+            whole.record(v);
+        }
+        let mut merged = LogHist::default();
+        let mut i = 0;
+        while i < n {
+            let take = 1 + (rng.next_u64() as usize % 97).min(n - i - 1);
+            let mut part = LogHist::default();
+            for &v in &values[i..i + take] {
+                part.record(v);
+            }
+            merged.merge(&part);
+            i += take;
+        }
+        assert_eq!(merged, whole, "trial {trial}");
+    }
+}

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Validate a lignn Perfetto trace against the run's JSON metrics.
+
+Usage: check_trace.py <trace.json> <metrics.json> <metrics.prom>
+
+Checks (all hard failures):
+  - the trace parses and `traceEvents` is non-empty
+  - every complete ("X") event has ts >= 0 and dur >= 0
+  - no spans were evicted from the recorder ring (dropped_spans == 0)
+  - every phase span is contained in its epoch's container event
+    (matched by args.epoch, not by position)
+  - epoch containers are pairwise non-overlapping (touching is fine)
+  - per-span reads/writes/activations sum exactly to the trace's
+    `lignnTotals` side object AND to the simulate-mode metrics JSON
+  - the Prometheus snapshot is line-well-formed and its headline
+    counters agree with the metrics JSON
+
+Stdlib only — runs on any CI python3.
+"""
+
+import json
+import re
+import sys
+
+# Cycle stamps are converted to float microseconds on export; allow one
+# ULP-ish slop on the containment comparison only. Counter sums are
+# integers carried in f64 and must match exactly.
+EPS = 1e-6
+
+fails = []
+
+
+def check(cond, msg):
+    if not cond:
+        fails.append(msg)
+
+
+def main(trace_path, metrics_path, prom_path):
+    with open(trace_path) as f:
+        trace = json.load(f)
+    with open(metrics_path) as f:
+        metrics = json.load(f)
+    with open(prom_path) as f:
+        prom = f.read()
+
+    events = trace.get("traceEvents", [])
+    check(len(events) > 0, "traceEvents is empty")
+
+    epochs = {}   # epoch id -> (ts, ts+dur)
+    phases = []   # (name, epoch id, ts, ts+dur, args)
+    counters = 0
+    for e in events:
+        ph = e.get("ph")
+        if ph == "C":
+            counters += 1
+            continue
+        check(ph == "X", f"unexpected event ph {ph!r}")
+        ts, dur = e.get("ts"), e.get("dur")
+        check(isinstance(ts, (int, float)) and ts >= 0, f"{e.get('name')}: bad ts {ts!r}")
+        check(isinstance(dur, (int, float)) and dur >= 0, f"{e.get('name')}: bad dur {dur!r}")
+        args = e.get("args", {})
+        epoch = args.get("epoch")
+        check(epoch is not None, f"{e.get('name')}: X event without args.epoch")
+        if e.get("cat") == "epoch":
+            check(epoch not in epochs, f"duplicate epoch container {epoch}")
+            epochs[epoch] = (ts, ts + dur)
+        else:
+            check(e.get("cat") == "phase", f"unexpected X category {e.get('cat')!r}")
+            phases.append((e.get("name"), epoch, ts, ts + dur, args))
+
+    check(len(epochs) > 0, "no epoch containers")
+    check(len(phases) > 0, "no phase spans")
+
+    # Spans nest: each phase inside its own epoch's container.
+    for name, epoch, start, end, _ in phases:
+        container = epochs.get(epoch)
+        check(container is not None, f"{name}: no container for epoch {epoch}")
+        if container:
+            lo, hi = container
+            check(
+                start >= lo - EPS and end <= hi + EPS,
+                f"{name}: [{start}, {end}] escapes epoch {epoch} [{lo}, {hi}]",
+            )
+
+    # Epoch containers don't overlap (touching boundaries are fine —
+    # a zero-length sample span can sit exactly on the seam).
+    ordered = sorted(epochs.items(), key=lambda kv: kv[1][0])
+    for (ea, (_, end_a)), (eb, (start_b, _)) in zip(ordered, ordered[1:]):
+        check(end_a <= start_b + EPS, f"epochs {ea} and {eb} overlap")
+
+    # Per-span deltas sum to the exported totals, exactly.
+    totals = trace.get("lignnTotals", {})
+    check(totals.get("dropped_spans") == 0, f"dropped_spans = {totals.get('dropped_spans')}")
+    for key in ("reads", "writes", "activations", "row_hits"):
+        span_sum = sum(p[4].get(key, 0) for p in phases)
+        check(
+            span_sum == totals.get(key),
+            f"span {key} sum {span_sum} != lignnTotals {totals.get(key)}",
+        )
+    # ...and to the run's own metrics JSON (simulate --json output).
+    for key in ("reads", "writes", "activations", "row_hits"):
+        check(
+            metrics.get(key) == totals.get(key),
+            f"metrics {key} {metrics.get(key)} != lignnTotals {totals.get(key)}",
+        )
+    check(
+        abs(totals.get("span_energy_pj", 0) - metrics.get("energy_pj", -1)) < 1e-9,
+        f"span energy {totals.get('span_energy_pj')} != metrics {metrics.get('energy_pj')}",
+    )
+
+    # Prometheus snapshot: well-formed lines, headline counters agree.
+    sample_re = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*\{[^}]*\} -?[0-9.eE+-]+$")
+    values = {}
+    for line in prom.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        check(sample_re.match(line), f"malformed prometheus line: {line!r}")
+        name = line.split("{", 1)[0]
+        values.setdefault(name, 0.0)
+        values[name] += float(line.rsplit(" ", 1)[1])
+    for prom_name, key in [
+        ("lignn_dram_reads_total", "reads"),
+        ("lignn_dram_writes_total", "writes"),
+        ("lignn_dram_activations_total", "activations"),
+        ("lignn_phase_activations_total", "activations"),
+        ("lignn_channel_activations_total", "activations"),
+    ]:
+        check(
+            values.get(prom_name) == metrics.get(key),
+            f"{prom_name} {values.get(prom_name)} != metrics {key} {metrics.get(key)}",
+        )
+
+    if fails:
+        for msg in fails:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"trace OK: {len(phases)} phase spans in {len(epochs)} epochs, "
+        f"{counters} counter samples, sums match metrics"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 4:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1], sys.argv[2], sys.argv[3])
