@@ -1,30 +1,36 @@
 //! QoS channel partitioning: re-measuring the paper's row-activation
-//! claim per tenant, under partitioned vs shared DRAM channels.
+//! claim per tenant, under partitioned vs shared DRAM channels — on ONE
+//! shared device.
 //!
 //! The paper's 59–82% activation reduction (dropout + merge vs the
 //! no-dropout baseline) was measured with one workload owning the whole
-//! DRAM. A serving deployment hands each tenant a channel subset — a
-//! quarter of the banks, a quarter of the row buffers — and GNNear-class
-//! near-memory results say row locality is sensitive to exactly that.
-//! This bench runs the same tenant job streams twice through the QoS
-//! engine:
+//! DRAM. A serving deployment runs several tenants against the *same*
+//! device; partitioning hands each a channel subset — a quarter of the
+//! banks, a quarter of the row buffers — and GNNear-class near-memory
+//! results say row locality is sensitive to exactly that. This bench
+//! runs the same tenant job streams twice through the shared-device QoS
+//! engine (every job's DRAM stream lands on one `SharedDevice`):
 //!
 //! * **partitioned** — tenant `a` owns channels 0-1, tenant `b` owns
 //!   4-7; every job *and its no-dropout reference* simulate inside the
-//!   tenant's subset, so the activation ratio isolates dropout+merge at
-//!   the tenant's own channel budget;
-//! * **shared** — same tenants, same jobs, full device for everyone.
+//!   tenant's subset, channels 2-3 of the shared device must stay idle;
+//! * **shared** — same tenants, same jobs, full device for everyone:
+//!   the streams genuinely fight over row buffers.
 //!
-//! The structural claims are asserted (isolation audit: zero activations
-//! escape a partition; ratios stay < 1 in both modes — the paper's claim
-//! survives partitioning); the table reports how much the ratio moves.
+//! Structural claims asserted: zero activations escape a partition (both
+//! the per-job audit and the shared device's own channel counters);
+//! per-tenant ACT attribution telescopes to the device total; activation
+//! ratios stay < 1 in both modes. A deterministic row-streak section on
+//! a second pair of devices pins the interference direction itself:
+//! removing the partition strictly increases combined row activations.
 
 mod common;
 
 use std::sync::Arc;
 
 use lignn::config::SimConfig;
-use lignn::qos::{QosEngine, QosOutcome, TenantSet};
+use lignn::dram::{AddressMapping, ChannelSet, DramReq, DramStandardKind};
+use lignn::qos::{QosEngine, QosOutcome, SharedDevice, TenantSet};
 use lignn::serve::{GraphStore, ServeJob};
 use lignn::util::benchkit::print_table;
 use lignn::util::json::Json;
@@ -34,7 +40,8 @@ const ALPHAS: [f64; 3] = [0.2, 0.5, 0.8];
 
 fn run_mode(store: &Arc<GraphStore>, tenants: &str, graph: &str) -> QosOutcome {
     let tenants = TenantSet::from_spec(tenants).unwrap();
-    let engine = QosEngine::start(Arc::clone(store), tenants.clone(), default_threads()).unwrap();
+    let engine =
+        QosEngine::start_shared(Arc::clone(store), tenants.clone(), default_threads()).unwrap();
     for &alpha in &ALPHAS {
         for t in tenants.names() {
             let mut cfg = SimConfig::default();
@@ -43,6 +50,74 @@ fn run_mode(store: &Arc<GraphStore>, tenants: &str, graph: &str) -> QosOutcome {
         }
     }
     engine.finish().unwrap()
+}
+
+/// Deterministic interference measurement on one `SharedDevice` pair:
+/// two tenants loop row streaks whose addresses differ only in row bits
+/// under the full mapping (same banks, different rows). Partitioned,
+/// the streaks live on disjoint physical channels; shared, they evict
+/// each other's rows every round. Returns
+/// `(partitioned_report, shared_report)` — both flushed.
+fn streak_interference() -> (lignn::qos::DeviceReport, lignn::qos::DeviceReport) {
+    let hbm = DramStandardKind::Hbm.config();
+    let a_set = ChannelSet::parse("0-1").unwrap();
+    let b_set = ChannelSet::parse("4-7").unwrap();
+    let full = AddressMapping::new(&hbm);
+    // Row bits are the top slice: a quarter-capacity offset keeps the
+    // bank position and changes only the row.
+    let off = full.capacity_bytes() / 4;
+    let streak = 16 * 1024 / full.burst_bytes();
+    let rounds = if common::fast_mode() { 32u64 } else { 128 };
+    let drive = |dev: &mut SharedDevice| {
+        for r in 0..rounds {
+            for (t, base) in [(0usize, 0u64), (1, off)] {
+                dev.ingest(t, DramReq { addr: base, bursts: streak - 8, write: false });
+                let tail = base + (streak - 8) * full.burst_bytes();
+                dev.ingest(t, DramReq { addr: tail, bursts: 8, write: r % 4 == 0 });
+            }
+        }
+        dev.flush();
+    };
+    let mut part = SharedDevice::new(hbm, &[Some(a_set), Some(b_set)]);
+    drive(&mut part);
+    let mut open = SharedDevice::new(hbm, &[None, None]);
+    drive(&mut open);
+
+    // Zero escaped activations under partitioning: channels outside the
+    // two subsets' union (2 and 3 here) must never have opened a row.
+    for (ch, &acts) in part.counters().channel_activations.iter().enumerate() {
+        let member = a_set.contains(ch as u32) || b_set.contains(ch as u32);
+        assert!(
+            member || acts == 0,
+            "streak: {acts} activations escaped to unowned channel {ch}"
+        );
+    }
+    // Shared strictly more row activations than partitioned — the
+    // interference the partition exists to prevent.
+    let (pa, oa) = (part.counters().activations, open.counters().activations);
+    assert!(
+        oa > pa,
+        "removing the partition must cost activations: shared {oa} vs partitioned {pa}"
+    );
+    (part.report(), open.report())
+}
+
+fn device_json(rep: &lignn::qos::DeviceReport) -> Json {
+    Json::obj(vec![
+        ("standard", Json::str(rep.standard.clone())),
+        ("channels", Json::num(rep.channels as f64)),
+        ("reads", Json::num(rep.reads as f64)),
+        ("writes", Json::num(rep.writes as f64)),
+        ("activations", Json::num(rep.activations as f64)),
+        ("row_hits", Json::num(rep.row_hits as f64)),
+        ("row_conflicts", Json::num(rep.row_conflicts as f64)),
+        ("row_hit_rate", Json::num(rep.row_hit_rate())),
+        ("busy_until", Json::num(rep.busy_until as f64)),
+        (
+            "tenant_activations",
+            Json::Arr(rep.tenant_activations.iter().map(|&a| Json::num(a as f64)).collect()),
+        ),
+    ])
 }
 
 fn main() {
@@ -58,7 +133,24 @@ fn main() {
         assert!(inside > 0, "{}: partition unused", rep.tenant());
         assert_eq!(outside, 0, "{}: activations escaped the partition", rep.tenant());
     }
+    let owned = ChannelSet::parse("0-1+4-7").unwrap();
     for (mode, outcome) in [("partitioned", &partitioned), ("shared", &shared)] {
+        assert_eq!(outcome.shared.len(), 1, "{mode}: one config shape, one device");
+        let dev = &outcome.shared[0];
+        assert_eq!(
+            dev.tenant_activations.iter().sum::<u64>(),
+            dev.activations,
+            "{mode}: tenant ACT split must telescope to the device total"
+        );
+        if mode == "partitioned" {
+            // The device's own counters audit the escape property too.
+            for (ch, &acts) in dev.channel_activations.iter().enumerate() {
+                assert!(
+                    owned.contains(ch as u32) || acts == 0,
+                    "{mode}: {acts} activations escaped to unowned channel {ch}"
+                );
+            }
+        }
         for rep in &outcome.reports {
             for row in &rep.serve.rows {
                 assert!(
@@ -71,6 +163,8 @@ fn main() {
             }
         }
     }
+
+    let (streak_part, streak_open) = streak_interference();
 
     let mut rows = Vec::new();
     let mut json_reports = Vec::new();
@@ -116,14 +210,30 @@ fn main() {
     print_table(
         &format!(
             "QoS channel partitioning — {spec}, α ∈ {ALPHAS:?}, LG-T vs per-tenant \
-             no-dropout baseline"
+             no-dropout baseline, one shared device per mode"
         ),
         &["mode", "tenant", "channels", "jobs", "act ratio", "speedup", "wait ms", "max wait"],
         &rows,
     );
+    for (mode, outcome) in [("partitioned", &partitioned), ("shared", &shared)] {
+        let d = &outcome.shared[0];
+        println!(
+            "{mode} device {} x{}ch: {} ACTs ({:.1}% row hits, {} conflicts), per-tenant ACTs {:?}",
+            d.standard,
+            d.channels,
+            d.activations,
+            100.0 * d.row_hit_rate(),
+            d.row_conflicts,
+            d.tenant_activations,
+        );
+    }
     println!(
-        "partitioned: {} jobs in {:.1} ms ({:.1} jobs/s); shared: {} jobs in {:.1} ms \
+        "row-streak interference: partitioned {} ACTs vs shared {} ACTs ({:.2}x); \
+         partitioned: {} jobs in {:.1} ms ({:.1} jobs/s); shared: {} jobs in {:.1} ms \
          ({:.1} jobs/s)",
+        streak_part.activations,
+        streak_open.activations,
+        streak_open.activations as f64 / streak_part.activations.max(1) as f64,
         partitioned.results.len(),
         partitioned.elapsed_ms,
         partitioned.jobs_per_sec(),
@@ -140,6 +250,23 @@ fn main() {
             ("partitioned_elapsed_ms", Json::num(partitioned.elapsed_ms)),
             ("shared_elapsed_ms", Json::num(shared.elapsed_ms)),
             ("reports", Json::Arr(json_reports)),
+            ("partitioned_device", device_json(&partitioned.shared[0])),
+            ("shared_device", device_json(&shared.shared[0])),
+            (
+                "interference",
+                Json::obj(vec![
+                    ("workload", Json::str("row-streak, quarter-capacity row offset")),
+                    ("partitioned", device_json(&streak_part)),
+                    ("shared", device_json(&streak_open)),
+                    (
+                        "activation_cost",
+                        Json::num(
+                            streak_open.activations as f64
+                                / streak_part.activations.max(1) as f64,
+                        ),
+                    ),
+                ]),
+            ),
         ]),
     );
 }

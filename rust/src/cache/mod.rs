@@ -11,6 +11,18 @@
 
 use std::collections::HashMap;
 
+/// Weighted share of a shared on-chip buffer: the capacity a tenant of
+/// `weight` gets out of `capacity` when all registered tenants' weights
+/// sum to `total_weight`. Floors to whole features with a minimum of 1
+/// (every tenant can always cache *something* — [`LruCache::new`]
+/// rejects zero capacity). QoS shared-device mode applies this quota to
+/// each job's config so co-resident tenants split the buffer instead of
+/// each assuming they own it.
+pub fn weighted_quota(capacity: usize, weight: f64, total_weight: f64) -> usize {
+    assert!(weight > 0.0 && total_weight >= weight, "bad quota weights");
+    ((capacity as f64 * weight / total_weight).floor() as usize).max(1)
+}
+
 const NIL: u32 = u32::MAX;
 
 struct Entry {
@@ -220,6 +232,18 @@ mod tests {
         }
         assert_eq!(c.hits(), 0);
         assert_eq!(c.misses(), 4 * cap as u64);
+    }
+
+    #[test]
+    fn weighted_quota_splits_and_floors() {
+        // 2:1:1 over 4096 features
+        assert_eq!(weighted_quota(4096, 2.0, 4.0), 2048);
+        assert_eq!(weighted_quota(4096, 1.0, 4.0), 1024);
+        // a sliver tenant still gets a usable (nonzero) cache
+        assert_eq!(weighted_quota(4, 0.1, 100.0), 1);
+        // quotas never exceed the device and are valid LRU capacities
+        let c = LruCache::new(weighted_quota(16, 1.0, 3.0));
+        assert_eq!(c.capacity(), 5);
     }
 
     #[test]

@@ -55,6 +55,15 @@ pub struct DramCounters {
     /// in the histogram's last bucket (see [`mean_session`]
     /// (Self::mean_session) for the bias this implies).
     pub clamped_sessions: u64,
+    /// Row activations per tenant (`tenant_activations[t]` = ACTs
+    /// attributed to tenant `t`), the tenant-side twin of
+    /// `channel_activations`. Empty unless the owner called
+    /// [`DramModel::enable_tenant_tracking`] — private (single-job)
+    /// models never size it, so their counters stay bit-identical to
+    /// the pre-tenancy model. On a shared device the slots partition
+    /// `activations` exactly: every ACT lands in the slot of the
+    /// tenant whose request opened the row.
+    pub tenant_activations: Vec<u64>,
 }
 
 impl Default for DramCounters {
@@ -71,11 +80,21 @@ impl Default for DramCounters {
             energy_pj: 0.0,
             channel_activations: Vec::new(),
             clamped_sessions: 0,
+            tenant_activations: Vec::new(),
         }
     }
 }
 
 impl DramCounters {
+    /// Attribute one ACT to tenant slot `t`. A no-op unless tenant
+    /// tracking sized the vector — keeps private models untouched.
+    #[inline]
+    fn bump_tenant(&mut self, t: usize) {
+        if let Some(slot) = self.tenant_activations.get_mut(t) {
+            *slot += 1;
+        }
+    }
+
     fn record_session(&mut self, bursts: u64) {
         let bucket = (bursts as usize).min(MAX_SESSION);
         if bucket as u64 != bursts {
@@ -137,6 +156,12 @@ impl DramCounters {
         for (a, b) in self.channel_activations.iter_mut().zip(&other.channel_activations) {
             *a += b;
         }
+        if self.tenant_activations.len() < other.tenant_activations.len() {
+            self.tenant_activations.resize(other.tenant_activations.len(), 0);
+        }
+        for (a, b) in self.tenant_activations.iter_mut().zip(&other.tenant_activations) {
+            *a += b;
+        }
     }
 }
 
@@ -190,12 +215,30 @@ fn catch_up_refresh(counters: &mut DramCounters, ch: &mut Channel, t: &Timing, c
     cmd.max(refresh_end)
 }
 
+/// One logged DRAM request: `bursts` consecutive burst transactions
+/// starting at `addr` in the logging model's address space. Captured by
+/// [`DramModel::enable_request_log`] so a job's exact DRAM traffic can
+/// be replayed — e.g. interleaved with other tenants' streams on a
+/// shared device (`qos::SharedDevice`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramReq {
+    pub addr: u64,
+    pub bursts: u64,
+    pub write: bool,
+}
+
 /// The multi-channel DRAM device model.
 pub struct DramModel {
     cfg: DramConfig,
     mapping: AddressMapping,
     channels: Vec<Channel>,
     pub counters: DramCounters,
+    /// Attribution slot for [`DramCounters::tenant_activations`];
+    /// inert (slot 0, vector unsized) unless tenant tracking is on.
+    tenant: usize,
+    /// Request capture for shared-device replay; `None` costs the hot
+    /// path a single branch per public entry point.
+    req_log: Option<Vec<DramReq>>,
 }
 
 impl DramModel {
@@ -226,7 +269,44 @@ impl DramModel {
             .collect();
         let mut counters = DramCounters::default();
         counters.channel_activations = vec![0; cfg.channels];
-        DramModel { cfg, mapping, channels, counters }
+        DramModel { cfg, mapping, channels, counters, tenant: 0, req_log: None }
+    }
+
+    /// Size the per-tenant attribution split for `n` tenants. Until
+    /// this is called `tenant_activations` stays empty and every
+    /// attribution hook is a no-op, so single-job models are
+    /// bit-identical to the pre-tenancy code.
+    pub fn enable_tenant_tracking(&mut self, n: usize) {
+        if self.counters.tenant_activations.len() < n {
+            self.counters.tenant_activations.resize(n, 0);
+        }
+    }
+
+    /// Select the tenant slot subsequent ACTs are attributed to.
+    pub fn set_tenant(&mut self, tenant: usize) {
+        self.tenant = tenant;
+    }
+
+    /// Start capturing every serviced request (see [`DramReq`]).
+    pub fn enable_request_log(&mut self) {
+        if self.req_log.is_none() {
+            self.req_log = Some(Vec::new());
+        }
+    }
+
+    /// Drain the captured request log (empty when logging is off).
+    pub fn take_request_log(&mut self) -> Vec<DramReq> {
+        match &mut self.req_log {
+            Some(log) => std::mem::take(log),
+            None => Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn log_req(&mut self, addr: u64, bursts: u64, write: bool) {
+        if let Some(log) = &mut self.req_log {
+            log.push(DramReq { addr, bursts, write });
+        }
     }
 
     pub fn mapping(&self) -> &AddressMapping {
@@ -247,6 +327,7 @@ impl DramModel {
     /// activated)` where `activated` is true when the burst opened a row.
     fn service(&mut self, addr: u64, arrival: u64, is_write: bool) -> (u64, bool) {
         let t = &self.cfg.timing;
+        let tenant = self.tenant;
         let loc = self.mapping.decode(addr);
         let bi = self.bank_index(&loc);
         let ch = &mut self.channels[loc.channel as usize];
@@ -280,6 +361,7 @@ impl DramModel {
                 bank.open(loc.row, act);
                 self.counters.activations += 1;
                 self.counters.channel_activations[loc.channel as usize] += 1;
+                self.counters.bump_tenant(tenant);
                 self.counters.energy_pj += self.cfg.energy.act_pj;
                 activated = true;
                 cmd = act + t.t_rcd;
@@ -295,6 +377,7 @@ impl DramModel {
                 bank.open(loc.row, act);
                 self.counters.activations += 1;
                 self.counters.channel_activations[loc.channel as usize] += 1;
+                self.counters.bump_tenant(tenant);
                 self.counters.energy_pj += self.cfg.energy.act_pj;
                 activated = true;
                 cmd = act + t.t_rcd;
@@ -341,6 +424,7 @@ impl DramModel {
         debug_assert!(n > 0);
         let t = self.cfg.timing;
         let e = self.cfg.energy;
+        let tenant = self.tenant;
         let bi = self.bank_index(loc);
         let chi = loc.channel as usize;
         let key = pack_key(loc);
@@ -376,6 +460,7 @@ impl DramModel {
                     bank.open(loc.row, act);
                     counters.activations += 1;
                     counters.channel_activations[chi] += 1;
+                    counters.bump_tenant(tenant);
                     counters.energy_pj += e.act_pj;
                     on_act(served);
                     cmd = act + t.t_rcd;
@@ -391,6 +476,7 @@ impl DramModel {
                     bank.open(loc.row, act);
                     counters.activations += 1;
                     counters.channel_activations[chi] += 1;
+                    counters.bump_tenant(tenant);
                     counters.energy_pj += e.act_pj;
                     on_act(served);
                     cmd = act + t.t_rcd;
@@ -448,16 +534,33 @@ impl DramModel {
     /// Cost is O(striped channels), independent of `n`. Returns
     /// `(completion cycle of the final burst, row activations issued)`.
     fn service_run(&mut self, addr: u64, n: u64, arrival: u64, is_write: bool) -> (u64, u64) {
+        let m = self.mapping;
+        self.service_run_with(m, addr, n, arrival, is_write)
+    }
+
+    /// [`service_run`](Self::service_run) decoded through an explicit
+    /// mapping — the shared-device entry: a tenant confined to a
+    /// channel subset addresses its own (smaller) space, and its
+    /// subset mapping places those bytes on the subset's *physical*
+    /// channels of this (full-mapping) device.
+    fn service_run_with(
+        &mut self,
+        m: AddressMapping,
+        addr: u64,
+        n: u64,
+        arrival: u64,
+        is_write: bool,
+    ) -> (u64, u64) {
         assert!(n > 0, "empty run");
-        let addr = self.mapping.burst_align(addr);
-        let bb = self.mapping.burst_bytes();
-        let group = self.mapping.row_group_bytes();
+        let addr = m.burst_align(addr);
+        let bb = m.burst_bytes();
+        let group = m.row_group_bytes();
         assert_eq!(
             addr / group,
             (addr + (n - 1) * bb) / group,
             "run of {n} bursts at {addr:#x} crosses a row-group boundary"
         );
-        let stripe = self.mapping.striped_channels();
+        let stripe = m.striped_channels();
         let last_slot = (n - 1) % stripe;
         let mut activations = 0u64;
         let mut last_done = 0u64;
@@ -467,7 +570,7 @@ impl DramModel {
         // serving the streaks whole, channel by channel, is identical
         // to the interleaved burst-by-burst order.
         for j in 0..stripe.min(n) {
-            let loc = self.mapping.decode(addr + j * bb);
+            let loc = m.decode(addr + j * bb);
             let count = (n - j).div_ceil(stripe);
             let done =
                 self.service_streak(&loc, count, arrival, is_write, &mut |_| activations += 1);
@@ -486,12 +589,40 @@ impl DramModel {
     /// exactly such runs). Returns `(completion cycle of the final
     /// burst, activations issued)`.
     pub fn read_run(&mut self, addr: u64, n_bursts: u64, arrival: u64) -> (u64, u64) {
+        self.log_req(addr, n_bursts, false);
         self.service_run(addr, n_bursts, arrival, false)
     }
 
     /// Write-side twin of [`read_run`](Self::read_run).
     pub fn write_run(&mut self, addr: u64, n_bursts: u64, arrival: u64) -> (u64, u64) {
+        self.log_req(addr, n_bursts, true);
         self.service_run(addr, n_bursts, arrival, true)
+    }
+
+    /// [`read_run`](Self::read_run) with the run decoded through an
+    /// explicit (typically channel-subset) mapping. The mapping must
+    /// come from the same [`DramConfig`] shape as this device.
+    pub fn read_run_with(
+        &mut self,
+        mapping: &AddressMapping,
+        addr: u64,
+        n_bursts: u64,
+        arrival: u64,
+    ) -> (u64, u64) {
+        debug_assert_eq!(mapping.burst_bytes(), self.mapping.burst_bytes());
+        self.service_run_with(*mapping, addr, n_bursts, arrival, false)
+    }
+
+    /// Write-side twin of [`read_run_with`](Self::read_run_with).
+    pub fn write_run_with(
+        &mut self,
+        mapping: &AddressMapping,
+        addr: u64,
+        n_bursts: u64,
+        arrival: u64,
+    ) -> (u64, u64) {
+        debug_assert_eq!(mapping.burst_bytes(), self.mapping.burst_bytes());
+        self.service_run_with(*mapping, addr, n_bursts, arrival, true)
     }
 
     /// Service `n` bursts that all target `addr`'s row — the FR-FCFS
@@ -506,12 +637,30 @@ impl DramModel {
         arrival: u64,
         on_act: &mut dyn FnMut(u64),
     ) -> u64 {
+        self.log_req(addr, n, false);
         let loc = self.mapping.decode(addr);
+        self.service_streak(&loc, n, arrival, false, on_act)
+    }
+
+    /// [`read_streak`](Self::read_streak) decoded through an explicit
+    /// mapping (shared-device tenant subsets; see
+    /// [`read_run_with`](Self::read_run_with)).
+    pub fn read_streak_with(
+        &mut self,
+        mapping: &AddressMapping,
+        addr: u64,
+        n: u64,
+        arrival: u64,
+        on_act: &mut dyn FnMut(u64),
+    ) -> u64 {
+        debug_assert_eq!(mapping.burst_bytes(), self.mapping.burst_bytes());
+        let loc = mapping.decode(addr);
         self.service_streak(&loc, n, arrival, false, on_act)
     }
 
     /// Service one burst *read*; returns `(data completion cycle, activated)`.
     pub fn read_burst(&mut self, addr: u64, arrival: u64) -> (u64, bool) {
+        self.log_req(addr, 1, false);
         self.service(addr, arrival, false)
     }
 
@@ -538,6 +687,7 @@ impl DramModel {
 
     /// Service one burst *write* (aggregation write-back / mask writes).
     pub fn write_burst(&mut self, addr: u64, arrival: u64) -> (u64, bool) {
+        self.log_req(addr, 1, true);
         self.service(addr, arrival, true)
     }
 
@@ -854,6 +1004,101 @@ mod tests {
         d.session_hist = vec![0; 4];
         d.record_session(9);
         assert_eq!(d.session_hist[9], 1);
+    }
+
+    #[test]
+    fn tenant_attribution_partitions_activations() {
+        let mut d = hbm();
+        d.enable_tenant_tracking(2);
+        for i in 0..16u64 {
+            d.set_tenant((i % 2) as usize);
+            d.read_burst(i << 18, 0); // new row every burst, same bank
+        }
+        let c = &d.counters;
+        assert_eq!(c.tenant_activations.len(), 2);
+        assert_eq!(c.tenant_activations.iter().sum::<u64>(), c.activations);
+        assert_eq!(c.tenant_activations, vec![8, 8]);
+    }
+
+    #[test]
+    fn tenant_tracking_off_leaves_counters_bare() {
+        let mut tracked = hbm();
+        let mut bare = hbm();
+        tracked.set_tenant(3); // harmless: vector never sized
+        for i in 0..64u64 {
+            tracked.read_burst(i * 32 * 97, 0);
+            bare.read_burst(i * 32 * 97, 0);
+        }
+        assert!(tracked.counters.tenant_activations.is_empty());
+        assert_eq!(tracked.counters.activations, bare.counters.activations);
+        assert_eq!(tracked.busy_until(), bare.busy_until());
+    }
+
+    #[test]
+    fn request_log_captures_all_entry_points() {
+        let mut d = hbm();
+        assert!(d.take_request_log().is_empty(), "logging off: nothing captured");
+        d.enable_request_log();
+        d.read_burst(0, 0);
+        d.write_burst(64, 0);
+        d.read_run(1 << 20, 8, 0);
+        d.write_run(1 << 21, 4, 0);
+        let mut acts = 0;
+        d.read_streak(0, 3, 0, &mut |_| acts += 1);
+        let log = d.take_request_log();
+        assert_eq!(
+            log,
+            vec![
+                DramReq { addr: 0, bursts: 1, write: false },
+                DramReq { addr: 64, bursts: 1, write: true },
+                DramReq { addr: 1 << 20, bursts: 8, write: false },
+                DramReq { addr: 1 << 21, bursts: 4, write: true },
+                DramReq { addr: 0, bursts: 3, write: false },
+            ]
+        );
+        assert!(d.take_request_log().is_empty(), "take drains the log");
+    }
+
+    #[test]
+    fn subset_mapping_on_full_device_stays_in_subset() {
+        use crate::dram::mapping::ChannelSet;
+        // Replaying a tenant's (subset-mapped) addresses on a shared
+        // full-mapping device must land on the subset's physical
+        // channels — the shared-device isolation invariant.
+        let set = ChannelSet::parse("2-3").unwrap();
+        let cfg = DramStandardKind::Hbm.config();
+        let sub = AddressMapping::with_channels(&cfg, &set);
+        let mut d = DramModel::new(cfg);
+        let mut rng_state = 0xDEAD_BEEFu64;
+        for _ in 0..500 {
+            rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            // align to the 4-burst run so it can't cross a row group
+            let addr = (rng_state % (sub.capacity_bytes() / 2)) & !127;
+            d.read_run_with(&sub, addr, 4, 0);
+        }
+        for (c, &acts) in d.counters.channel_activations.iter().enumerate() {
+            if set.contains(c as u32) {
+                assert!(acts > 0, "member channel {c} unused");
+            } else {
+                assert_eq!(acts, 0, "activation escaped to channel {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_with_full_mapping_matches_plain_run() {
+        let mut a = hbm();
+        let mut b = hbm();
+        let m = *b.mapping();
+        for (addr, n, arrival) in [(0u64, 64u64, 0u64), (1 << 20, 9, 100), (0, 32, 0)] {
+            assert_eq!(a.read_run(addr, n, arrival), b.read_run_with(&m, addr, n, arrival));
+            assert_eq!(a.write_run(addr, n, arrival), b.write_run_with(&m, addr, n, arrival));
+        }
+        a.flush_sessions();
+        b.flush_sessions();
+        assert_eq!(a.counters.session_hist, b.counters.session_hist);
+        assert_eq!(a.counters.energy_pj, b.counters.energy_pj);
+        assert_eq!(a.busy_until(), b.busy_until());
     }
 
     #[test]

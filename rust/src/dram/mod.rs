@@ -15,6 +15,6 @@ pub mod energy;
 pub mod mapping;
 pub mod standard;
 
-pub use controller::{DramCounters, DramModel};
+pub use controller::{DramCounters, DramModel, DramReq};
 pub use mapping::{key, pack_key, unpack_key, AddressMapping, ChannelSet, Loc, Run};
 pub use standard::{DramConfig, DramStandardKind};

@@ -15,7 +15,11 @@
 //!                 `--qos` switches to the long-lived frontend: async
 //!                 job ingestion, weighted-fair tenant scheduling and
 //!                 per-tenant DRAM channel partitioning
-//!                 (`--tenants a:weight=2:channels=0-1,b:channels=4-7`)
+//!                 (`--tenants a:weight=2:channels=0-1,b:channels=4-7`);
+//!                 `--shared-device` makes concurrent jobs contend on
+//!                 one DRAM device per config shape, with per-tenant
+//!                 activation attribution, priority-lane preemption at
+//!                 phase boundaries, and weighted LRU quotas
 //!   train         end-to-end PJRT training with burst/row dropout masks
 //!                 (requires the `pjrt` build feature)
 //!   table5        the full Table-5 accuracy grid (requires `pjrt`)
@@ -32,7 +36,9 @@ use lignn::qos::{QosEngine, TenantSet};
 use lignn::serve::{GraphStore, ServeJob, ServeRunner};
 use lignn::sim::metrics::QueueWaitStats;
 use lignn::sim::runs::alpha_grid;
-use lignn::sim::{run_sim, run_sim_recorded, SweepPlan, SweepRunner};
+use lignn::sim::{
+    run_sim, run_sim_preemptible_with_buffer, run_sim_recorded, NextStep, SweepPlan, SweepRunner,
+};
 use lignn::telemetry::{chrome_trace, prometheus_text, PhaseActs, TraceRecorder};
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
@@ -145,12 +151,46 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     let graph = load_graph(a, &cfg)?;
     let trace_path = a.get("trace");
     let prom_path = a.get("prom");
-    let want_telemetry =
-        trace_path.is_some() || prom_path.is_some() || a.get("timeline").is_some();
+    // `--preempt-at K` parks the engine at schedule boundary K and
+    // records a zero-width preempt marker there (metrics unchanged —
+    // the conservation property the driver tests pin). Mostly useful
+    // with `--trace` so validators see a preempted span stream.
+    let preempt_at: Option<usize> = match a.get("preempt-at") {
+        Some(v) => {
+            Some(v.parse().map_err(|e| Error::msg(format!("--preempt-at {v}: {e}")))?)
+        }
+        None => None,
+    };
+    let want_telemetry = trace_path.is_some()
+        || prom_path.is_some()
+        || a.get("timeline").is_some()
+        || preempt_at.is_some();
     let m = if want_telemetry {
         let window: u64 = a.parse_or("timeline", 4096).map_err(Error::msg)?;
         let mut rec = TraceRecorder::new().with_timeline(window);
-        let m = run_sim_recorded(&cfg, &graph, &mut rec);
+        let m = match preempt_at {
+            Some(k) => {
+                let mut seen = 0usize;
+                let mut buf = Vec::new();
+                run_sim_preemptible_with_buffer(
+                    &cfg,
+                    &graph,
+                    &mut buf,
+                    &mut rec,
+                    0,
+                    false,
+                    &mut |cur, _chunk| {
+                        if matches!(cur.next, NextStep::Finish) {
+                            return false;
+                        }
+                        let fire = seen == k;
+                        seen += 1;
+                        fire
+                    },
+                )
+            }
+            None => run_sim_recorded(&cfg, &graph, &mut rec),
+        };
         if let Some(path) = trace_path {
             let trace = chrome_trace(&rec, &m, &cfg.dram.config());
             std::fs::write(path, format!("{trace}\n"))
@@ -453,9 +493,14 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
         return Err(Error::msg("need --jobs ≥ 1"));
     }
     let threads: usize = a.parse_or("threads", default_threads()).map_err(Error::msg)?;
+    let shared_device = a.has("shared-device");
 
     let store = std::sync::Arc::new(store);
-    let engine = QosEngine::start(std::sync::Arc::clone(&store), tenants.clone(), threads)?;
+    let engine = if shared_device {
+        QosEngine::start_shared(std::sync::Arc::clone(&store), tenants.clone(), threads)?
+    } else {
+        QosEngine::start(std::sync::Arc::clone(&store), tenants.clone(), threads)?
+    };
     let grid = alpha_grid();
     let graph_names: Vec<String> = store.names().iter().map(|n| n.to_string()).collect();
     let tenant_names = tenants.names();
@@ -489,6 +534,8 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                     fields.insert("label".into(), Json::str(r.label.clone()));
                     fields.insert("queue_wait_ms".into(), Json::num(r.queue_wait_ms));
                     fields.insert("run_ms".into(), Json::num(r.run_ms));
+                    fields.insert("e2e_ms".into(), Json::num(r.e2e_ms));
+                    fields.insert("preemptions".into(), Json::num(r.preemptions as f64));
                 }
                 obj
             })
@@ -529,6 +576,8 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                     ("phase_activations", phase_acts_json(&rep.phase_acts)),
                     ("slo_ms", json_opt(rep.slo_ms)),
                     ("slo_attainment", json_opt(rep.slo_attainment)),
+                    ("preemptions", Json::num(rep.preemptions as f64)),
+                    ("admission_rejects", Json::num(rep.admission_rejects as f64)),
                     ("acts_inside_partition", Json::num(inside as f64)),
                     ("acts_outside_partition", Json::num(outside as f64)),
                     (
@@ -545,6 +594,43 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
         for rep in &outcome.reports {
             all_wait.merge(&rep.wait);
         }
+        // One sample per job in the merged aggregate: a preempted job's
+        // resumed segments were folded into a single Completed record,
+        // so `stats.jobs` equals the number of *jobs*, not segments.
+        let total_preemptions: u64 =
+            outcome.results.iter().map(|r| r.preemptions as u64).sum();
+        let total_rejects: u64 = outcome.admission_rejects.iter().map(|(_, n)| n).sum();
+        let shared_devices: Vec<Json> = outcome
+            .shared
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("standard", Json::str(d.standard.clone())),
+                    ("channels", Json::num(d.channels as f64)),
+                    ("reads", Json::num(d.reads as f64)),
+                    ("writes", Json::num(d.writes as f64)),
+                    ("activations", Json::num(d.activations as f64)),
+                    ("row_hits", Json::num(d.row_hits as f64)),
+                    ("row_conflicts", Json::num(d.row_conflicts as f64)),
+                    ("refreshes", Json::num(d.refreshes as f64)),
+                    ("energy_pj", Json::num(d.energy_pj)),
+                    ("busy_until", Json::num(d.busy_until as f64)),
+                    ("row_hit_rate", Json::num(d.row_hit_rate())),
+                    (
+                        "channel_activations",
+                        Json::Arr(
+                            d.channel_activations.iter().map(|&v| Json::num(v as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "tenant_activations",
+                        Json::Arr(
+                            d.tenant_activations.iter().map(|&v| Json::num(v as f64)).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
         let depth_rows: Vec<Json> = outcome
             .depth
             .iter()
@@ -571,6 +657,8 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
             ("e2e_p99_ms", json_opt(all_wait.e2e_percentile_ms(0.99))),
             ("elapsed_ms", Json::num(outcome.elapsed_ms)),
             ("jobs_per_sec", Json::num(outcome.jobs_per_sec())),
+            ("preemptions", Json::num(total_preemptions as f64)),
+            ("admission_rejects", Json::num(total_rejects as f64)),
             ("queue_depth", Json::Arr(depth_rows)),
         ]);
         println!(
@@ -581,10 +669,12 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                 ("jobs", Json::num(outcome.results.len() as f64)),
                 ("threads", Json::num(threads as f64)),
                 ("partition", Json::str(partition_desc)),
+                ("shared_device", Json::Bool(shared_device)),
                 ("elapsed_ms", Json::num(outcome.elapsed_ms)),
                 ("jobs_per_sec", Json::num(outcome.jobs_per_sec())),
                 ("transposes", Json::num(store.total_transposes() as f64)),
                 ("stats", stats),
+                ("shared_devices", Json::Arr(shared_devices)),
                 ("results", Json::Arr(results)),
                 ("reports", Json::Arr(reports)),
             ])
@@ -622,6 +712,25 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
     println!("{partition_desc}");
     for rep in &outcome.reports {
         println!("{}", rep.summary());
+    }
+    for d in &outcome.shared {
+        let tenants_desc: Vec<String> = tenants
+            .iter()
+            .zip(&d.tenant_activations)
+            .map(|(t, &a)| format!("{}={a}", t.name))
+            .collect();
+        println!(
+            "shared {} x{}ch: {} reads / {} writes, {} ACTs ({:.1}% row hits, {} conflicts), \
+             per-tenant ACTs: {}",
+            d.standard,
+            d.channels,
+            d.reads,
+            d.writes,
+            d.activations,
+            d.row_hit_rate() * 100.0,
+            d.row_conflicts,
+            tenants_desc.join(" "),
+        );
     }
     println!(
         "qos-served {} jobs from {} tenants over {} graphs on {} threads in {:.1} ms \
@@ -815,14 +924,17 @@ fn usage() {
          --no-mask-writeback --burst-trace <file> --graph-file <path>\n\
          telemetry flags (simulate): --trace <trace.json> --timeline <cycles> \\\n\
          --prom <file> (Perfetto span trace / DRAM-utilization window / \\\n\
-         Prometheus text snapshot)\n\
+         Prometheus text snapshot) --preempt-at K (park at boundary K, \\\n\
+         recording a zero-width preempt marker; metrics are conserved)\n\
          sampling flags: --sampler full|neighbor|locality --fanout N|inf|N,M,... \\\n\
          (layer-wise budgets: --fanout 10,5; sample: --compare runs all three)\n\
          serve flags: --graphs k=N:d=D,...|presets --jobs N --threads N \\\n\
          (α cycles the sweep grid unless --alpha pins it)\n\
          qos flags: serve --qos --tenants a:weight=2:channels=0-1,b:channels=4-7 \\\n\
          (async ingest + weighted-fair scheduling + per-tenant DRAM channel \\\n\
-         partitioning; tenant keys: weight= channels= slo=)"
+         partitioning; tenant keys: weight= channels= slo= priority=) \\\n\
+         --shared-device (jobs contend on one DRAM device per config shape, \\\n\
+         with per-tenant ACT attribution and weighted LRU quotas)"
     );
 }
 

@@ -12,33 +12,133 @@
 //! plus queue-wait latency, SLO attainment, and the per-channel
 //! activation attribution that audits the partition.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::dram::{DramReq, DramStandardKind};
 use crate::fail;
 use crate::lignn::Burst;
 use crate::serve::{
     build_reports, plan_references, EnginePool, GraphStore, ServeJob, ServeReport, WorkItem,
 };
 use crate::sim::metrics::{Metrics, QueueWaitStats};
-use crate::sim::run_sim_recorded_with_buffer;
+use crate::sim::{run_sim_preemptible_with_buffer, PhaseCursor};
 use crate::telemetry::{DepthGauge, PhaseActs};
 use crate::util::error::{Error, Result};
 
-use super::partition::ChannelPartition;
-use super::queue::IngestQueue;
+use super::partition::{lru_quota, ChannelPartition};
+use super::queue::{IngestQueue, PendingJob};
+use super::shared::{DeviceReport, SharedDevice};
 use super::tenant::TenantSet;
+
+/// Lazily created shared devices, one per DRAM configuration shape
+/// (keyed by standard kind) — every concurrently running job whose
+/// config has that shape feeds the same device.
+type SharedDevices = Arc<Mutex<HashMap<DramStandardKind, SharedDevice>>>;
 
 /// One completed job, in the worker that ran it.
 struct Completed {
     id: u64,
     job: ServeJob,
     queue_wait_ms: f64,
+    /// Wall-clock simulation span, *excluding* time parked under
+    /// preemption (the segments' sum).
     run_ms: f64,
+    /// Wall-clock submit → final completion — for a preempted job this
+    /// covers every segment plus the parked gaps.
+    e2e_ms: f64,
+    /// Phase boundaries at which this job was parked for priority work.
+    preemptions: u32,
     metrics: Metrics,
     /// Per-phase activation attribution recorded during the run.
     phase: PhaseActs,
+}
+
+/// Everything a worker thread (or a nested preemption frame) needs.
+struct WorkerCtx {
+    store: Arc<GraphStore>,
+    queue: Arc<IngestQueue>,
+    done: Arc<Mutex<Vec<Completed>>>,
+    tenants: TenantSet,
+    shared: Option<SharedDevices>,
+}
+
+/// Replay one boundary's request chunk against the shared device of
+/// this job's configuration shape (created on first use).
+fn feed_shared(ctx: &WorkerCtx, kind: DramStandardKind, tenant: usize, chunk: &[DramReq]) {
+    let Some(devs) = &ctx.shared else { return };
+    if chunk.is_empty() {
+        return;
+    }
+    let mut map = devs.lock().expect("shared devices poisoned");
+    let dev = map.entry(kind).or_insert_with(|| {
+        let sets: Vec<_> = ctx.tenants.iter().map(|t| t.channels).collect();
+        SharedDevice::new(kind.config(), &sets)
+    });
+    dev.ingest_all(tenant, chunk);
+}
+
+/// Execute one job, preemptibly. At every phase boundary the worker
+/// feeds the job's DRAM request chunk into the shared device (shared
+/// mode only) and, unless this frame *is* a preemption (`nested`),
+/// drains any backlogged priority lane by running those jobs right
+/// here — the outer engine sits untouched on the stack, so resuming is
+/// returning, and the preempted job's metrics are conserved exactly
+/// (pinned by `sim::driver`'s boundary-sweep test).
+fn run_job(ctx: &WorkerCtx, buf: &mut Vec<Burst>, pending: PendingJob, nested: bool) {
+    let graph = ctx.store.get(&pending.job.graph).expect("graph validated at submit");
+    let picked_up = Instant::now();
+    let queue_wait_ms = picked_up.duration_since(pending.submitted).as_secs_f64() * 1e3;
+    let tenant_idx = ctx.tenants.index_of(&pending.job.tenant).unwrap_or(0);
+    let kind = pending.job.cfg.dram;
+    let mut phase = PhaseActs::default();
+    let mut preemptions = 0u32;
+    let mut parked = Duration::ZERO;
+    let log_requests = ctx.shared.is_some();
+    let mut hook = |_cur: PhaseCursor, chunk: Vec<DramReq>| -> bool {
+        feed_shared(ctx, kind, tenant_idx, &chunk);
+        if nested || !ctx.queue.preempt_requested() {
+            return false;
+        }
+        let t0 = Instant::now();
+        let mut did = false;
+        while let Some(p) = ctx.queue.take_priority() {
+            // Priority jobs run with their own buffer; they are never
+            // themselves preempted (one level of nesting).
+            let mut nested_buf = Vec::new();
+            run_job(ctx, &mut nested_buf, p, true);
+            did = true;
+        }
+        if did {
+            preemptions += 1;
+            parked += t0.elapsed();
+        }
+        did
+    };
+    let metrics = run_sim_preemptible_with_buffer(
+        &pending.job.cfg,
+        graph,
+        buf,
+        &mut phase,
+        tenant_idx as u32,
+        log_requests,
+        &mut hook,
+    );
+    let run_ms = picked_up.elapsed().saturating_sub(parked).as_secs_f64() * 1e3;
+    let e2e_ms = pending.submitted.elapsed().as_secs_f64() * 1e3;
+    ctx.queue.note_completion(&pending.job.tenant, run_ms);
+    ctx.done.lock().expect("qos results poisoned").push(Completed {
+        id: pending.id,
+        job: pending.job,
+        queue_wait_ms,
+        run_ms,
+        e2e_ms,
+        preemptions,
+        metrics,
+        phase,
+    });
 }
 
 /// One job's outcome with its serving-latency bookkeeping.
@@ -51,8 +151,15 @@ pub struct QosJobResult {
     pub label: String,
     /// Wall-clock submit → worker-pickup wait.
     pub queue_wait_ms: f64,
-    /// Wall-clock simulation span on the worker.
+    /// Wall-clock simulation span on the worker, excluding time parked
+    /// under preemption.
     pub run_ms: f64,
+    /// Wall-clock submit → *final* completion. For an unpreempted job
+    /// this is ≈ wait + run; for a preempted job it also covers the
+    /// parked gaps, which is what the tenant actually experienced.
+    pub e2e_ms: f64,
+    /// How many phase boundaries parked this job for priority work.
+    pub preemptions: u32,
     pub metrics: Metrics,
 }
 
@@ -70,8 +177,16 @@ pub struct QosReport {
     /// Queue-wait / run-span aggregation over the group's jobs.
     pub wait: QueueWaitStats,
     pub slo_ms: Option<f64>,
-    /// Fraction of jobs whose wait+run met the SLO (`None` without one).
+    /// Fraction of jobs whose submit→final-completion (e2e) latency met
+    /// the SLO (`None` without one). Preempted jobs are judged on their
+    /// *final* completion, segments merged.
     pub slo_attainment: Option<f64>,
+    /// Total preemptions suffered by the group's jobs.
+    pub preemptions: u64,
+    /// Jobs this tenant's lane turned away at admission (SLO-driven;
+    /// lane-wide, so the same count appears on each of the tenant's
+    /// groups).
+    pub admission_rejects: u64,
     /// Row activations `(inside, outside)` the tenant's channel subset,
     /// summed over the group's jobs. `outside` must be 0 whenever
     /// `channels` is set — the partition audit.
@@ -105,8 +220,15 @@ impl QosReport {
             Some(p) => format!(" / {p:.2}ms p95"),
             None => String::new(),
         };
+        let mut qos = String::new();
+        if self.preemptions > 0 {
+            qos.push_str(&format!(", preempted x{}", self.preemptions));
+        }
+        if self.admission_rejects > 0 {
+            qos.push_str(&format!(", rejected {}", self.admission_rejects));
+        }
         format!(
-            "{} [w={} ch={channels}] wait {:.2}ms mean{p95} / {:.2}ms max{slo} — {}",
+            "{} [w={} ch={channels}] wait {:.2}ms mean{p95} / {:.2}ms max{slo}{qos} — {}",
             self.tenant(),
             self.weight,
             self.wait.mean_wait_ms,
@@ -126,6 +248,13 @@ pub struct QosOutcome {
     /// Per-lane `(tenant, gauge)` queue-depth gauges, registration
     /// order (includes tenants that never submitted).
     pub depth: Vec<(String, DepthGauge)>,
+    /// Shared-device reports (empty unless the engine ran in
+    /// shared-device mode), sorted by DRAM standard name — the
+    /// contended per-tenant view of row activations, hits, conflicts.
+    pub shared: Vec<DeviceReport>,
+    /// Per-lane `(tenant, rejected-jobs)` admission-control counters,
+    /// registration order.
+    pub admission_rejects: Vec<(String, u64)>,
     /// Wall-clock span from engine start to drain.
     pub elapsed_ms: f64,
 }
@@ -147,11 +276,41 @@ pub struct QosEngine {
     workers: Vec<JoinHandle<()>>,
     threads: usize,
     started: Instant,
+    /// `Some` in shared-device mode: every job's DRAM requests replay
+    /// against one contended device per configuration shape.
+    shared: Option<SharedDevices>,
 }
 
 impl QosEngine {
     /// Spawn `threads` workers over `store` (blocked until jobs arrive).
+    /// Each job simulates against its own private DRAM device, as the
+    /// serve path does.
     pub fn start(store: Arc<GraphStore>, tenants: TenantSet, threads: usize) -> Result<QosEngine> {
+        QosEngine::start_with(store, tenants, threads, false)
+    }
+
+    /// Like [`start`](QosEngine::start), but in *shared-device* mode:
+    /// concurrently running jobs tag their DRAM requests with the
+    /// tenant id and contend for one [`SharedDevice`] per configuration
+    /// shape (real row buffers, banks, refresh windows), and each job's
+    /// on-chip LRU capacity is cut to the tenant's weighted
+    /// [`lru_quota`]. The per-job metrics remain the private-device
+    /// results; the contended view is surfaced as
+    /// [`QosOutcome::shared`] device reports.
+    pub fn start_shared(
+        store: Arc<GraphStore>,
+        tenants: TenantSet,
+        threads: usize,
+    ) -> Result<QosEngine> {
+        QosEngine::start_with(store, tenants, threads, true)
+    }
+
+    fn start_with(
+        store: Arc<GraphStore>,
+        tenants: TenantSet,
+        threads: usize,
+        shared_device: bool,
+    ) -> Result<QosEngine> {
         if store.is_empty() {
             return Err(Error::msg("QoS engine needs a non-empty graph store"));
         }
@@ -159,41 +318,23 @@ impl QosEngine {
         let partition = ChannelPartition::from_tenants(&tenants);
         let queue = Arc::new(IngestQueue::new(&tenants));
         let done = Arc::new(Mutex::new(Vec::new()));
+        let shared: Option<SharedDevices> =
+            shared_device.then(|| Arc::new(Mutex::new(HashMap::new())));
         let workers = (0..threads)
             .map(|_| {
-                let queue = Arc::clone(&queue);
-                let store = Arc::clone(&store);
-                let done = Arc::clone(&done);
+                let ctx = WorkerCtx {
+                    store: Arc::clone(&store),
+                    queue: Arc::clone(&queue),
+                    done: Arc::clone(&done),
+                    tenants: tenants.clone(),
+                    shared: shared.clone(),
+                };
                 std::thread::spawn(move || {
                     // One recycled burst buffer per worker, like the
                     // engine pool's workers.
                     let mut buf: Vec<Burst> = Vec::new();
-                    while let Some(pending) = queue.take() {
-                        let graph =
-                            store.get(&pending.job.graph).expect("graph validated at submit");
-                        let picked_up = Instant::now();
-                        let queue_wait_ms =
-                            picked_up.duration_since(pending.submitted).as_secs_f64() * 1e3;
-                        // PhaseActs only reads counter deltas at phase
-                        // boundaries — simulation results stay
-                        // bit-identical to the unrecorded path (pinned
-                        // by the golden parity tests).
-                        let mut phase = PhaseActs::default();
-                        let metrics = run_sim_recorded_with_buffer(
-                            &pending.job.cfg,
-                            graph,
-                            &mut buf,
-                            &mut phase,
-                        );
-                        let run_ms = picked_up.elapsed().as_secs_f64() * 1e3;
-                        done.lock().expect("qos results poisoned").push(Completed {
-                            id: pending.id,
-                            job: pending.job,
-                            queue_wait_ms,
-                            run_ms,
-                            metrics,
-                            phase,
-                        });
+                    while let Some(pending) = ctx.queue.take() {
+                        run_job(&ctx, &mut buf, pending, false);
                     }
                 })
             })
@@ -207,6 +348,7 @@ impl QosEngine {
             workers,
             threads,
             started: Instant::now(),
+            shared,
         })
     }
 
@@ -229,6 +371,14 @@ impl QosEngine {
     /// running* — this is the async-ingestion half of the subsystem.
     pub fn submit(&self, mut job: ServeJob) -> Result<u64> {
         self.partition.apply(&job.tenant, &mut job.cfg)?;
+        if self.shared.is_some() {
+            // Shared-device jobs don't own the on-chip buffer either:
+            // cut the LRU capacity to the tenant's weighted share.
+            let spec =
+                self.tenants.get(&job.tenant).expect("partition.apply validated the tenant");
+            let total: f64 = self.tenants.iter().map(|t| t.weight).sum();
+            job.cfg.capacity = lru_quota(job.cfg.capacity, spec.weight, total);
+        }
         job.cfg.validate().map_err(|e| fail!("job `{}`: {e}", job.label()))?;
         if self.store.get(&job.graph).is_none() {
             return Err(fail!(
@@ -274,18 +424,37 @@ impl QosEngine {
 
         // Decompose by move (jobs and metrics are not cheap to clone —
         // a long-lived session accumulates thousands of them); the
-        // latency triples stay parallel to both vectors.
+        // latency rows `(id, wait, run, e2e)` and preemption counts
+        // stay parallel to both vectors. One row per job — a preempted
+        // job's resumed segments are already merged into it.
         let mut jobs: Vec<ServeJob> = Vec::with_capacity(completed.len());
         let mut job_metrics: Vec<Metrics> = Vec::with_capacity(completed.len());
-        let mut latency: Vec<(u64, f64, f64)> = Vec::with_capacity(completed.len());
+        let mut latency: Vec<(u64, f64, f64, f64)> = Vec::with_capacity(completed.len());
+        let mut preempts: Vec<u32> = Vec::with_capacity(completed.len());
         let mut phases: Vec<PhaseActs> = Vec::with_capacity(completed.len());
         for c in completed {
             jobs.push(c.job);
             job_metrics.push(c.metrics);
-            latency.push((c.id, c.queue_wait_ms, c.run_ms));
+            latency.push((c.id, c.queue_wait_ms, c.run_ms, c.e2e_ms));
+            preempts.push(c.preemptions);
             phases.push(c.phase);
         }
         let depth = self.queue.depth_gauges();
+        let admission_rejects = self.queue.admission_rejects();
+
+        // Drain and flush the shared devices: whatever is still queued
+        // in the per-channel fronts services now, then each device
+        // folds into its report.
+        let mut shared_reports: Vec<DeviceReport> = Vec::new();
+        if let Some(devs) = &self.shared {
+            let mut map = devs.lock().expect("shared devices poisoned");
+            let mut devices: Vec<_> = map.drain().collect();
+            devices.sort_by_key(|(kind, _)| kind.name());
+            for (_, mut dev) in devices {
+                dev.flush();
+                shared_reports.push(dev.report());
+            }
+        }
 
         // Reference runs ride a plain engine pool — the queue is closed,
         // so weighted fairness no longer applies, and each reference
@@ -313,15 +482,19 @@ impl QosEngine {
                     .get(&serve.tenant)
                     .expect("group tenants come from submitted jobs");
                 let wait = QueueWaitStats::collect(
-                    idxs.iter().map(|&i| (latency[i].1, latency[i].2)),
+                    idxs.iter().map(|&i| (latency[i].1, latency[i].2, latency[i].3)),
                 );
                 let slo_attainment = spec.slo_ms.map(|slo| {
-                    let met = idxs
-                        .iter()
-                        .filter(|&&i| latency[i].1 + latency[i].2 <= slo)
-                        .count();
+                    let met = idxs.iter().filter(|&&i| latency[i].3 <= slo).count();
                     met as f64 / idxs.len().max(1) as f64
                 });
+                let group_preemptions: u64 =
+                    idxs.iter().map(|&i| preempts[i] as u64).sum();
+                let lane_rejects = admission_rejects
+                    .iter()
+                    .find(|(name, _)| name == &serve.tenant)
+                    .map(|(_, n)| *n)
+                    .unwrap_or(0);
                 let isolation = spec.channels.map(|set| {
                     let (mut inside, mut outside) = (0u64, 0u64);
                     for &i in &idxs {
@@ -347,6 +520,8 @@ impl QosEngine {
                     wait,
                     slo_ms: spec.slo_ms,
                     slo_attainment,
+                    preemptions: group_preemptions,
+                    admission_rejects: lane_rejects,
                     isolation,
                     phase_acts,
                     depth: lane_depth,
@@ -358,17 +533,29 @@ impl QosEngine {
             .into_iter()
             .zip(job_metrics)
             .zip(latency)
-            .map(|((job, metrics), (id, queue_wait_ms, run_ms))| QosJobResult {
-                id,
-                label: job.label(),
-                tenant: job.tenant,
-                graph: job.graph,
-                queue_wait_ms,
-                run_ms,
-                metrics,
+            .zip(preempts)
+            .map(|(((job, metrics), (id, queue_wait_ms, run_ms, e2e_ms)), preemptions)| {
+                QosJobResult {
+                    id,
+                    label: job.label(),
+                    tenant: job.tenant,
+                    graph: job.graph,
+                    queue_wait_ms,
+                    run_ms,
+                    e2e_ms,
+                    preemptions,
+                    metrics,
+                }
             })
             .collect();
-        Ok(QosOutcome { results, reports, depth, elapsed_ms })
+        Ok(QosOutcome {
+            results,
+            reports,
+            depth,
+            shared: shared_reports,
+            admission_rejects,
+            elapsed_ms,
+        })
     }
 }
 
@@ -424,7 +611,12 @@ mod tests {
         for (r, &alpha) in outcome.results.iter().zip(&alphas) {
             assert_eq!(r.metrics.alpha, alpha);
             assert!(r.queue_wait_ms >= 0.0 && r.run_ms > 0.0);
+            assert!(r.e2e_ms >= r.run_ms, "e2e covers the whole job lifetime");
+            assert_eq!(r.preemptions, 0, "no priority lanes registered");
         }
+        // private-device mode: no shared reports; nothing rejected
+        assert!(outcome.shared.is_empty());
+        assert!(outcome.admission_rejects.iter().all(|(_, n)| *n == 0));
         // per-job metrics are the pure-function results — the worker's
         // attached PhaseActs recorder must not perturb the simulation
         assert!(outcome.results.iter().any(|r| r.metrics.dram.activations > 0));
@@ -515,6 +707,117 @@ mod tests {
                     assert_eq!(a, 0, "job {} touched channel {c}", r.label);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn preemption_parks_bulk_at_a_boundary_and_conserves_metrics() {
+        // Deterministic preemption: a priority job is already backlogged
+        // when the bulk job starts, so the very first phase boundary
+        // parks bulk, drains the lane in a nested frame, and resumes.
+        let tenants = TenantSet::from_spec("bulk,hot:priority=1").unwrap();
+        let queue = Arc::new(IngestQueue::new(&tenants));
+        let ctx = WorkerCtx {
+            store: store(),
+            queue: Arc::clone(&queue),
+            done: Arc::new(Mutex::new(Vec::new())),
+            tenants,
+            shared: None,
+        };
+        queue.submit(ServeJob::new("g", tiny_cfg(0.2)).with_tenant("hot")).unwrap();
+        assert!(queue.preempt_requested());
+        let mut bulk_cfg = tiny_cfg(0.5);
+        bulk_cfg.epochs = 3;
+        let pending = PendingJob {
+            id: 99,
+            job: ServeJob::new("g", bulk_cfg.clone()).with_tenant("bulk"),
+            submitted: Instant::now(),
+        };
+        let mut buf = Vec::new();
+        run_job(&ctx, &mut buf, pending, false);
+        let done = ctx.done.lock().unwrap();
+        assert_eq!(done.len(), 2);
+        // the nested hot job completed first, while bulk sat parked
+        assert_eq!(done[0].job.tenant, "hot");
+        assert_eq!(done[1].job.tenant, "bulk");
+        let (hot, bulk) = (&done[0], &done[1]);
+        assert_eq!(hot.preemptions, 0, "priority jobs are never preempted");
+        assert_eq!(bulk.preemptions, 1, "one park covering the whole drain");
+        assert!(bulk.e2e_ms >= bulk.run_ms, "e2e includes the parked gap");
+        // conservation: the preempted run's metrics are bit-identical to
+        // an uninterrupted run of the same config (the driver's
+        // boundary-sweep test pins this across every boundary; here we
+        // check it end-to-end through the QoS path).
+        let g = GraphPreset::Tiny.build(7);
+        let serial = run_sim(&bulk_cfg, &g);
+        assert_eq!(bulk.metrics.dram.reads, serial.dram.reads);
+        assert_eq!(bulk.metrics.dram.activations, serial.dram.activations);
+        assert_eq!(bulk.metrics.exec_ns.to_bits(), serial.exec_ns.to_bits());
+        // the admission predictor saw both completions
+        assert_eq!(queue.admission_rejects(), vec![("bulk".into(), 0), ("hot".into(), 0)]);
+    }
+
+    #[test]
+    fn priority_lane_is_served_first_across_the_async_path() {
+        // Timing-robust integration check of the async engine with a
+        // priority lane: every job is counted exactly once, e2e/wait/run
+        // stay consistent, and report preemption counts agree with the
+        // per-job ones (whether or not the race produced a real park).
+        let tenants = TenantSet::from_spec("bulk,hot:priority=1").unwrap();
+        let engine = QosEngine::start(store(), tenants, 1).unwrap();
+        let mut long = tiny_cfg(0.5);
+        long.epochs = 4;
+        engine.submit(ServeJob::new("g", long).with_tenant("bulk")).unwrap();
+        engine.submit(ServeJob::new("g", tiny_cfg(0.2)).with_tenant("hot")).unwrap();
+        let outcome = engine.finish().unwrap();
+        assert_eq!(outcome.results.len(), 2);
+        let mut ids: Vec<u64> = outcome.results.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 2, "segments merged: one result per job");
+        for r in &outcome.results {
+            assert!(r.e2e_ms + 1e-6 >= r.run_ms);
+            if r.tenant == "hot" {
+                assert_eq!(r.preemptions, 0);
+            }
+        }
+        let by_tenant: u64 = outcome.reports.iter().map(|rep| rep.preemptions).sum();
+        let by_job: u64 = outcome.results.iter().map(|r| r.preemptions as u64).sum();
+        assert_eq!(by_tenant, by_job);
+        for rep in &outcome.reports {
+            assert_eq!(rep.wait.jobs, 1, "{}: one merged sample per job", rep.tenant());
+        }
+    }
+
+    #[test]
+    fn shared_device_mode_reports_contention() {
+        let tenants = TenantSet::from_spec("left:channels=0-3,right:channels=4-7").unwrap();
+        let engine = QosEngine::start_shared(store(), tenants, 2).unwrap();
+        for tenant in ["left", "right"] {
+            for alpha in [0.2, 0.6] {
+                engine.submit(ServeJob::new("g", tiny_cfg(alpha)).with_tenant(tenant)).unwrap();
+            }
+        }
+        let outcome = engine.finish().unwrap();
+        assert_eq!(outcome.results.len(), 4);
+        assert_eq!(outcome.shared.len(), 1, "all jobs share one HBM-shaped device");
+        let dev = &outcome.shared[0];
+        assert_eq!(dev.standard, "HBM");
+        assert!(dev.reads > 0 && dev.activations > 0);
+        assert!(dev.busy_until > 0);
+        // per-tenant attribution partitions the device total exactly
+        assert_eq!(dev.tenant_activations.len(), 2);
+        assert_eq!(dev.tenant_activations.iter().sum::<u64>(), dev.activations);
+        assert!(dev.tenant_activations.iter().all(|&a| a > 0));
+        // disjoint partition: each side only activates its own channels
+        let left: u64 = dev.channel_activations[..4].iter().sum();
+        let right: u64 = dev.channel_activations[4..].iter().sum();
+        assert_eq!(left, dev.tenant_activations[0]);
+        assert_eq!(right, dev.tenant_activations[1]);
+        // shared mode cuts each job's LRU capacity to its weighted quota
+        // (equal weights over capacity 256 → 128), visible in the cache
+        // stats: total probes unchanged, capacity halved.
+        for r in &outcome.results {
+            assert!(r.metrics.cache_hits + r.metrics.cache_misses > 0);
         }
     }
 

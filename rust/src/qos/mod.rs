@@ -20,6 +20,11 @@
 //!   requests *cannot* open a row outside its subset — isolation by
 //!   construction, audited by per-channel activation counters and burst
 //!   traces;
+//! * [`SharedDevice`] — shared-device execution mode: one `DramModel`
+//!   per configuration shape with one FR-FCFS front per channel, where
+//!   concurrent jobs' request streams contend for real row buffers,
+//!   banks, and refresh windows, every request tagged with its tenant
+//!   id (per-tenant ACT attribution alongside the per-channel split);
 //! * [`QosEngine`] — the long-lived worker pool tying those together,
 //!   folding per-tenant queue-wait latency, SLO attainment, channel
 //!   isolation, and the serve path's normalized activation/speedup rows
@@ -36,9 +41,11 @@
 mod engine;
 mod partition;
 mod queue;
+mod shared;
 mod tenant;
 
 pub use engine::{QosEngine, QosJobResult, QosOutcome, QosReport};
-pub use partition::ChannelPartition;
+pub use partition::{ChannelPartition, lru_quota};
 pub use queue::{IngestQueue, PendingJob, QosScheduler};
+pub use shared::{DeviceReport, SharedDevice};
 pub use tenant::{TenantSpec, TenantSet};

@@ -14,6 +14,11 @@ use crate::util::error::Result;
 
 use super::tenant::TenantSet;
 
+/// The weighted LRU-capacity quota shared-device jobs run under
+/// (re-exported from the cache layer — the partitioning story spans
+/// DRAM channels *and* the on-chip buffer).
+pub use crate::cache::weighted_quota as lru_quota;
+
 /// Tenant → channel-subset assignment (registration order preserved).
 #[derive(Debug, Clone)]
 pub struct ChannelPartition {

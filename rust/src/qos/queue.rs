@@ -36,11 +36,29 @@ pub struct PendingJob {
 struct Lane {
     name: String,
     weight: f64,
+    /// Preemptive priority lane: served before any normal lane, and
+    /// its backlog raises [`QosScheduler::preempt_requested`].
+    priority: bool,
+    /// Serving-latency objective driving admission control.
+    slo_ms: Option<f64>,
     /// Served work normalized by weight — the WFQ virtual time.
     vtime: f64,
     queue: VecDeque<PendingJob>,
     /// Queue length sampled at every admit and dispatch.
     depth: DepthGauge,
+    /// Observed completed-run wall-clock sums feeding the SLO
+    /// admission predictor.
+    run_sum_ms: f64,
+    completions: u64,
+    /// Submissions rejected by SLO admission control.
+    rejects: u64,
+}
+
+impl Lane {
+    /// Mean observed run span (`None` until a completion lands).
+    fn mean_run_ms(&self) -> Option<f64> {
+        (self.completions > 0).then(|| self.run_sum_ms / self.completions as f64)
+    }
 }
 
 /// Weighted-fair multi-lane queue (single-threaded core; see
@@ -62,9 +80,14 @@ impl QosScheduler {
                 .map(|t| Lane {
                     name: t.name.clone(),
                     weight: t.weight,
+                    priority: t.priority,
+                    slo_ms: t.slo_ms,
                     vtime: 0.0,
                     queue: VecDeque::new(),
                     depth: DepthGauge::default(),
+                    run_sum_ms: 0.0,
+                    completions: 0,
+                    rejects: 0,
                 })
                 .collect(),
             next_id: 0,
@@ -94,16 +117,49 @@ impl QosScheduler {
         id
     }
 
-    /// Serve the backlogged lane with the smallest virtual time
-    /// (registration order breaks ties), advancing it by `1/weight`.
-    pub fn pop(&mut self) -> Option<PendingJob> {
-        let lane = self
-            .lanes
+    /// SLO admission control, then [`push`](Self::push): when the lane
+    /// carries an SLO and its observed mean run span predicts the new
+    /// job's service time — `(backlog + 1) × mean run` — past the
+    /// target, the submission is rejected (and counted) instead of
+    /// queued to bust its objective. Lanes without observations admit
+    /// freely: the predictor needs at least one completion.
+    pub fn admit(&mut self, lane: usize, job: ServeJob) -> Result<u64> {
+        let l = &mut self.lanes[lane];
+        if let (Some(slo), Some(mean)) = (l.slo_ms, l.mean_run_ms()) {
+            let predicted = (l.queue.len() as f64 + 1.0) * mean;
+            if predicted > slo {
+                l.rejects += 1;
+                return Err(fail!(
+                    "tenant `{}`: admission rejected — predicted latency \
+                     {predicted:.2}ms ({} queued × {mean:.2}ms mean run) busts slo={slo}ms",
+                    l.name,
+                    l.queue.len() + 1,
+                ));
+            }
+        }
+        Ok(self.push(lane, job))
+    }
+
+    /// Feed one completed job's wall-clock run span back into the
+    /// lane's admission predictor.
+    pub fn note_completion(&mut self, lane: usize, run_ms: f64) {
+        let l = &mut self.lanes[lane];
+        l.run_sum_ms += run_ms;
+        l.completions += 1;
+    }
+
+    /// Backlogged lane with the smallest virtual time among `pool`
+    /// (registration order breaks ties).
+    fn best_lane(&self, priority_only: bool) -> Option<usize> {
+        self.lanes
             .iter()
             .enumerate()
-            .filter(|(_, l)| !l.queue.is_empty())
+            .filter(|(_, l)| !l.queue.is_empty() && (!priority_only || l.priority))
             .min_by(|(_, a), (_, b)| a.vtime.total_cmp(&b.vtime))
-            .map(|(i, _)| i)?;
+            .map(|(i, _)| i)
+    }
+
+    fn pop_lane(&mut self, lane: usize) -> Option<PendingJob> {
         let l = &mut self.lanes[lane];
         self.vnow = l.vtime;
         l.vtime += 1.0 / l.weight;
@@ -111,6 +167,33 @@ impl QosScheduler {
         let job = l.queue.pop_front();
         l.depth.sample(l.queue.len());
         job
+    }
+
+    /// Serve the next job: priority lanes strictly first (weighted-fair
+    /// among themselves), then the normal lanes by smallest virtual
+    /// time, advancing the served lane by `1/weight`.
+    pub fn pop(&mut self) -> Option<PendingJob> {
+        let lane = self.best_lane(true).or_else(|| self.best_lane(false))?;
+        self.pop_lane(lane)
+    }
+
+    /// Serve only from priority lanes (`None` when none are backlogged)
+    /// — the mid-run dispatch a preempted worker uses.
+    pub fn pop_priority(&mut self) -> Option<PendingJob> {
+        let lane = self.best_lane(true)?;
+        self.pop_lane(lane)
+    }
+
+    /// True while any priority lane has pending jobs — the signal a
+    /// running normal job polls at its phase boundaries.
+    pub fn preempt_requested(&self) -> bool {
+        self.lanes.iter().any(|l| l.priority && !l.queue.is_empty())
+    }
+
+    /// Per-lane `(tenant, rejects)` admission-reject counters, in
+    /// registration order.
+    pub fn admission_rejects(&self) -> Vec<(String, u64)> {
+        self.lanes.iter().map(|l| (l.name.clone(), l.rejects)).collect()
     }
 
     /// Jobs queued and not yet popped.
@@ -154,7 +237,8 @@ impl IngestQueue {
     }
 
     /// Admit one job (its `tenant` must be registered). Fails after
-    /// [`close`](IngestQueue::close).
+    /// [`close`](IngestQueue::close), and when the tenant's SLO
+    /// admission control predicts the backlog already busts its target.
     pub fn submit(&self, job: ServeJob) -> Result<u64> {
         let mut st = self.state.lock().expect("ingest queue poisoned");
         if st.closed {
@@ -164,10 +248,35 @@ impl IngestQueue {
             .sched
             .lane_index(&job.tenant)
             .ok_or_else(|| fail!("job `{}`: unregistered tenant `{}`", job.label(), job.tenant))?;
-        let id = st.sched.push(lane, job);
+        let id = st.sched.admit(lane, job)?;
         drop(st);
         self.available.notify_one();
         Ok(id)
+    }
+
+    /// Non-blocking pop from priority lanes only — what a preempted
+    /// worker drains at a phase boundary.
+    pub fn take_priority(&self) -> Option<PendingJob> {
+        self.state.lock().expect("ingest queue poisoned").sched.pop_priority()
+    }
+
+    /// True while any priority lane is backlogged.
+    pub fn preempt_requested(&self) -> bool {
+        self.state.lock().expect("ingest queue poisoned").sched.preempt_requested()
+    }
+
+    /// Feed a completed job's run span into its tenant's admission
+    /// predictor (unknown tenants are ignored).
+    pub fn note_completion(&self, tenant: &str, run_ms: f64) {
+        let mut st = self.state.lock().expect("ingest queue poisoned");
+        if let Some(lane) = st.sched.lane_index(tenant) {
+            st.sched.note_completion(lane, run_ms);
+        }
+    }
+
+    /// Snapshot of the per-lane admission-reject counters.
+    pub fn admission_rejects(&self) -> Vec<(String, u64)> {
+        self.state.lock().expect("ingest queue poisoned").sched.admission_rejects()
     }
 
     /// Stop admissions and wake every blocked worker; queued jobs still
@@ -327,6 +436,66 @@ mod tests {
         assert!(q.take().is_some(), "backlog drains after close");
         assert!(q.take().is_none(), "then signals shutdown");
         assert_eq!(q.submitted(), 2);
+    }
+
+    #[test]
+    fn priority_lane_jumps_the_wfq_order() {
+        let mut s = QosScheduler::new(
+            &TenantSet::from_spec("slow:weight=4,fast:priority=1").unwrap(),
+        );
+        for _ in 0..4 {
+            s.push(0, job("g", "slow"));
+        }
+        assert!(!s.preempt_requested(), "no priority backlog yet");
+        assert!(s.pop_priority().is_none());
+        s.push(1, job("g", "fast"));
+        assert!(s.preempt_requested());
+        // despite slow's 4× weight and earlier arrivals, fast goes first
+        assert_eq!(s.pop().unwrap().job.tenant, "fast");
+        assert!(!s.preempt_requested());
+        assert_eq!(s.pop().unwrap().job.tenant, "slow");
+        // pop_priority drains only priority lanes
+        s.push(1, job("g", "fast"));
+        assert_eq!(s.pop_priority().unwrap().job.tenant, "fast");
+        assert!(s.pop_priority().is_none(), "normal backlog is not its business");
+        assert_eq!(s.pending(), 3);
+    }
+
+    #[test]
+    fn slo_admission_rejects_predicted_busts() {
+        let mut s = QosScheduler::new(&TenantSet::from_spec("t:slo=100,free").unwrap());
+        // No observations yet: admits freely regardless of backlog.
+        for _ in 0..5 {
+            s.admit(0, job("g", "t")).unwrap();
+        }
+        // Observed mean run 30ms → a 5-deep backlog predicts 180ms > 100ms.
+        s.note_completion(0, 30.0);
+        let err = s.admit(0, job("g", "t")).unwrap_err().to_string();
+        assert!(err.contains("slo=100"), "{err}");
+        assert_eq!(s.admission_rejects(), vec![("t".into(), 1), ("free".into(), 0)]);
+        // Drain the lane: with an empty queue, 1 × 30ms fits again.
+        while s.pop().is_some() {}
+        s.admit(0, job("g", "t")).unwrap();
+        // Lanes without an SLO never reject.
+        s.note_completion(1, 1e9);
+        s.admit(1, job("g", "free")).unwrap();
+        assert_eq!(s.admission_rejects()[1].1, 0);
+    }
+
+    #[test]
+    fn ingest_queue_surfaces_priority_and_rejects() {
+        let q = IngestQueue::new(&TenantSet::from_spec("norm,hot:priority=1:slo=50").unwrap());
+        q.submit(job("g", "norm")).unwrap();
+        assert!(!q.preempt_requested());
+        q.submit(job("g", "hot")).unwrap();
+        assert!(q.preempt_requested());
+        assert_eq!(q.take_priority().unwrap().job.tenant, "hot");
+        assert!(q.take_priority().is_none());
+        // mean run 60ms > slo 50ms: even an empty lane now rejects
+        q.note_completion("hot", 60.0);
+        assert!(q.submit(job("g", "hot")).is_err());
+        assert_eq!(q.admission_rejects()[1], ("hot".into(), 1));
+        q.close();
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Shared-device execution: one [`DramModel`] per configuration shape,
+//! tenant-tagged request streams, one FR-FCFS front per channel.
+//!
+//! The private-model QoS path gives every job its own `DramModel`, so
+//! channel partitioning is audited structurally but never *stressed* —
+//! tenants contend for workers, not for each other's banks. A
+//! [`SharedDevice`] closes that gap: concurrently running jobs feed
+//! their DRAM request streams (captured by
+//! [`DramModel::enable_request_log`]) into one device, every request
+//! tagged with its tenant id, and the streams contend for real row
+//! buffers, banks, and refresh windows. Per-tenant ACT attribution
+//! lands in [`DramCounters::tenant_activations`]
+//! (`crate::dram::DramCounters`), the tenant-side twin of the
+//! per-channel split.
+//!
+//! Isolation is still by construction: a tenant confined to a
+//! [`ChannelSet`] addresses its own (smaller) space, and its subset
+//! mapping places those bytes only on the subset's *physical* channels
+//! of the shared device. Two tenants on disjoint subsets therefore
+//! share refresh cadence and nothing else; two tenants on overlapping
+//! (or full) sets genuinely fight over row buffers — the interference
+//! the partitioned-vs-shared bench measures.
+//!
+//! Scheduling discipline is *shared code* with the private path: the
+//! per-channel fronts use [`first_ready_pick`] / [`same_key_run`] from
+//! `sim::frfcfs` and drain through the same streak service, so a single
+//! tenant on the full channel set is bit-identical to the private
+//! `FrFcfs` + `DramModel` pipeline (pinned in `tests/golden_parity.rs`
+//! across all eight DRAM standards).
+
+use crate::dram::{key, AddressMapping, ChannelSet, DramConfig, DramCounters, DramModel, DramReq};
+use crate::sim::frfcfs::{first_ready_pick, same_key_run, DEFAULT_DEPTH};
+
+/// One queued read burst on a shared-device channel front.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    addr: u64,
+    row_key: u64,
+    tenant: u32,
+}
+
+/// One DRAM device shared by several tenants' request streams.
+pub struct SharedDevice {
+    dram: DramModel,
+    /// Tenant index → that tenant's effective address mapping (subset
+    /// mappings decode to the subset's physical channels).
+    maps: Vec<AddressMapping>,
+    /// One FR-FCFS front per physical channel.
+    queues: Vec<Vec<Slot>>,
+    depth: usize,
+}
+
+impl SharedDevice {
+    /// Build a device of `cfg`'s shape shared by `tenants.len()`
+    /// tenants; `tenants[t]` is tenant `t`'s channel confinement
+    /// (`None` or the full set = the whole device).
+    pub fn new(cfg: DramConfig, tenants: &[Option<ChannelSet>]) -> SharedDevice {
+        assert!(!tenants.is_empty(), "a shared device needs at least one tenant");
+        let mut dram = DramModel::new(cfg);
+        dram.enable_tenant_tracking(tenants.len());
+        let maps = tenants
+            .iter()
+            .map(|set| match set {
+                Some(s) if !s.is_full_for(cfg.channels) => {
+                    AddressMapping::with_channels(&cfg, s)
+                }
+                _ => AddressMapping::new(&cfg),
+            })
+            .collect();
+        SharedDevice {
+            dram,
+            maps,
+            queues: vec![Vec::with_capacity(DEFAULT_DEPTH + 1); cfg.channels],
+            depth: DEFAULT_DEPTH,
+        }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.maps.len()
+    }
+
+    /// Tenant `t`'s effective mapping on this device.
+    pub fn mapping(&self, tenant: usize) -> &AddressMapping {
+        &self.maps[tenant]
+    }
+
+    /// The shared device's counters (per-channel *and* per-tenant
+    /// activation splits both sized).
+    pub fn counters(&self) -> &DramCounters {
+        &self.dram.counters
+    }
+
+    /// Cycle by which every channel has drained.
+    pub fn busy_until(&self) -> u64 {
+        self.dram.busy_until()
+    }
+
+    /// Reads still queued in the channel fronts.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(Vec::len).sum()
+    }
+
+    /// Enqueue one request from `tenant`, decoded through the tenant's
+    /// own mapping. Reads flow through the per-channel FR-FCFS fronts
+    /// (an issue event fires when a front exceeds its depth); writes
+    /// are serviced immediately — the engine's write paths bypass the
+    /// scheduler the same way on the private path.
+    pub fn ingest(&mut self, tenant: usize, req: DramReq) {
+        debug_assert!(tenant < self.maps.len());
+        let m = self.maps[tenant];
+        let addr = m.burst_align(req.addr);
+        let len = req.bursts * m.burst_bytes();
+        if req.write {
+            self.dram.set_tenant(tenant);
+            for run in m.runs_for_range(addr, len) {
+                self.dram.write_run_with(&m, run.start, run.bursts, 0);
+            }
+            return;
+        }
+        for run in m.runs_for_range(addr, len) {
+            for (a, k) in m.run_bursts(run) {
+                let ch = key::channel(k) as usize;
+                self.queues[ch].push(Slot { addr: a, row_key: k, tenant: tenant as u32 });
+                if self.queues[ch].len() > self.depth {
+                    self.issue_run(ch);
+                }
+            }
+        }
+    }
+
+    /// Feed a whole captured stream chunk.
+    pub fn ingest_all(&mut self, tenant: usize, reqs: &[DramReq]) {
+        for &r in reqs {
+            self.ingest(tenant, r);
+        }
+    }
+
+    /// One issue event: the FR-FCFS first-ready pick, then the whole
+    /// contiguous same-row-key run — the same discipline (same code)
+    /// as the private path's `FrFcfs::issue_run`. The run's ACTs are
+    /// attributed to the tenant whose burst heads the run: that tenant
+    /// opened the row, everyone else in the run rides its row hits.
+    fn issue_run(&mut self, ch: usize) {
+        let (pick, run, head) = {
+            let q = &self.queues[ch];
+            debug_assert!(!q.is_empty());
+            let pick = first_ready_pick(&self.dram, ch, q.iter().map(|s| s.row_key));
+            let run = same_key_run(q[pick].row_key, q[pick..].iter().map(|s| s.row_key));
+            (pick, run, q[pick])
+        };
+        let m = self.maps[head.tenant as usize];
+        self.dram.set_tenant(head.tenant as usize);
+        self.dram.read_streak_with(&m, head.addr, run as u64, 0, &mut |_| {});
+        self.queues[ch].drain(pick..pick + run);
+    }
+
+    /// Drain every channel front (end of a serving session).
+    pub fn flush(&mut self) {
+        for ch in 0..self.queues.len() {
+            while !self.queues[ch].is_empty() {
+                self.issue_run(ch);
+            }
+        }
+        self.dram.flush_sessions();
+    }
+
+    /// Interference snapshot for reports (call after [`flush`](Self::flush)).
+    pub fn report(&self) -> DeviceReport {
+        let c = &self.dram.counters;
+        DeviceReport {
+            standard: self.dram.config().kind.name().to_string(),
+            channels: self.dram.config().channels,
+            reads: c.reads,
+            writes: c.writes,
+            activations: c.activations,
+            row_hits: c.row_hits,
+            row_conflicts: c.row_conflicts,
+            refreshes: c.refreshes,
+            energy_pj: c.energy_pj,
+            busy_until: self.dram.busy_until(),
+            channel_activations: c.channel_activations.clone(),
+            tenant_activations: c.tenant_activations.clone(),
+        }
+    }
+}
+
+/// Counter snapshot of one shared device — what `serve --qos
+/// --shared-device --json` emits as the `shared_device` object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceReport {
+    pub standard: String,
+    pub channels: usize,
+    pub reads: u64,
+    pub writes: u64,
+    pub activations: u64,
+    pub row_hits: u64,
+    pub row_conflicts: u64,
+    pub refreshes: u64,
+    pub energy_pj: f64,
+    pub busy_until: u64,
+    pub channel_activations: Vec<u64>,
+    pub tenant_activations: Vec<u64>,
+}
+
+impl DeviceReport {
+    /// Row-buffer hit rate over the device's serviced bursts.
+    pub fn row_hit_rate(&self) -> f64 {
+        let b = self.reads + self.writes;
+        if b == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / b as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramStandardKind;
+
+    fn hbm() -> DramConfig {
+        DramStandardKind::Hbm.config()
+    }
+
+    fn read(addr: u64, bursts: u64) -> DramReq {
+        DramReq { addr, bursts, write: false }
+    }
+
+    #[test]
+    fn single_tenant_full_set_matches_private_frfcfs() {
+        use crate::lignn::Burst;
+        use crate::sim::frfcfs::FrFcfs;
+        // The same burst stream through (a) the shared device with one
+        // full-set tenant and (b) the private FrFcfs + DramModel path.
+        let mut shared = SharedDevice::new(hbm(), &[None]);
+        let mut private = DramModel::new(hbm());
+        let mut front = FrFcfs::new(hbm().channels, DEFAULT_DEPTH);
+        let mut rng = 7u64;
+        for i in 0..4_000u64 {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+            // mixed locality: streaks with occasional row jumps
+            let addr = if i % 7 == 0 { rng % (1 << 26) & !31 } else { (i * 32) % (1 << 22) };
+            shared.ingest(0, read(addr, 1));
+            let b = Burst {
+                addr,
+                row_key: private.mapping().row_key(addr),
+                src: 0,
+                seq: 0,
+                effective: 8,
+            };
+            front.push(b, &mut private, &mut |_, _| {});
+        }
+        shared.flush();
+        front.flush(&mut private, &mut |_, _| {});
+        private.flush_sessions();
+        assert_eq!(shared.busy_until(), private.busy_until());
+        let (s, p) = (shared.counters(), &private.counters);
+        assert_eq!((s.reads, s.activations, s.row_hits), (p.reads, p.activations, p.row_hits));
+        assert_eq!(s.session_hist, p.session_hist);
+        assert!(s.energy_pj == p.energy_pj, "energy must be bit-exact");
+        assert_eq!(s.tenant_activations, vec![s.activations], "one tenant owns every ACT");
+    }
+
+    #[test]
+    fn disjoint_tenants_stay_in_their_channels() {
+        let a = ChannelSet::parse("0-3").unwrap();
+        let b = ChannelSet::parse("4-7").unwrap();
+        let mut dev = SharedDevice::new(hbm(), &[Some(a.clone()), Some(b.clone())]);
+        for i in 0..512u64 {
+            dev.ingest((i % 2) as usize, read((i / 2) * 32, 1));
+        }
+        dev.flush();
+        let c = dev.counters();
+        assert!(c.activations > 0);
+        assert_eq!(c.tenant_activations.iter().sum::<u64>(), c.activations);
+        for (ch, &acts) in c.channel_activations.iter().enumerate() {
+            let member = a.contains(ch as u32) || b.contains(ch as u32);
+            assert!(member || acts == 0, "activation escaped to channel {ch}");
+        }
+    }
+
+    #[test]
+    fn writes_bypass_the_fronts() {
+        let mut dev = SharedDevice::new(hbm(), &[None]);
+        dev.ingest(0, DramReq { addr: 0, bursts: 16, write: true });
+        assert_eq!(dev.pending(), 0, "writes are serviced immediately");
+        assert_eq!(dev.counters().writes, 16);
+        dev.ingest(0, read(0, 4));
+        assert_eq!(dev.pending(), 4, "reads queue until the depth trigger");
+    }
+}

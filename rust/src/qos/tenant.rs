@@ -15,14 +15,25 @@ pub struct TenantSpec {
     /// means the full device (no partition).
     pub channels: Option<ChannelSet>,
     /// Serving-latency objective in wall-clock milliseconds
-    /// (submit → completion). Purely observational: reports carry the
-    /// attainment fraction, the scheduler does not act on it.
+    /// (submit → *final* completion). Reports carry the attainment
+    /// fraction; when SLO admission control is enabled the ingest
+    /// queue also rejects submissions whose predicted wait already
+    /// busts the target.
     pub slo_ms: Option<f64>,
+    /// Preemptive priority lane: this tenant's pending jobs are always
+    /// dispatched before any normal lane's, and may interrupt a
+    /// running normal job at its next `SimEngine` phase boundary.
+    pub priority: bool,
 }
 
 impl TenantSpec {
     pub fn new(name: impl Into<String>) -> TenantSpec {
-        TenantSpec { name: name.into(), weight: 1.0, channels: None, slo_ms: None }
+        TenantSpec { name: name.into(), weight: 1.0, channels: None, slo_ms: None, priority: false }
+    }
+
+    pub fn with_priority(mut self) -> TenantSpec {
+        self.priority = true;
+        self
     }
 
     pub fn with_weight(mut self, weight: f64) -> TenantSpec {
@@ -40,7 +51,8 @@ impl TenantSpec {
         self
     }
 
-    /// Parse one tenant item: `name[:weight=W][:channels=SPEC][:slo=MS]`
+    /// Parse one tenant item:
+    /// `name[:weight=W][:channels=SPEC][:slo=MS][:priority=0|1]`
     /// — e.g. `a:weight=2:channels=0-1` (channel specs use `+` for
     /// unions so they can ride inside comma-separated tenant lists).
     pub fn parse(item: &str) -> Result<TenantSpec> {
@@ -72,9 +84,17 @@ impl TenantSpec {
                         val.parse::<f64>().map_err(|e| fail!("`{item}`: slo={val}: {e}"))?,
                     );
                 }
+                "priority" | "prio" => {
+                    spec.priority = match val.trim() {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        bad => return Err(fail!("`{item}`: priority={bad} (want 0|1)")),
+                    };
+                }
                 other => {
                     return Err(fail!(
-                        "unknown tenant key `{other}` in `{item}` (want weight=|channels=|slo=)"
+                        "unknown tenant key `{other}` in `{item}` \
+                         (want weight=|channels=|slo=|priority=)"
                     ))
                 }
             }
@@ -166,15 +186,18 @@ mod tests {
 
     #[test]
     fn parse_full_item() {
-        let t = TenantSpec::parse("a:weight=2:channels=0-1:slo=50").unwrap();
+        let t = TenantSpec::parse("a:weight=2:channels=0-1:slo=50:priority=1").unwrap();
         assert_eq!(t.name, "a");
         assert_eq!(t.weight, 2.0);
         assert_eq!(t.channels.unwrap().label(), "0-1");
         assert_eq!(t.slo_ms, Some(50.0));
+        assert!(t.priority);
         // bare name → defaults
         let t = TenantSpec::parse("bob").unwrap();
         assert_eq!(t.weight, 1.0);
         assert!(t.channels.is_none() && t.slo_ms.is_none());
+        assert!(!t.priority);
+        assert!(!TenantSpec::parse("c:priority=0").unwrap().priority);
     }
 
     #[test]
@@ -188,6 +211,7 @@ mod tests {
             "a:slo=0",
             "a:channels=9x",
             "a:shares=2",
+            "a:priority=maybe",
             "a:weight",
             "weight=2",
         ] {

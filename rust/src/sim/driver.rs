@@ -28,11 +28,11 @@ use crate::accel::{EngineParams, Interleaver};
 use crate::cache::LruCache;
 use crate::config::SimConfig;
 use crate::dram::energy::EnergyReport;
-use crate::dram::DramModel;
+use crate::dram::{DramModel, DramReq};
 use crate::graph::CsrGraph;
 use crate::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger, UnitStats};
 use crate::sample::Sampler;
-use crate::telemetry::{DramSnapshot, Recorder, SpanEvent, SpanKind};
+use crate::telemetry::{DramDelta, DramSnapshot, Recorder, SpanEvent, SpanKind};
 
 use super::frfcfs::{FrFcfs, DEFAULT_DEPTH};
 use super::metrics::Metrics;
@@ -64,6 +64,40 @@ pub enum Phase {
     /// §4.3's dropout-mask write-back (1 bit per element, sequential).
     MaskWriteBack,
 }
+
+/// The schedule step a [`PhaseCursor`] points at — what the engine
+/// would execute *next* if the boundary's hook declines to preempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NextStep {
+    Sample,
+    Forward,
+    Backward,
+    WriteBack,
+    MaskWriteBack,
+    /// Trailing boundary fired once after `finish` (final request-log
+    /// chunk only; a `true` return here has nothing left to preempt).
+    Finish,
+}
+
+/// Checkpoint of the canonical schedule's position, handed to the
+/// phase-boundary hook. The engine's own state (double-buffer cursor,
+/// FR-FCFS window, caches, units) stays live on the worker's stack
+/// while the hook runs — a preempting job executes *nested*, so resume
+/// is a return and metrics are conserved by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseCursor {
+    pub epoch: u32,
+    pub layer: usize,
+    pub next: NextStep,
+}
+
+/// Phase-boundary hook: receives the schedule cursor plus the DRAM
+/// request-log chunk accumulated since the previous boundary (empty
+/// unless [`SimEngine::enable_request_log`] was called — QoS shared
+/// mode feeds these chunks into the shared device). Return `true` iff
+/// the boundary actually preempted (ran other work before returning);
+/// the engine then records a zero-width `preempt` span marker.
+pub type PhaseHook<'h> = dyn FnMut(PhaseCursor, Vec<DramReq>) -> bool + 'h;
 
 /// Decorrelates the per-layer dropout streams without touching the
 /// layer-0 stream (which must stay at `cfg.seed` for reproducibility).
@@ -171,6 +205,9 @@ pub struct SimEngine<'a> {
     open_span: Option<OpenSpan>,
     /// Epoch stamp applied to spans opened from here on.
     epoch: u32,
+    /// Tenant stamp applied to every recorded span (0 outside QoS
+    /// shared mode).
+    span_tenant: u32,
 }
 
 impl<'a> SimEngine<'a> {
@@ -212,6 +249,7 @@ impl<'a> SimEngine<'a> {
             rec: None,
             open_span: None,
             epoch: 0,
+            span_tenant: 0,
         }
     }
 
@@ -229,6 +267,42 @@ impl<'a> SimEngine<'a> {
     /// schedules call this at each epoch top).
     pub fn set_epoch(&mut self, epoch: u32) {
         self.epoch = epoch;
+    }
+
+    /// Stamp every span this engine records with `tenant` — per-tenant
+    /// span attribution for QoS shared-device runs.
+    pub fn set_span_tenant(&mut self, tenant: u32) {
+        self.span_tenant = tenant;
+    }
+
+    /// Start capturing this run's DRAM requests ([`DramReq`]) so phase
+    /// boundaries can hand them to the hook in chunks (QoS shared mode
+    /// replays them against the shared device).
+    pub fn enable_request_log(&mut self) {
+        self.dram.enable_request_log();
+    }
+
+    /// Drain the captured request chunk (empty when logging is off).
+    pub fn take_request_log(&mut self) -> Vec<DramReq> {
+        self.dram.take_request_log()
+    }
+
+    /// Record that the engine was parked at this boundary by the QoS
+    /// preemption path: a zero-width `preempt` marker span with an
+    /// empty delta — visible in traces, invisible to every counter, so
+    /// preempted runs telescope to the same totals as uninterrupted
+    /// ones.
+    pub fn note_preempt(&mut self) {
+        let Some(rec) = self.rec.as_deref_mut() else { return };
+        let cycle = self.dram.busy_until();
+        rec.record_span(SpanEvent {
+            kind: SpanKind::Preempt,
+            epoch: self.epoch,
+            tenant: self.span_tenant,
+            start_cycle: cycle,
+            end_cycle: cycle,
+            dram: DramDelta::default(),
+        });
     }
 
     /// Mark the start of per-epoch sampling (subgraph construction).
@@ -253,6 +327,7 @@ impl<'a> SimEngine<'a> {
             rec.record_span(SpanEvent {
                 kind: open.kind,
                 epoch: open.epoch,
+                tenant: self.span_tenant,
                 start_cycle: open.start_cycle,
                 end_cycle: cycle,
                 dram: snap.delta_since(&open.start),
@@ -271,6 +346,7 @@ impl<'a> SimEngine<'a> {
             rec.record_span(SpanEvent {
                 kind: open.kind,
                 epoch: open.epoch,
+                tenant: self.span_tenant,
                 start_cycle: open.start_cycle,
                 end_cycle: cycle,
                 dram: snap.delta_since(&open.start),
@@ -653,15 +729,32 @@ impl<'a> SimEngine<'a> {
     }
 }
 
+/// One schedule boundary: hand the hook the cursor plus the request
+/// chunk accumulated since the previous boundary; a `true` return means
+/// the hook actually parked the engine (ran other work nested), so a
+/// `preempt` marker is recorded.
+fn boundary(
+    engine: &mut SimEngine<'_>,
+    hook: &mut PhaseHook<'_>,
+    epoch: usize,
+    layer: usize,
+    next: NextStep,
+) {
+    let chunk = engine.take_request_log();
+    if hook(PhaseCursor { epoch: epoch as u32, layer, next }, chunk) {
+        engine.note_preempt();
+    }
+}
+
 /// Drive `engine` through the canonical schedule its config implies:
 /// `epochs × (sample + layers forward + [backward after the last layer]
-/// + write-backs)`.
-fn run_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metrics {
+/// + write-backs)`, consulting `hook` at every phase boundary.
+fn run_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph, hook: &mut PhaseHook<'_>) -> Metrics {
     if engine.cfg.layerwise_sampling() {
-        return run_layerwise_schedule(engine, graph);
+        return run_layerwise_schedule(engine, graph, hook);
     }
     let sampler = engine.cfg.build_sampler();
-    run_schedule_with(engine, graph, sampler.as_ref())
+    run_schedule_with(engine, graph, sampler.as_ref(), hook)
 }
 
 /// Layer-wise fanouts (`--fanout 10,5`): every layer samples its *own*
@@ -669,22 +762,31 @@ fn run_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metrics {
 /// phase follows the last hop's subset (the gradient stream of the
 /// deepest aggregation). The single-value form never reaches this path
 /// — it keeps the one-subgraph-per-epoch schedule bit-for-bit.
-fn run_layerwise_schedule(engine: &mut SimEngine<'_>, graph: &CsrGraph) -> Metrics {
+fn run_layerwise_schedule(
+    engine: &mut SimEngine<'_>,
+    graph: &CsrGraph,
+    hook: &mut PhaseHook<'_>,
+) -> Metrics {
     let cfg = engine.cfg;
     let samplers: Vec<Box<dyn Sampler>> =
         (0..cfg.layers).map(|l| cfg.build_sampler_for_layer(l)).collect();
     for epoch in 0..cfg.epochs {
         engine.set_epoch(epoch as u32);
         for (layer, sampler) in samplers.iter().enumerate() {
+            boundary(engine, hook, epoch, layer, NextStep::Sample);
             engine.note_sample();
             let sub = sampler.sample(graph, epoch as u64);
             let g = sub.graph();
+            boundary(engine, hook, epoch, layer, NextStep::Forward);
             engine.push_phase(Phase::Forward { layer }, g);
             if layer + 1 == cfg.layers && cfg.backward {
+                boundary(engine, hook, epoch, layer, NextStep::Backward);
                 engine.push_phase(Phase::Backward, g);
             }
             engine.drain();
+            boundary(engine, hook, epoch, layer, NextStep::WriteBack);
             engine.push_phase(Phase::WriteBack, g);
+            boundary(engine, hook, epoch, layer, NextStep::MaskWriteBack);
             engine.push_phase(Phase::MaskWriteBack, g);
         }
     }
@@ -700,20 +802,26 @@ fn run_schedule_with(
     engine: &mut SimEngine<'_>,
     graph: &CsrGraph,
     sampler: &dyn Sampler,
+    hook: &mut PhaseHook<'_>,
 ) -> Metrics {
     let cfg = engine.cfg;
     for epoch in 0..cfg.epochs {
         engine.set_epoch(epoch as u32);
+        boundary(engine, hook, epoch, 0, NextStep::Sample);
         engine.note_sample();
         let sub = sampler.sample(graph, epoch as u64);
         let g = sub.graph();
         for layer in 0..cfg.layers {
+            boundary(engine, hook, epoch, layer, NextStep::Forward);
             engine.push_phase(Phase::Forward { layer }, g);
             if layer + 1 == cfg.layers && cfg.backward {
+                boundary(engine, hook, epoch, layer, NextStep::Backward);
                 engine.push_phase(Phase::Backward, g);
             }
             engine.drain();
+            boundary(engine, hook, epoch, layer, NextStep::WriteBack);
             engine.push_phase(Phase::WriteBack, g);
+            boundary(engine, hook, epoch, layer, NextStep::MaskWriteBack);
             engine.push_phase(Phase::MaskWriteBack, g);
         }
     }
@@ -725,7 +833,7 @@ fn run_schedule_with(
 /// pre-engine driver for single-layer, single-epoch, full-batch configs.
 pub fn run_sim(cfg: &SimConfig, graph: &CsrGraph) -> Metrics {
     let mut engine = SimEngine::new(cfg);
-    run_schedule(&mut engine, graph)
+    run_schedule(&mut engine, graph, &mut |_, _| false)
 }
 
 /// [`run_sim`] with an explicit sampling policy overriding
@@ -734,7 +842,7 @@ pub fn run_sim(cfg: &SimConfig, graph: &CsrGraph) -> Metrics {
 pub fn run_sampled_sim(cfg: &SimConfig, graph: &CsrGraph, sampler: &dyn Sampler) -> Metrics {
     let mut engine = SimEngine::new(cfg);
     engine.set_sampler_label(sampler.name());
-    run_schedule_with(&mut engine, graph, sampler)
+    run_schedule_with(&mut engine, graph, sampler, &mut |_, _| false)
 }
 
 /// [`run_sim`] with a caller-owned burst buffer recycled across runs —
@@ -745,7 +853,7 @@ pub fn run_sampled_sim(cfg: &SimConfig, graph: &CsrGraph, sampler: &dyn Sampler)
 pub fn run_sim_with_buffer(cfg: &SimConfig, graph: &CsrGraph, buf: &mut Vec<Burst>) -> Metrics {
     let mut engine = SimEngine::new(cfg);
     engine.recycle_buffer(buf);
-    let m = run_schedule(&mut engine, graph);
+    let m = run_schedule(&mut engine, graph, &mut |_, _| false);
     engine.reclaim_buffer(buf);
     m
 }
@@ -759,7 +867,7 @@ pub fn run_sim_with_buffer(cfg: &SimConfig, graph: &CsrGraph, buf: &mut Vec<Burs
 pub fn run_sim_recorded(cfg: &SimConfig, graph: &CsrGraph, rec: &mut dyn Recorder) -> Metrics {
     let mut engine = SimEngine::new(cfg);
     engine.set_recorder(rec);
-    run_schedule(&mut engine, graph)
+    run_schedule(&mut engine, graph, &mut |_, _| false)
 }
 
 /// [`run_sim_recorded`] with a caller-owned recycled burst buffer — the
@@ -774,7 +882,43 @@ pub fn run_sim_recorded_with_buffer(
     let mut engine = SimEngine::new(cfg);
     engine.recycle_buffer(buf);
     engine.set_recorder(rec);
-    let m = run_schedule(&mut engine, graph);
+    let m = run_schedule(&mut engine, graph, &mut |_, _| false);
+    engine.reclaim_buffer(buf);
+    m
+}
+
+/// The QoS workers' preemptible entry point: the canonical schedule
+/// with `hook` consulted at every phase boundary. `tenant` stamps every
+/// recorded span; `log_requests` turns on DRAM request capture so each
+/// boundary's chunk reaches the hook (shared-device replay). A trailing
+/// `NextStep::Finish` boundary fires after `finish` with the final
+/// chunk (its preempt return is ignored — nothing is left to park).
+///
+/// Preemption model: the hook runs *nested* on this thread while the
+/// engine sits untouched on the stack, so resuming is simply
+/// returning. `tests` pin that a run preempted at every boundary in
+/// turn produces bit-identical metrics to the uninterrupted run.
+pub fn run_sim_preemptible_with_buffer(
+    cfg: &SimConfig,
+    graph: &CsrGraph,
+    buf: &mut Vec<Burst>,
+    rec: &mut dyn Recorder,
+    tenant: u32,
+    log_requests: bool,
+    hook: &mut PhaseHook<'_>,
+) -> Metrics {
+    let mut engine = SimEngine::new(cfg);
+    engine.recycle_buffer(buf);
+    engine.set_recorder(rec);
+    engine.set_span_tenant(tenant);
+    if log_requests {
+        engine.enable_request_log();
+    }
+    let m = run_schedule(&mut engine, graph, hook);
+    let tail = engine.take_request_log();
+    let cursor =
+        PhaseCursor { epoch: cfg.epochs as u32, layer: 0, next: NextStep::Finish };
+    let _ = hook(cursor, tail);
     engine.reclaim_buffer(buf);
     m
 }
@@ -1328,6 +1472,88 @@ mod tests {
         assert_eq!(rec.totals().reads, m.dram.reads);
         assert_eq!(rec.totals().writes, m.dram.writes);
         assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn preemption_at_every_boundary_conserves_metrics_exactly() {
+        // Satellite property: park the engine at each schedule boundary
+        // in turn, run a *different* simulation while parked, resume —
+        // the final metrics must be bit-identical to the uninterrupted
+        // run, and exactly one zero-width preempt marker must appear.
+        use crate::telemetry::{SpanKind, TraceRecorder};
+        let mut c = cfg_meaningful(Variant::T, 0.5);
+        c.epochs = 2;
+        c.backward = true;
+        let g = c.build_graph();
+        let nested_cfg = cfg(Variant::S, 0.3);
+        let ng = nested_cfg.build_graph();
+
+        // Baseline: the preemptible entry with a hook that always
+        // declines (and counts the preemptible boundaries).
+        let mut buf = Vec::new();
+        let mut rec = TraceRecorder::new();
+        let mut boundaries = 0usize;
+        let base = run_sim_preemptible_with_buffer(
+            &c,
+            &g,
+            &mut buf,
+            &mut rec,
+            0,
+            true,
+            &mut |cur, _chunk| {
+                if !matches!(cur.next, NextStep::Finish) {
+                    boundaries += 1;
+                }
+                false
+            },
+        );
+        assert_eq!(boundaries, 10, "2 epochs x {{sample,fwd,bwd,wb,mask-wb}}");
+        let base_spans = rec.spans().count();
+
+        for k in 0..boundaries {
+            let mut seen = 0usize;
+            let mut rec = TraceRecorder::new();
+            let mut buf = Vec::new();
+            let mut logged = 0usize;
+            let m = run_sim_preemptible_with_buffer(
+                &c,
+                &g,
+                &mut buf,
+                &mut rec,
+                7,
+                true,
+                &mut |cur, chunk| {
+                    logged += chunk.len();
+                    if matches!(cur.next, NextStep::Finish) {
+                        return false;
+                    }
+                    let fire = seen == k;
+                    seen += 1;
+                    if fire {
+                        // a whole other simulation runs while this one
+                        // sits parked on the stack
+                        let _ = run_sim(&nested_cfg, &ng);
+                    }
+                    fire
+                },
+            );
+            assert_eq!(m.dram.reads, base.dram.reads, "k={k}");
+            assert_eq!(m.dram.writes, base.dram.writes, "k={k}");
+            assert_eq!(m.dram.activations, base.dram.activations, "k={k}");
+            assert_eq!(m.dram.row_hits, base.dram.row_hits, "k={k}");
+            assert_eq!(m.dram.energy_pj.to_bits(), base.dram.energy_pj.to_bits(), "k={k}");
+            assert_eq!(m.exec_ns.to_bits(), base.exec_ns.to_bits(), "k={k}");
+            assert!(logged > 0, "request log must flow through the hook");
+            let spans: Vec<_> = rec.spans().collect();
+            let marks: Vec<_> =
+                spans.iter().filter(|s| s.kind == SpanKind::Preempt).collect();
+            assert_eq!(marks.len(), 1, "k={k}: exactly one preempt marker");
+            assert_eq!(spans.len(), base_spans + 1, "k={k}");
+            let p = marks[0];
+            assert_eq!(p.start_cycle, p.end_cycle, "preempt markers are zero-width");
+            assert_eq!(p.tenant, 7, "marker carries the tenant tag");
+            assert_eq!(p.dram.reads + p.dram.writes + p.dram.activations, 0);
+        }
     }
 
     #[test]

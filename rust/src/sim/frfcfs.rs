@@ -25,6 +25,27 @@ use crate::lignn::Burst;
 /// Ramulator's default per-channel queue depth.
 pub const DEFAULT_DEPTH: usize = 32;
 
+/// First-ready pick over a channel queue's row keys: the index of the
+/// oldest entry whose row is currently open, else 0 (first-come).
+///
+/// This is *the* FR-FCFS pick discipline — shared with the QoS
+/// [`SharedDevice`](crate::qos::SharedDevice) fronts so the private and
+/// shared-device paths can never drift (the single-tenant golden-parity
+/// test pins them bit-identical).
+pub fn first_ready_pick(
+    dram: &DramModel,
+    ch: usize,
+    mut row_keys: impl Iterator<Item = u64>,
+) -> usize {
+    row_keys.position(|k| dram.row_key_open(ch, k)).unwrap_or(0)
+}
+
+/// Length of the maximal contiguous same-`run_key` run at the head of
+/// `row_keys` (which must start at the picked entry).
+pub fn same_key_run(run_key: u64, row_keys: impl Iterator<Item = u64>) -> usize {
+    row_keys.take_while(|&k| k == run_key).count()
+}
+
 pub struct FrFcfs {
     depth: usize,
     queues: Vec<Vec<Burst>>,
@@ -68,12 +89,9 @@ impl FrFcfs {
         debug_assert!(!q.is_empty());
         // first-ready: oldest burst whose row is open (O(1) key compare
         // per entry — no address decode in the scan)
-        let pick = q
-            .iter()
-            .position(|b| dram.row_key_open(ch, b.row_key))
-            .unwrap_or(0); // first-come otherwise
+        let pick = first_ready_pick(dram, ch, q.iter().map(|b| b.row_key));
         let run_key = q[pick].row_key;
-        let run = q[pick..].iter().take_while(|b| b.row_key == run_key).count();
+        let run = same_key_run(run_key, q[pick..].iter().map(|b| b.row_key));
         let addr = q[pick].addr;
         self.acts.clear();
         let acts = &mut self.acts;

@@ -32,18 +32,23 @@ pub struct QueueWaitStats {
     pub run_sum_ms: f64,
     /// Submit→start wait distribution (µs ticks).
     pub wait_hist: LogHist,
-    /// End-to-end (submit→completion, wait + run) distribution.
+    /// End-to-end (submit→*final* completion) distribution. Recorded
+    /// from an explicit measurement, not `wait + run`: a preempted job
+    /// parks between its segments, so its end-to-end latency exceeds
+    /// that sum — and the job still counts exactly once.
     pub e2e_hist: LogHist,
 }
 
 impl QueueWaitStats {
-    /// Aggregate `(wait_ms, run_ms)` pairs, one per served job. The
-    /// mean/max accumulation order matches the pre-histogram version
+    /// Aggregate `(wait_ms, run_ms, e2e_ms)` triples, one per served
+    /// job (`e2e_ms` is submit→final completion — for a preempted job
+    /// that spans every segment plus the parked gaps). The mean/max
+    /// accumulation order matches the pre-histogram version
     /// bit-for-bit.
-    pub fn collect(samples: impl Iterator<Item = (f64, f64)>) -> QueueWaitStats {
+    pub fn collect(samples: impl Iterator<Item = (f64, f64, f64)>) -> QueueWaitStats {
         let mut s = QueueWaitStats::default();
         let (mut wait_sum, mut run_sum) = (0.0f64, 0.0f64);
-        for (wait, run) in samples {
+        for (wait, run, e2e) in samples {
             s.jobs += 1;
             wait_sum += wait;
             run_sum += run;
@@ -51,7 +56,7 @@ impl QueueWaitStats {
                 s.max_wait_ms = wait;
             }
             s.wait_hist.record_ms(wait);
-            s.e2e_hist.record_ms(wait + run);
+            s.e2e_hist.record_ms(e2e);
         }
         if s.jobs > 0 {
             s.mean_wait_ms = wait_sum / s.jobs as f64;
@@ -373,7 +378,9 @@ mod tests {
 
     #[test]
     fn queue_wait_stats_aggregate() {
-        let s = QueueWaitStats::collect([(1.0, 10.0), (3.0, 20.0), (2.0, 30.0)].into_iter());
+        let s = QueueWaitStats::collect(
+            [(1.0, 10.0, 11.0), (3.0, 20.0, 23.0), (2.0, 30.0, 32.0)].into_iter(),
+        );
         assert_eq!(s.jobs, 3);
         assert!((s.mean_wait_ms - 2.0).abs() < 1e-12);
         assert!((s.max_wait_ms - 3.0).abs() < 1e-12);
@@ -384,9 +391,23 @@ mod tests {
     }
 
     #[test]
+    fn queue_wait_e2e_uses_explicit_final_completion() {
+        // A preempted job: wait 1ms, ran 10ms across its segments, but
+        // finished 50ms after submission (parked in between). The e2e
+        // histogram must see 50, not wait + run = 11.
+        let s = QueueWaitStats::collect([(1.0, 10.0, 50.0)].into_iter());
+        let p50 = s.e2e_percentile_ms(0.5).unwrap();
+        assert!(
+            (p50 - 50.0).abs() / 50.0 <= 0.125,
+            "e2e p50 {p50} must track final completion (50ms), not wait+run (11ms)"
+        );
+        assert_eq!(s.jobs, 1, "resumed segments count as one job");
+    }
+
+    #[test]
     fn queue_wait_merge_across_batches() {
-        let a_samples = [(1.0, 10.0), (3.0, 20.0)];
-        let b_samples = [(2.0, 30.0), (7.0, 5.0)];
+        let a_samples = [(1.0, 10.0, 11.0), (3.0, 20.0, 23.0)];
+        let b_samples = [(2.0, 30.0, 32.0), (7.0, 5.0, 12.0)];
         let mut a = QueueWaitStats::collect(a_samples.into_iter());
         let b = QueueWaitStats::collect(b_samples.into_iter());
         a.merge(&b);

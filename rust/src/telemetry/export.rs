@@ -77,6 +77,7 @@ pub fn chrome_trace(rec: &TraceRecorder, metrics: &Metrics, dram: &DramConfig) -
             us(s.end_cycle) - us(s.start_cycle),
             vec![
                 ("epoch", Json::num(s.epoch as f64)),
+                ("tenant", Json::num(s.tenant as f64)),
                 ("start_cycle", Json::num(s.start_cycle as f64)),
                 ("end_cycle", Json::num(s.end_cycle as f64)),
                 ("reads", Json::num(s.dram.reads as f64)),

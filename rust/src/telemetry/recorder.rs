@@ -31,6 +31,10 @@ pub enum SpanKind {
     WriteBack,
     /// Dropout-mask write-back.
     MaskWriteBack,
+    /// Zero-width marker: the engine was parked at a phase boundary by
+    /// the QoS preemption path and later resumed. Carries an empty
+    /// delta, so traces with preemptions still telescope to run totals.
+    Preempt,
 }
 
 impl SpanKind {
@@ -42,6 +46,7 @@ impl SpanKind {
             SpanKind::Backward => "backward".into(),
             SpanKind::WriteBack => "write_back".into(),
             SpanKind::MaskWriteBack => "mask_write_back".into(),
+            SpanKind::Preempt => "preempt".into(),
         }
     }
 }
@@ -143,6 +148,9 @@ impl DramDelta {
 pub struct SpanEvent {
     pub kind: SpanKind,
     pub epoch: u32,
+    /// Tenant index the span is attributed to (0 outside QoS shared
+    /// mode — the single-tenant default).
+    pub tenant: u32,
     /// DRAM busy-clock cycle at which the phase was opened.
     pub start_cycle: u64,
     /// DRAM busy-clock cycle at which the next phase took over.
@@ -317,6 +325,9 @@ impl Recorder for PhaseActs {
             SpanKind::Backward => self.backward += acts,
             SpanKind::WriteBack => self.write_back += acts,
             SpanKind::MaskWriteBack => self.mask_write_back += acts,
+            // Preempt markers are zero-width with empty deltas; nothing
+            // to attribute (debug-asserted so a non-empty one is loud).
+            SpanKind::Preempt => debug_assert_eq!(acts, 0),
         }
     }
 }
@@ -329,6 +340,7 @@ mod tests {
         SpanEvent {
             kind,
             epoch: 0,
+            tenant: 0,
             start_cycle: start,
             end_cycle: end,
             dram: DramDelta { activations: acts, reads: acts * 2, ..DramDelta::default() },
@@ -405,5 +417,15 @@ mod tests {
         assert_eq!(SpanKind::Forward { layer: 1 }.label(), "forward[L2]");
         assert_eq!(SpanKind::Sample.label(), "sample");
         assert_eq!(SpanKind::MaskWriteBack.label(), "mask_write_back");
+        assert_eq!(SpanKind::Preempt.label(), "preempt");
+    }
+
+    #[test]
+    fn preempt_markers_pass_through_phase_acts() {
+        let mut p = PhaseActs::default();
+        p.record_span(span(SpanKind::Forward { layer: 0 }, 0, 5, 3));
+        p.record_span(span(SpanKind::Preempt, 5, 5, 0));
+        p.record_span(span(SpanKind::Backward, 5, 9, 2));
+        assert_eq!(p.total(), 5, "zero-width markers add nothing");
     }
 }

@@ -696,6 +696,63 @@ fn run_aware_frfcfs_matches_per_burst_reference() {
 }
 
 #[test]
+fn shared_device_single_tenant_matches_private_path_for_all_standards() {
+    // Shared-device acceptance bar: one tenant on the full channel set,
+    // fed through `SharedDevice::ingest`, must be bit-identical to the
+    // private FrFcfs + DramModel pipeline — every DramCounters field
+    // (energy by bits), completion state, and `busy_until` — for every
+    // DRAM standard. The shared front reuses the private scheduler's
+    // pick/run code, so any drift here is a real discipline divergence.
+    use lignn::dram::DramReq;
+    use lignn::qos::SharedDevice;
+    use lignn::util::rng::Pcg64;
+
+    for kind in ALL_STANDARDS {
+        let cfg = kind.config();
+        let mut shared = SharedDevice::new(cfg, &[None]);
+        let mut private = DramModel::new(cfg);
+        let mut front = FrFcfs::new(cfg.channels, DEFAULT_DEPTH);
+        let mapping = *private.mapping();
+        let bb = mapping.burst_bytes();
+        let mut rng = Pcg64::new(0x5EED + kind as u64);
+        // Mixed workload: multi-burst streaks, single-burst strays, and
+        // interleaved writes (which bypass the fronts on both paths).
+        for i in 0..500u64 {
+            let base = mapping.burst_align(rng.next_u64() % (1 << 26));
+            let n = if i % 3 == 0 { 1 + rng.next_u64() % 16 } else { 1 };
+            let write = i % 5 == 0;
+            shared.ingest(0, DramReq { addr: base, bursts: n, write });
+            if write {
+                for run in mapping.runs_for_range(base, n * bb) {
+                    private.write_run(run.start, run.bursts, 0);
+                }
+            } else {
+                for run in mapping.runs_for_range(base, n * bb) {
+                    for (addr, row_key) in mapping.run_bursts(run) {
+                        front.push(
+                            Burst { addr, row_key, src: 0, seq: 0, effective: 8 },
+                            &mut private,
+                            &mut |_, _| {},
+                        );
+                    }
+                }
+            }
+        }
+        shared.flush();
+        front.flush(&mut private, &mut |_, _| {});
+        private.flush_sessions();
+        let label = format!("{kind:?} shared-device");
+        assert_eq!(shared.busy_until(), private.busy_until(), "{label}: busy_until");
+        assert_counters_identical(shared.counters(), &private.counters, &label);
+        assert_eq!(
+            shared.counters().tenant_activations,
+            vec![shared.counters().activations],
+            "{label}: the lone tenant owns every ACT"
+        );
+    }
+}
+
+#[test]
 fn telemetry_recorder_is_inert_and_spans_sum_to_totals() {
     // The tentpole's hard requirement: attaching a TraceRecorder (ring
     // + timeline) must not change a single bit of the simulation —

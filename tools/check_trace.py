@@ -9,6 +9,9 @@ Checks (all hard failures):
   - no spans were evicted from the recorder ring (dropped_spans == 0)
   - every phase span is contained in its epoch's container event
     (matched by args.epoch, not by position)
+  - preempt markers (QoS phase-boundary parks) are zero-width, carry
+    zero counter deltas, and nest in their epoch like any other span —
+    so preempted traces still telescope to the run totals
   - epoch containers are pairwise non-overlapping (touching is fine)
   - per-span reads/writes/activations sum exactly to the trace's
     `lignnTotals` side object AND to the simulate-mode metrics JSON
@@ -70,6 +73,19 @@ def main(trace_path, metrics_path, prom_path):
 
     check(len(epochs) > 0, "no epoch containers")
     check(len(phases) > 0, "no phase spans")
+
+    # Preempt markers: zero-width, zero-delta — they may sit anywhere
+    # inside their epoch (the generic containment check below covers
+    # nesting), but must never carry time or counters, or the telescoping
+    # sums would double-count the parked work.
+    preempts = [p for p in phases if p[0] == "preempt"]
+    for name, epoch, start, end, args in preempts:
+        check(end == start, f"preempt marker at ts {start} has nonzero width {end - start}")
+        for key in ("reads", "writes", "activations", "row_hits"):
+            check(
+                args.get(key, 0) == 0,
+                f"preempt marker at ts {start} carries {key}={args.get(key)}",
+            )
 
     # Spans nest: each phase inside its own epoch's container.
     for name, epoch, start, end, _ in phases:
@@ -135,8 +151,9 @@ def main(trace_path, metrics_path, prom_path):
             print(f"FAIL: {msg}", file=sys.stderr)
         sys.exit(1)
     print(
-        f"trace OK: {len(phases)} phase spans in {len(epochs)} epochs, "
-        f"{counters} counter samples, sums match metrics"
+        f"trace OK: {len(phases)} phase spans in {len(epochs)} epochs "
+        f"({len(preempts)} preempt markers), {counters} counter samples, "
+        f"sums match metrics"
     )
 
 
