@@ -88,6 +88,41 @@ fn main() {
         assert_eq!(scalar.counters.row_hits, fast.counters.row_hits);
         assert_eq!(scalar.busy_until(), fast.busy_until());
     }
+    // The same streak stream with the spatial profiler attached: the
+    // closed-form tail folds into one record_hits call per streak, so
+    // profiling must keep the run-coalesced path above the same 5x
+    // acceptance floor.
+    {
+        let n = n_bursts;
+        let t = time(3, || {
+            let mut d = DramModel::new(DramStandardKind::Hbm.config());
+            d.enable_profiler(16);
+            let mapping = *d.mapping();
+            for run in mapping.runs_for_range(0, n * 32) {
+                d.read_run(run.start, run.bursts, 0);
+            }
+        });
+        record("dram.read_run(streak, profiled)", n as f64 / t.best_s, "bursts", t.best_s);
+        let speedup = seq_t / t.best_s;
+        println!(
+            "run-coalesced speedup with spatial profiling: {speedup:.1}x \
+             (acceptance floor: 5x)"
+        );
+        assert!(
+            speedup >= 5.0,
+            "profiled run-coalesced path must stay ≥5x the scalar walk, got {speedup:.2}x"
+        );
+        // and the profiler's grids must conserve against the counters
+        let mut d = DramModel::new(DramStandardKind::Hbm.config());
+        d.enable_profiler(16);
+        let mapping = *d.mapping();
+        for run in mapping.runs_for_range(0, 100_000u64.min(n) * 32) {
+            d.read_run(run.start, run.bursts, 0);
+        }
+        let p = d.profiler().expect("profiler enabled");
+        assert_eq!(p.total_acts(), d.counters.activations);
+        assert_eq!(p.total_hits(), d.counters.row_hits);
+    }
 
     // LRU cache probe throughput.
     {

@@ -117,6 +117,10 @@ fn device_json(rep: &lignn::qos::DeviceReport) -> Json {
             "tenant_activations",
             Json::Arr(rep.tenant_activations.iter().map(|&a| Json::num(a as f64)).collect()),
         ),
+        (
+            "tenant_refresh_cycles",
+            Json::Arr(rep.tenant_refresh_cycles.iter().map(|&a| Json::num(a as f64)).collect()),
+        ),
     ])
 }
 

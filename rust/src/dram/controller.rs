@@ -20,6 +20,7 @@
 use super::bank::{Bank, RowOutcome};
 use super::mapping::{key, pack_key, AddressMapping, Loc};
 use super::standard::{DramConfig, Timing};
+use crate::telemetry::SpatialProfiler;
 
 /// Largest row-open-session size tracked individually in the histogram;
 /// bigger sessions land in the last bucket.
@@ -64,6 +65,16 @@ pub struct DramCounters {
     /// `activations` exactly: every ACT lands in the slot of the
     /// tenant whose request opened the row.
     pub tenant_activations: Vec<u64>,
+    /// Refresh-stolen cycles per tenant: each `catch_up_refresh` stall
+    /// is charged to the tenant whose request absorbed it (the request
+    /// that crossed the REF cadence and waited out tRFC). Sized by
+    /// [`DramModel::enable_tenant_tracking`] alongside
+    /// `tenant_activations`; empty (and every hook a no-op) on private
+    /// models, so pre-tenancy counters stay bit-identical. Note the
+    /// charge model is *absorption*, not causation: refreshes are a
+    /// device cadence, and the tenant billed is the one whose request
+    /// happened to arrive across the boundary.
+    pub tenant_refresh_cycles: Vec<u64>,
 }
 
 impl Default for DramCounters {
@@ -81,6 +92,7 @@ impl Default for DramCounters {
             channel_activations: Vec::new(),
             clamped_sessions: 0,
             tenant_activations: Vec::new(),
+            tenant_refresh_cycles: Vec::new(),
         }
     }
 }
@@ -162,6 +174,12 @@ impl DramCounters {
         for (a, b) in self.tenant_activations.iter_mut().zip(&other.tenant_activations) {
             *a += b;
         }
+        if self.tenant_refresh_cycles.len() < other.tenant_refresh_cycles.len() {
+            self.tenant_refresh_cycles.resize(other.tenant_refresh_cycles.len(), 0);
+        }
+        for (a, b) in self.tenant_refresh_cycles.iter_mut().zip(&other.tenant_refresh_cycles) {
+            *a += b;
+        }
     }
 }
 
@@ -195,7 +213,13 @@ struct Channel {
 /// intermediate windows never extend `cmd` past the following REF, so
 /// only the final window's end matters for the bank/bus/ACT horizon —
 /// each bank's session still closes exactly once.
-fn catch_up_refresh(counters: &mut DramCounters, ch: &mut Channel, t: &Timing, cmd: u64) -> u64 {
+fn catch_up_refresh(
+    counters: &mut DramCounters,
+    ch: &mut Channel,
+    t: &Timing,
+    cmd: u64,
+    tenant: usize,
+) -> u64 {
     if cmd < ch.next_refresh {
         return cmd;
     }
@@ -212,6 +236,12 @@ fn catch_up_refresh(counters: &mut DramCounters, ch: &mut Channel, t: &Timing, c
     ch.next_act = ch.next_act.max(refresh_end);
     ch.next_refresh += k * t.t_refi;
     counters.refreshes += k;
+    // Charge the stall (the command-time push past the last REF window)
+    // to the tenant whose request absorbed it. No-op unless tenant
+    // tracking sized the vector — see `tenant_refresh_cycles`.
+    if let Some(slot) = counters.tenant_refresh_cycles.get_mut(tenant) {
+        *slot += refresh_end.saturating_sub(cmd);
+    }
     cmd.max(refresh_end)
 }
 
@@ -239,6 +269,11 @@ pub struct DramModel {
     /// Request capture for shared-device replay; `None` costs the hot
     /// path a single branch per public entry point.
     req_log: Option<Vec<DramReq>>,
+    /// Spatial profiling hook (heatmaps, reuse distances, hot-row
+    /// sketch). `None` by default — disabled models are bit-identical
+    /// to the pre-profiler code (golden parity pins this); enabled, it
+    /// only observes, never steering timing or counters.
+    profiler: Option<Box<SpatialProfiler>>,
 }
 
 impl DramModel {
@@ -269,7 +304,7 @@ impl DramModel {
             .collect();
         let mut counters = DramCounters::default();
         counters.channel_activations = vec![0; cfg.channels];
-        DramModel { cfg, mapping, channels, counters, tenant: 0, req_log: None }
+        DramModel { cfg, mapping, channels, counters, tenant: 0, req_log: None, profiler: None }
     }
 
     /// Size the per-tenant attribution split for `n` tenants. Until
@@ -280,6 +315,39 @@ impl DramModel {
         if self.counters.tenant_activations.len() < n {
             self.counters.tenant_activations.resize(n, 0);
         }
+        if self.counters.tenant_refresh_cycles.len() < n {
+            self.counters.tenant_refresh_cycles.resize(n, 0);
+        }
+        if let Some(p) = &mut self.profiler {
+            p.set_tenants(n);
+        }
+    }
+
+    /// Attach a [`SpatialProfiler`] (top-`topk` hot-row sketch) sized
+    /// to this device's geometry. Observation-only: enabling it changes
+    /// no counter, energy bit, or completion cycle. Idempotent.
+    pub fn enable_profiler(&mut self, topk: usize) {
+        if self.profiler.is_none() {
+            let mut p = Box::new(SpatialProfiler::new(
+                self.cfg.channels,
+                self.cfg.banks_per_channel(),
+                topk,
+            ));
+            let tenants = self.counters.tenant_activations.len();
+            if tenants > 0 {
+                p.set_tenants(tenants);
+            }
+            self.profiler = Some(p);
+        }
+    }
+
+    pub fn profiler(&self) -> Option<&SpatialProfiler> {
+        self.profiler.as_deref()
+    }
+
+    /// Detach and return the profiler (None when profiling is off).
+    pub fn take_profiler(&mut self) -> Option<Box<SpatialProfiler>> {
+        self.profiler.take()
     }
 
     /// Select the tenant slot subsequent ACTs are attributed to.
@@ -337,12 +405,15 @@ impl DramModel {
         // Refresh: when the command time crosses the REF cadence, the
         // whole channel stalls for tRFC and every row closes. (All-bank
         // refresh — the common mode for these standards.)
-        cmd = catch_up_refresh(&mut self.counters, ch, t, cmd);
+        cmd = catch_up_refresh(&mut self.counters, ch, t, cmd, tenant);
         let bank = &mut ch.banks[bi];
         let mut activated = false;
         match bank.outcome(loc.row) {
             RowOutcome::Hit => {
                 self.counters.row_hits += 1;
+                if let Some(p) = &mut self.profiler {
+                    p.record_hits(loc.channel as usize, bi, 1);
+                }
             }
             RowOutcome::Conflict => {
                 self.counters.row_conflicts += 1;
@@ -363,6 +434,9 @@ impl DramModel {
                 self.counters.channel_activations[loc.channel as usize] += 1;
                 self.counters.bump_tenant(tenant);
                 self.counters.energy_pj += self.cfg.energy.act_pj;
+                if let Some(p) = &mut self.profiler {
+                    p.record_act(loc.channel as usize, bi, pack_key(&loc), tenant, true);
+                }
                 activated = true;
                 cmd = act + t.t_rcd;
             }
@@ -379,6 +453,9 @@ impl DramModel {
                 self.counters.channel_activations[loc.channel as usize] += 1;
                 self.counters.bump_tenant(tenant);
                 self.counters.energy_pj += self.cfg.energy.act_pj;
+                if let Some(p) = &mut self.profiler {
+                    p.record_act(loc.channel as usize, bi, pack_key(&loc), tenant, false);
+                }
                 activated = true;
                 cmd = act + t.t_rcd;
             }
@@ -430,6 +507,9 @@ impl DramModel {
         let key = pack_key(loc);
         let ch = &mut self.channels[chi];
         let counters = &mut self.counters;
+        // Disjoint-field borrow beside `counters`/`ch`; reborrowed per
+        // use so the observation hooks stay a single `Option` branch.
+        let mut profiler = self.profiler.as_deref_mut();
 
         // Per-burst data-command stride of an uninterrupted hit streak:
         // the bank allows RD every tCCD, the bus frees every tBL.
@@ -439,11 +519,14 @@ impl DramModel {
         while served < n {
             // Head burst of the (sub-)streak: the scalar command walk.
             let mut cmd = arrival.max(ch.banks[bi].ready_at);
-            cmd = catch_up_refresh(counters, ch, &t, cmd);
+            cmd = catch_up_refresh(counters, ch, &t, cmd, tenant);
             let bank = &mut ch.banks[bi];
             match bank.outcome(loc.row) {
                 RowOutcome::Hit => {
                     counters.row_hits += 1;
+                    if let Some(p) = profiler.as_deref_mut() {
+                        p.record_hits(chi, bi, 1);
+                    }
                 }
                 RowOutcome::Conflict => {
                     counters.row_conflicts += 1;
@@ -462,6 +545,9 @@ impl DramModel {
                     counters.channel_activations[chi] += 1;
                     counters.bump_tenant(tenant);
                     counters.energy_pj += e.act_pj;
+                    if let Some(p) = profiler.as_deref_mut() {
+                        p.record_act(chi, bi, key, tenant, true);
+                    }
                     on_act(served);
                     cmd = act + t.t_rcd;
                 }
@@ -478,6 +564,9 @@ impl DramModel {
                     counters.channel_activations[chi] += 1;
                     counters.bump_tenant(tenant);
                     counters.energy_pj += e.act_pj;
+                    if let Some(p) = profiler.as_deref_mut() {
+                        p.record_act(chi, bi, key, tenant, false);
+                    }
                     on_act(served);
                     cmd = act + t.t_rcd;
                 }
@@ -511,6 +600,9 @@ impl DramModel {
                 last_done = last_rd + t.t_cl + t.t_bl;
                 ch.bus_free = last_done;
                 counters.row_hits += k;
+                if let Some(p) = profiler.as_deref_mut() {
+                    p.record_hits(chi, bi, k);
+                }
                 // Exact: every per-op energy table value is an integral
                 // f64, so the batched sum equals k incremental adds bit
                 // for bit.

@@ -370,6 +370,22 @@ impl AddressMapping {
     pub fn vertices_per_row_group(&self, flen_bytes: u64) -> u64 {
         (self.row_group_bytes() / flen_bytes).max(1)
     }
+
+    /// Byte range `[start, end)` of the row group a row key names — the
+    /// inverse of [`decode`](Self::decode) restricted to the bits above
+    /// the channel-interleaved span (the channel field is *below* the
+    /// column bits, so one row group covers every channel's same-
+    /// numbered row and the key's channel field is irrelevant here).
+    /// This is how the spatial profiler maps a hot row back to the
+    /// vertex features that live in it.
+    pub fn row_group_range(&self, row_key: u64) -> (u64, u64) {
+        let g = (key::bankgroup(row_key) as u64)
+            | (key::bank(row_key) as u64) << self.bg_bits
+            | (key::rank(row_key) as u64) << (self.bg_bits + self.ba_bits)
+            | (key::row(row_key) as u64) << (self.bg_bits + self.ba_bits + self.ra_bits);
+        let start = g * self.row_group_bytes();
+        (start, start + self.row_group_bytes())
+    }
 }
 
 /// Bit layout of the canonical row key. [`pack_key`] and every consumer
@@ -551,6 +567,30 @@ mod tests {
         let v: Vec<u64> = m.bursts_for_range(1024, 1024).collect();
         assert_eq!(v.len(), 32);
         assert!(v.iter().all(|a| a % 32 == 0));
+    }
+
+    #[test]
+    fn row_group_range_inverts_decode() {
+        for kind in [DramStandardKind::Hbm, DramStandardKind::Ddr4] {
+            let m = AddressMapping::new(&kind.config());
+            let rgb = m.row_group_bytes();
+            for addr in [0u64, 1000, 16 * 1024 + 7, m.capacity_bytes() / 2 + 12_345] {
+                let key = m.row_key(addr);
+                let (start, end) = m.row_group_range(key);
+                assert_eq!(end - start, rgb);
+                assert_eq!(start % rgb, 0);
+                let wrapped = addr % m.capacity_bytes();
+                assert!(
+                    start <= wrapped && wrapped < end,
+                    "{kind:?}: addr {addr} outside its row group [{start}, {end})"
+                );
+                // Every address inside the range decodes to the key's
+                // (rank, bankgroup, bank, row), on whatever channel.
+                let l = m.decode(start + rgb - 1);
+                let k2 = pack_key(&Loc { channel: super::key::channel(key), ..l });
+                assert_eq!(k2, key);
+            }
+        }
     }
 
     #[test]

@@ -42,9 +42,12 @@
 //! * [`telemetry`] — observability: a [`telemetry::Recorder`] the
 //!   engine drives at phase boundaries (per-span DRAM counter deltas
 //!   with cycle stamps), a windowed utilization [`telemetry::Timeline`],
-//!   Chrome/Perfetto + Prometheus exporters, and the serve-side latency
-//!   histograms ([`telemetry::LogHist`]) — provably inert when disabled
-//!   (recorded runs are pinned bit-identical to bare ones),
+//!   Chrome/Perfetto + Prometheus exporters, the serve-side latency
+//!   histograms ([`telemetry::LogHist`]), and the spatial DRAM profiler
+//!   ([`telemetry::SpatialProfiler`]: bank heatmaps, row-reuse
+//!   distances, hot-row top-K with vertex attribution) — provably inert
+//!   when disabled (recorded and profiled runs are pinned bit-identical
+//!   to bare ones),
 //! * [`analytic`] — the closed-form burst/row model of §3.3 and the
 //!   area/power cost model of §5.2.4,
 //! * [`dropout`] — element/burst/row-granular mask generation shared by the
@@ -247,6 +250,28 @@
 //! println!("{}", prometheus_text(&m, Some(&rec)));
 //! ```
 //!
+//! Spatial profiling (`simulate --heatmap out.json --topk 16` on the
+//! CLI): per-(channel, bank) heatmaps and the hot-row top-K, with hot
+//! rows decoded back to the vertex ranges whose features live in them —
+//! profiled runs stay bit-identical to bare ones:
+//!
+//! ```no_run
+//! use lignn::config::SimConfig;
+//! use lignn::sim::run_sim_profiled;
+//!
+//! let cfg = SimConfig::default();
+//! let graph = cfg.build_graph();
+//! let (m, profiler) = run_sim_profiled(&cfg, &graph, 16);
+//! assert_eq!(profiler.total_acts(), m.dram.activations); // grids conserve
+//! let mapping = cfg.effective_mapping();
+//! for r in profiler.hot_row_reports(&mapping, cfg.feat_base, cfg.flen_bytes(), Some(&graph)) {
+//!     println!("row {:#x}: {} ACTs ({:.1}%) — {}",
+//!              r.row.key, r.row.acts, 100.0 * r.share, r.region.name());
+//! }
+//! let heatmap = profiler.heatmap_json(&mapping, cfg.feat_base, cfg.flen_bytes(), Some(&graph));
+//! std::fs::write("heatmap.json", heatmap.to_string()).unwrap();
+//! ```
+//!
 //! Custom phase composition (e.g. epochs with shared engine state):
 //!
 //! ```no_run
@@ -290,4 +315,4 @@ pub use sample::{EpochSubgraph, Sampler, SamplerKind};
 pub use serve::{GraphStore, ServeJob, ServeReport, ServeRunner};
 pub use sim::metrics::Metrics;
 pub use sim::{Phase, SimEngine, SweepPlan, SweepRunner};
-pub use telemetry::{NullRecorder, Recorder, TraceRecorder};
+pub use telemetry::{NullRecorder, Recorder, SpatialProfiler, TraceRecorder};

@@ -37,9 +37,12 @@ use lignn::serve::{GraphStore, ServeJob, ServeRunner};
 use lignn::sim::metrics::QueueWaitStats;
 use lignn::sim::runs::alpha_grid;
 use lignn::sim::{
-    run_sim, run_sim_preemptible_with_buffer, run_sim_recorded, NextStep, SweepPlan, SweepRunner,
+    run_sim, run_sim_preemptible_with_buffer, run_sim_profiled, run_sim_recorded,
+    run_sim_recorded_profiled, NextStep, SweepPlan, SweepRunner,
 };
-use lignn::telemetry::{chrome_trace, prometheus_text, PhaseActs, TraceRecorder};
+use lignn::telemetry::{
+    chrome_trace_with, prometheus_text_with, HotRow, PhaseActs, SpatialProfiler, TraceRecorder,
+};
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
 use lignn::util::error::{Error, Result};
@@ -146,6 +149,21 @@ fn phase_acts_json(p: &PhaseActs) -> Json {
     ])
 }
 
+/// One tenant-sketch hot row in `serve --qos --shared-device --json`:
+/// the physical coordinates plus the sketch's count bounds
+/// (`acts - err <= true ACTs <= acts`).
+fn qos_hot_row_json(r: &HotRow) -> Json {
+    use lignn::dram::key;
+    Json::obj(vec![
+        ("key", Json::num(r.key as f64)),
+        ("channel", Json::num(key::channel(r.key) as f64)),
+        ("bank", Json::num(key::bank(r.key) as f64)),
+        ("row", Json::num(key::row(r.key) as f64)),
+        ("acts", Json::num(r.acts as f64)),
+        ("err", Json::num(r.err as f64)),
+    ])
+}
+
 fn cmd_simulate(a: &Args) -> Result<()> {
     let cfg = sim_config(a)?;
     let graph = load_graph(a, &cfg)?;
@@ -161,10 +179,20 @@ fn cmd_simulate(a: &Args) -> Result<()> {
         }
         None => None,
     };
+    // `--heatmap out.json` attaches the spatial DRAM profiler and dumps
+    // per-(channel, bank) activation/hit/conflict grids, per-bank
+    // row-reuse histograms and the top-K hot-row sketch with vertex
+    // attribution. `--topk N` sizes the sketch (default 16).
+    let heatmap_path = a.get("heatmap");
+    let topk: usize = a.parse_or("topk", 16).map_err(Error::msg)?;
     let want_telemetry = trace_path.is_some()
         || prom_path.is_some()
         || a.get("timeline").is_some()
         || preempt_at.is_some();
+    if heatmap_path.is_some() && preempt_at.is_some() {
+        return Err(Error::msg("--heatmap cannot be combined with --preempt-at"));
+    }
+    let mut profiler: Option<Box<SpatialProfiler>> = None;
     let m = if want_telemetry {
         let window: u64 = a.parse_or("timeline", 4096).map_err(Error::msg)?;
         let mut rec = TraceRecorder::new().with_timeline(window);
@@ -189,21 +217,36 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                     },
                 )
             }
+            None if heatmap_path.is_some() => {
+                let (m, p) = run_sim_recorded_profiled(&cfg, &graph, &mut rec, topk);
+                profiler = Some(p);
+                m
+            }
             None => run_sim_recorded(&cfg, &graph, &mut rec),
         };
         if let Some(path) = trace_path {
-            let trace = chrome_trace(&rec, &m, &cfg.dram.config());
+            let trace = chrome_trace_with(&rec, &m, &cfg.dram.config(), profiler.as_deref());
             std::fs::write(path, format!("{trace}\n"))
                 .map_err(|e| Error::msg(format!("writing trace `{path}`: {e}")))?;
         }
         if let Some(path) = prom_path {
-            std::fs::write(path, prometheus_text(&m, Some(&rec)))
+            std::fs::write(path, prometheus_text_with(&m, Some(&rec), profiler.as_deref()))
                 .map_err(|e| Error::msg(format!("writing metrics `{path}`: {e}")))?;
         }
+        m
+    } else if heatmap_path.is_some() {
+        let (m, p) = run_sim_profiled(&cfg, &graph, topk);
+        profiler = Some(p);
         m
     } else {
         run_sim(&cfg, &graph)
     };
+    if let (Some(path), Some(p)) = (heatmap_path, &profiler) {
+        let mapping = cfg.effective_mapping();
+        let doc = p.heatmap_json(&mapping, cfg.feat_base, cfg.flen_bytes(), Some(&graph));
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| Error::msg(format!("writing heatmap `{path}`: {e}")))?;
+    }
     if a.has("json") {
         println!("{}", metrics_json(&m));
     } else {
@@ -628,6 +671,26 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
                             d.tenant_activations.iter().map(|&v| Json::num(v as f64)).collect(),
                         ),
                     ),
+                    (
+                        "tenant_refresh_cycles",
+                        Json::Arr(
+                            d.tenant_refresh_cycles
+                                .iter()
+                                .map(|&v| Json::num(v as f64))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "tenant_hot_rows",
+                        Json::Arr(
+                            d.tenant_hot_rows
+                                .iter()
+                                .map(|rows| {
+                                    Json::Arr(rows.iter().map(qos_hot_row_json).collect())
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -731,6 +794,35 @@ fn cmd_serve_qos(a: &Args, base: SimConfig, store: GraphStore) -> Result<()> {
             d.row_conflicts,
             tenants_desc.join(" "),
         );
+        if d.tenant_refresh_cycles.iter().any(|&v| v > 0) {
+            let refresh_desc: Vec<String> = tenants
+                .iter()
+                .zip(&d.tenant_refresh_cycles)
+                .map(|(t, &v)| format!("{}={v}", t.name))
+                .collect();
+            println!("  refresh stall cycles absorbed: {}", refresh_desc.join(" "));
+        }
+        for (t, rows) in tenants.iter().zip(&d.tenant_hot_rows) {
+            if rows.is_empty() {
+                continue;
+            }
+            let top: Vec<String> = rows
+                .iter()
+                .take(3)
+                .map(|r| {
+                    use lignn::dram::key;
+                    format!(
+                        "ch{} bank{} row{} ({} ACTs±{})",
+                        key::channel(r.key),
+                        key::bank(r.key),
+                        key::row(r.key),
+                        r.acts,
+                        r.err,
+                    )
+                })
+                .collect();
+            println!("  {} hot rows: {}", t.name, top.join(", "));
+        }
     }
     println!(
         "qos-served {} jobs from {} tenants over {} graphs on {} threads in {:.1} ms \
@@ -925,7 +1017,10 @@ fn usage() {
          telemetry flags (simulate): --trace <trace.json> --timeline <cycles> \\\n\
          --prom <file> (Perfetto span trace / DRAM-utilization window / \\\n\
          Prometheus text snapshot) --preempt-at K (park at boundary K, \\\n\
-         recording a zero-width preempt marker; metrics are conserved)\n\
+         recording a zero-width preempt marker; metrics are conserved) \\\n\
+         --heatmap <file> --topk N (spatial DRAM profile: per-bank \\\n\
+         act/hit/conflict grids, row-reuse hists, top-K hot rows with \\\n\
+         vertex attribution)\n\
          sampling flags: --sampler full|neighbor|locality --fanout N|inf|N,M,... \\\n\
          (layer-wise budgets: --fanout 10,5; sample: --compare runs all three)\n\
          serve flags: --graphs k=N:d=D,...|presets --jobs N --threads N \\\n\

@@ -30,6 +30,11 @@
 
 use crate::dram::{key, AddressMapping, ChannelSet, DramConfig, DramCounters, DramModel, DramReq};
 use crate::sim::frfcfs::{first_ready_pick, same_key_run, DEFAULT_DEPTH};
+use crate::telemetry::{HotRow, SpatialProfiler};
+
+/// Hot-row sketch size for shared devices: enough to name the handful
+/// of rows a tenant's report calls out without growing with the run.
+const QOS_TOPK: usize = 16;
 
 /// One queued read burst on a shared-device channel front.
 #[derive(Debug, Clone, Copy)]
@@ -58,6 +63,10 @@ impl SharedDevice {
         assert!(!tenants.is_empty(), "a shared device needs at least one tenant");
         let mut dram = DramModel::new(cfg);
         dram.enable_tenant_tracking(tenants.len());
+        // Spatial profiling rides along: the per-tenant hot-row sketches
+        // feed the QoS report's "which rows did this tenant hammer"
+        // sections.
+        dram.enable_profiler(QOS_TOPK);
         let maps = tenants
             .iter()
             .map(|set| match set {
@@ -88,6 +97,12 @@ impl SharedDevice {
     /// activation splits both sized).
     pub fn counters(&self) -> &DramCounters {
         &self.dram.counters
+    }
+
+    /// The device's spatial profiler (always attached on the shared
+    /// path).
+    pub fn profiler(&self) -> Option<&SpatialProfiler> {
+        self.dram.profiler()
     }
 
     /// Cycle by which every channel has drained.
@@ -167,6 +182,12 @@ impl SharedDevice {
     /// Interference snapshot for reports (call after [`flush`](Self::flush)).
     pub fn report(&self) -> DeviceReport {
         let c = &self.dram.counters;
+        let tenant_hot_rows = match self.dram.profiler() {
+            Some(p) => (0..self.maps.len())
+                .map(|t| p.tenant_sketch(t).map(|s| s.hot_rows()).unwrap_or_default())
+                .collect(),
+            None => Vec::new(),
+        };
         DeviceReport {
             standard: self.dram.config().kind.name().to_string(),
             channels: self.dram.config().channels,
@@ -180,6 +201,8 @@ impl SharedDevice {
             busy_until: self.dram.busy_until(),
             channel_activations: c.channel_activations.clone(),
             tenant_activations: c.tenant_activations.clone(),
+            tenant_refresh_cycles: c.tenant_refresh_cycles.clone(),
+            tenant_hot_rows,
         }
     }
 }
@@ -200,6 +223,12 @@ pub struct DeviceReport {
     pub busy_until: u64,
     pub channel_activations: Vec<u64>,
     pub tenant_activations: Vec<u64>,
+    /// Refresh stall cycles absorbed per tenant (the tenant whose
+    /// command ran into the refresh window pays its catch-up).
+    pub tenant_refresh_cycles: Vec<u64>,
+    /// Per-tenant top-K hot rows from the device's spatial profiler,
+    /// sorted by activation count descending.
+    pub tenant_hot_rows: Vec<Vec<HotRow>>,
 }
 
 impl DeviceReport {

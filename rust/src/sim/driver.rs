@@ -32,7 +32,7 @@ use crate::dram::{DramModel, DramReq};
 use crate::graph::CsrGraph;
 use crate::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger, UnitStats};
 use crate::sample::Sampler;
-use crate::telemetry::{DramDelta, DramSnapshot, Recorder, SpanEvent, SpanKind};
+use crate::telemetry::{DramDelta, DramSnapshot, Recorder, SpanEvent, SpanKind, SpatialProfiler};
 
 use super::frfcfs::{FrFcfs, DEFAULT_DEPTH};
 use super::metrics::Metrics;
@@ -285,6 +285,18 @@ impl<'a> SimEngine<'a> {
     /// Drain the captured request chunk (empty when logging is off).
     pub fn take_request_log(&mut self) -> Vec<DramReq> {
         self.dram.take_request_log()
+    }
+
+    /// Attach a spatial DRAM profiler (top-`topk` hot-row sketch) to
+    /// this engine's device — observation-only, so profiled runs stay
+    /// bit-identical to bare ones (golden parity pins this).
+    pub fn enable_profiler(&mut self, topk: usize) {
+        self.dram.enable_profiler(topk);
+    }
+
+    /// Detach the profiler with its grids/sketch (None when off).
+    pub fn take_profiler(&mut self) -> Option<Box<SpatialProfiler>> {
+        self.dram.take_profiler()
     }
 
     /// Record that the engine was parked at this boundary by the QoS
@@ -868,6 +880,42 @@ pub fn run_sim_recorded(cfg: &SimConfig, graph: &CsrGraph, rec: &mut dyn Recorde
     let mut engine = SimEngine::new(cfg);
     engine.set_recorder(rec);
     run_schedule(&mut engine, graph, &mut |_, _| false)
+}
+
+/// [`run_sim`] with a [`SpatialProfiler`] attached (top-`topk` hot-row
+/// sketch): identical schedule, identical metrics — the profiler only
+/// observes the DRAM command stream (golden parity pins profiled runs
+/// bit-identical to bare ones). Returns the run metrics together with
+/// the filled profiler, whose grids/sketch telescope exactly to the
+/// metrics' `DramCounters` (see `tests/properties.rs`).
+pub fn run_sim_profiled(
+    cfg: &SimConfig,
+    graph: &CsrGraph,
+    topk: usize,
+) -> (Metrics, Box<SpatialProfiler>) {
+    let mut engine = SimEngine::new(cfg);
+    engine.enable_profiler(topk);
+    let m = run_schedule(&mut engine, graph, &mut |_, _| false);
+    let p = engine.take_profiler().expect("profiler was enabled above");
+    (m, p)
+}
+
+/// [`run_sim_profiled`] with a telemetry [`Recorder`] attached too —
+/// the CLI's `simulate --heatmap --trace/--prom` path, where the trace
+/// and Prometheus exports carry the profiler's per-bank series beside
+/// the phase spans.
+pub fn run_sim_recorded_profiled(
+    cfg: &SimConfig,
+    graph: &CsrGraph,
+    rec: &mut dyn Recorder,
+    topk: usize,
+) -> (Metrics, Box<SpatialProfiler>) {
+    let mut engine = SimEngine::new(cfg);
+    engine.set_recorder(rec);
+    engine.enable_profiler(topk);
+    let m = run_schedule(&mut engine, graph, &mut |_, _| false);
+    let p = engine.take_profiler().expect("profiler was enabled above");
+    (m, p)
 }
 
 /// [`run_sim_recorded`] with a caller-owned recycled burst buffer — the

@@ -7,9 +7,9 @@ pub mod runs;
 pub mod trace;
 
 pub use driver::{
-    run_sampled_sim, run_sim, run_sim_preemptible_with_buffer, run_sim_recorded,
-    run_sim_recorded_with_buffer, run_sim_with_buffer, NextStep, Phase, PhaseCursor, PhaseHook,
-    SimEngine,
+    run_sampled_sim, run_sim, run_sim_preemptible_with_buffer, run_sim_profiled,
+    run_sim_recorded, run_sim_recorded_profiled, run_sim_recorded_with_buffer,
+    run_sim_with_buffer, NextStep, Phase, PhaseCursor, PhaseHook, SimEngine,
 };
 pub use metrics::{Metrics, QueueWaitStats};
 pub use runs::{alpha_sweep, normalized_against_no_dropout, SweepPlan, SweepRunner};

@@ -9,6 +9,7 @@
 //! totals so external validators can check that span deltas sum to
 //! them (the CI smoke does exactly this via `tools/check_trace.py`).
 
+use super::profile::SpatialProfiler;
 use super::recorder::TraceRecorder;
 use crate::dram::DramConfig;
 use crate::sim::metrics::Metrics;
@@ -48,6 +49,19 @@ fn complete_event(
 /// bus-busy fraction derived from burst count × burst length over the
 /// window's `channels` buses.
 pub fn chrome_trace(rec: &TraceRecorder, metrics: &Metrics, dram: &DramConfig) -> Json {
+    chrome_trace_with(rec, metrics, dram, None)
+}
+
+/// [`chrome_trace`] plus, when a [`SpatialProfiler`] rode the run,
+/// per-channel `bank_acts` counter tracks: one `"C"` sample per channel
+/// whose args carry every bank's total ACTs — the heatmap, viewable as
+/// counter tracks in Perfetto next to the phase spans.
+pub fn chrome_trace_with(
+    rec: &TraceRecorder,
+    metrics: &Metrics,
+    dram: &DramConfig,
+    profiler: Option<&SpatialProfiler>,
+) -> Json {
     let tck = dram.tck_ns();
     let us = |cycles: u64| cycles as f64 * tck / 1e3;
     let mut events = Vec::new();
@@ -120,6 +134,24 @@ pub fn chrome_trace(rec: &TraceRecorder, metrics: &Metrics, dram: &DramConfig) -
         }
     }
 
+    // Spatial heatmap as counter tracks: a totals snapshot per channel
+    // (ts 0), one arg per bank. Keys are zero-padded so Perfetto sorts
+    // the series in bank order.
+    if let Some(p) = profiler {
+        for c in 0..p.channels() {
+            let args: Vec<(String, Json)> = (0..p.banks_per_channel())
+                .map(|b| (format!("bank{b:02}"), Json::num(p.cell(c, b).0 as f64)))
+                .collect();
+            events.push(event(
+                "C",
+                &format!("bank_acts ch{c}"),
+                "heatmap",
+                0.0,
+                args.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+            ));
+        }
+    }
+
     let totals = rec.totals();
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
@@ -181,12 +213,36 @@ impl Registry {
             self.out.push_str(&format!("{name}{labels} {v}\n"));
         }
     }
+
+    /// One metric family whose samples need *several* extra labels
+    /// (e.g. channel + bank): each row carries its pre-rendered
+    /// `k="v",k2="v2"` label fragment. Skipped entirely when empty.
+    fn metric_rows(&mut self, name: &str, kind: &str, help: &str, rows: &[(String, f64)]) {
+        if rows.is_empty() {
+            return;
+        }
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for (extra, v) in rows {
+            self.out.push_str(&format!("{name}{{{},{extra}}} {v}\n", self.labels));
+        }
+    }
 }
 
 /// Prometheus-style snapshot of one run's counters. Pass the recorder
 /// to add per-phase activation attribution (`lignn_phase_activations`)
 /// summed from its retained spans.
 pub fn prometheus_text(metrics: &Metrics, rec: Option<&TraceRecorder>) -> String {
+    prometheus_text_with(metrics, rec, None)
+}
+
+/// [`prometheus_text`] plus the spatial profiler's per-bank families
+/// (`lignn_bank_{activations,row_hits,row_conflicts}_total`, labeled
+/// `channel`/`bank`, non-zero cells only) when a profiler rode the run.
+pub fn prometheus_text_with(
+    metrics: &Metrics,
+    rec: Option<&TraceRecorder>,
+    profiler: Option<&SpatialProfiler>,
+) -> String {
     let mut r = Registry::new(metrics);
     r.metric("lignn_dram_reads_total", "counter", "DRAM read bursts serviced", metrics.dram.reads as f64);
     r.metric("lignn_dram_writes_total", "counter", "DRAM write bursts serviced", metrics.dram.writes as f64);
@@ -199,6 +255,13 @@ pub fn prometheus_text(metrics: &Metrics, rec: Option<&TraceRecorder>) -> String
     r.metric("lignn_dram_row_hits_total", "counter", "row-buffer hits", metrics.dram.row_hits as f64);
     r.metric("lignn_dram_refreshes_total", "counter", "REF commands issued", metrics.dram.refreshes as f64);
     r.metric("lignn_dram_energy_picojoules_total", "counter", "estimated DRAM energy", metrics.energy.total_pj);
+    // Capture-loss visibility (scrapers must see silent clamping/drops).
+    r.metric(
+        "lignn_dram_clamped_sessions_total",
+        "counter",
+        "row-open sessions clamped into the histogram's last bucket",
+        metrics.dram.clamped_sessions as f64,
+    );
     r.metric("lignn_cache_hits_total", "counter", "feature-buffer hits", metrics.cache_hits as f64);
     r.metric("lignn_cache_misses_total", "counter", "feature-buffer misses", metrics.cache_misses as f64);
     r.metric("lignn_exec_nanoseconds", "gauge", "simulated end-to-end time", metrics.exec_ns);
@@ -217,6 +280,60 @@ pub fn prometheus_text(metrics: &Metrics, rec: Option<&TraceRecorder>) -> String
             "row activations per DRAM channel",
             &extra,
             &values,
+        );
+    }
+
+    if !metrics.dram.tenant_refresh_cycles.is_empty() {
+        let ids: Vec<String> =
+            (0..metrics.dram.tenant_refresh_cycles.len()).map(|t| t.to_string()).collect();
+        let extra: Vec<(&str, &str)> = ids.iter().map(|t| ("tenant", t.as_str())).collect();
+        let values: Vec<f64> =
+            metrics.dram.tenant_refresh_cycles.iter().map(|&c| c as f64).collect();
+        r.metric_with(
+            "lignn_dram_tenant_refresh_cycles_total",
+            "counter",
+            "refresh-stolen cycles absorbed by each tenant's requests",
+            &extra,
+            &values,
+        );
+    }
+
+    if let Some(p) = profiler {
+        let mut acts = Vec::new();
+        let mut hits = Vec::new();
+        let mut conflicts = Vec::new();
+        for c in 0..p.channels() {
+            for b in 0..p.banks_per_channel() {
+                let (a, h, x) = p.cell(c, b);
+                let labels = format!("channel=\"{c}\",bank=\"{b}\"");
+                if a > 0 {
+                    acts.push((labels.clone(), a as f64));
+                }
+                if h > 0 {
+                    hits.push((labels.clone(), h as f64));
+                }
+                if x > 0 {
+                    conflicts.push((labels, x as f64));
+                }
+            }
+        }
+        r.metric_rows(
+            "lignn_bank_activations_total",
+            "counter",
+            "row activations per (channel, bank) — spatial profiler grid",
+            &acts,
+        );
+        r.metric_rows(
+            "lignn_bank_row_hits_total",
+            "counter",
+            "row-buffer hits per (channel, bank) — spatial profiler grid",
+            &hits,
+        );
+        r.metric_rows(
+            "lignn_bank_row_conflicts_total",
+            "counter",
+            "row conflicts per (channel, bank) — spatial profiler grid",
+            &conflicts,
         );
     }
 
@@ -239,6 +356,14 @@ pub fn prometheus_text(metrics: &Metrics, rec: Option<&TraceRecorder>) -> String
         }
         r.metric("lignn_trace_spans", "gauge", "spans retained in the trace ring", rec.len() as f64);
         r.metric("lignn_trace_spans_dropped", "gauge", "spans evicted by ring wrap", rec.dropped() as f64);
+        // Counter twin of the gauge above: the name monitoring rules
+        // alert on (`increase(...) > 0` == silent capture loss).
+        r.metric(
+            "lignn_telemetry_dropped_spans_total",
+            "counter",
+            "trace spans lost to ring-buffer eviction",
+            rec.dropped() as f64,
+        );
     }
     r.out
 }
@@ -316,5 +441,32 @@ mod tests {
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.contains('{') && line.contains("} "), "malformed line: {line}");
         }
+    }
+
+    #[test]
+    fn exports_carry_spatial_and_loss_counters() {
+        let (rec, m, dram) = recorded_run();
+        let mut cfg = SimConfig::default();
+        cfg.graph = GraphPreset::Tiny;
+        cfg.layers = 2;
+        cfg.epochs = 2;
+        cfg.backward = true;
+        let graph = cfg.build_graph();
+        let (_, p) = crate::sim::run_sim_profiled(&cfg, &graph, 8);
+        let text = prometheus_text_with(&m, Some(&rec), Some(&p));
+        assert!(text.contains("lignn_dram_clamped_sessions_total"));
+        assert!(text.contains("lignn_telemetry_dropped_spans_total"));
+        assert!(text.contains("lignn_bank_activations_total"));
+        assert!(text.contains(",bank=\""), "per-bank samples must carry the bank label");
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.contains('{') && line.contains("} "), "malformed line: {line}");
+        }
+        let doc = chrome_trace_with(&rec, &m, &dram, Some(&p));
+        let parsed = Json::parse(&doc.to_string()).expect("profiled trace must stay valid JSON");
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(
+            events.iter().any(|e| e.get("cat").and_then(Json::as_str) == Some("heatmap")),
+            "profiled trace must carry heatmap counter tracks"
+        );
     }
 }

@@ -13,14 +13,19 @@
 //! ([`prometheus_text`]). The serving paths use [`PhaseActs`] for
 //! per-tenant per-phase activation attribution and [`LogHist`] /
 //! [`DepthGauge`] for queue-latency percentiles and depth gauges.
+//! [`SpatialProfiler`] adds the *spatial* axis: per-(channel, bank)
+//! heatmaps, row-reuse-distance histograms, and a hot-row top-K sketch
+//! attributable back to vertex ID ranges (`simulate --heatmap`).
 
 mod export;
 mod hist;
+mod profile;
 mod recorder;
 mod timeline;
 
-pub use export::{chrome_trace, prometheus_text};
+pub use export::{chrome_trace, chrome_trace_with, prometheus_text, prometheus_text_with};
 pub use hist::{DepthGauge, LogHist};
+pub use profile::{hot_row_json, HotRow, HotRowReport, RowRegion, SpaceSaving, SpatialProfiler};
 pub use recorder::{
     DramDelta, DramSnapshot, NullRecorder, PhaseActs, Recorder, SpanEvent, SpanKind,
     TraceRecorder, DEFAULT_CAPACITY,

@@ -1,0 +1,656 @@
+//! Spatial DRAM profiling: per-(channel, bank) activation heatmaps,
+//! per-bank row-reuse-distance histograms, and a bounded-memory
+//! Space-Saving top-K sketch of hot rows — with the hot rows decoded
+//! back to the vertex ranges whose features live in them.
+//!
+//! The profiler is an optional observation hook on `DramModel`, in the
+//! same inert-unless-enabled style as tenant tracking and the request
+//! log: disabled models are bit-identical to the pre-profiler code
+//! (golden parity pins this), and an enabled profiler never changes a
+//! counter or a timing decision — it only *watches* the ACT/hit stream.
+//! On the O(1) streak fast path the whole closed-form hit tail lands as
+//! one [`SpatialProfiler::record_hits`] call, so profiling preserves
+//! the `hotpath` ≥5x floor.
+//!
+//! Conservation is the design invariant every consumer leans on:
+//! `sum(acts grid) == DramCounters.activations` (per channel too),
+//! `sum(hits grid) == row_hits`, `sum(conflicts grid) == row_conflicts`,
+//! and `sketch.total() == activations` — `tests/properties.rs` proves
+//! these telescope exactly on both the scalar and streak paths across
+//! all eight DRAM standards, and `tools/check_heatmap.py` re-asserts
+//! them end-to-end in CI against the exported heatmap JSON.
+
+use crate::dram::mapping::{key, AddressMapping};
+use crate::graph::CsrGraph;
+use crate::util::json::Json;
+
+use super::hist::LogHist;
+
+/// One tracked hot row: `acts` is the sketch's count *upper bound*;
+/// `acts - err` is the guaranteed lower bound on the row's true ACTs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HotRow {
+    /// Canonical row key (see [`crate::dram::key`] for the bit layout).
+    pub key: u64,
+    /// Estimated ACT count (true count ≤ `acts`).
+    pub acts: u64,
+    /// Overestimation bound inherited from evictions
+    /// (true count ≥ `acts - err`).
+    pub err: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    key: u64,
+    count: u64,
+    /// Count inherited from the entry evicted for this one — the
+    /// classic Space-Saving error term.
+    err: u64,
+    /// Bank-local ACT clock at this row's most recent ACT (feeds the
+    /// reuse-distance histograms; rows never change banks, so stamps
+    /// from one key always come from one clock).
+    stamp: u64,
+}
+
+/// Space-Saving top-K heavy-hitter sketch (Metwally et al.) over row
+/// keys, `O(k)` memory regardless of how many distinct rows the run
+/// touches.
+///
+/// Guarantees (for a single-stream sketch over `total()` ACTs):
+/// * every tracked key's true count `c` satisfies
+///   `count - err ≤ c ≤ count`;
+/// * any key whose true count exceeds `total / k` is tracked (the
+///   guaranteed-heavy-hitter invariant — proved in
+///   `tests/properties.rs`).
+///
+/// [`merge`](Self::merge) folds a second sketch in with the standard
+/// pessimistic union: keys missing on one side are assumed to sit at
+/// that side's eviction floor (its minimum count), which widens `err`
+/// but preserves both bounds above, and `total()` stays exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpaceSaving {
+    k: usize,
+    entries: Vec<Entry>,
+    total: u64,
+}
+
+impl SpaceSaving {
+    pub fn new(k: usize) -> SpaceSaving {
+        assert!(k >= 1, "Space-Saving needs k >= 1");
+        SpaceSaving { k, entries: Vec::with_capacity(k), total: 0 }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Every observation lands here, so conservation (`total ==` the
+    /// ACT count the owner fed in) holds even for evicted keys.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Count one occurrence of `key`, stamping it with the caller's
+    /// clock. Returns the *previous* stamp when the key was already
+    /// tracked — the reuse-distance signal (a freshly inserted or
+    /// evicted-onto key has no trustworthy history, so `None`).
+    ///
+    /// Linear scan: `k` is small (CLI default 16), and the entries stay
+    /// in one cache line's worth of memory — a hash map would cost more
+    /// on the hot path than it saves.
+    pub fn bump(&mut self, key: u64, now: u64) -> Option<u64> {
+        self.total += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.count += 1;
+            let prev = e.stamp;
+            e.stamp = now;
+            return Some(prev);
+        }
+        if self.entries.len() < self.k {
+            self.entries.push(Entry { key, count: 1, err: 0, stamp: now });
+            return None;
+        }
+        // Evict the minimum-count entry: the newcomer inherits its
+        // count (+1) as an upper bound and records it as error.
+        let m = self
+            .entries
+            .iter_mut()
+            .min_by_key(|e| e.count)
+            .expect("k >= 1 so the sketch is non-empty when full");
+        *m = Entry { key, count: m.count + 1, err: m.count, stamp: now };
+        None
+    }
+
+    /// `(count, err)` of a tracked key.
+    pub fn count(&self, key: u64) -> Option<(u64, u64)> {
+        self.entries.iter().find(|e| e.key == key).map(|e| (e.count, e.err))
+    }
+
+    /// The eviction floor: any *untracked* key's true count is at most
+    /// this (0 while the sketch still has free slots).
+    pub fn floor(&self) -> u64 {
+        if self.entries.len() < self.k {
+            0
+        } else {
+            self.entries.iter().map(|e| e.count).min().unwrap_or(0)
+        }
+    }
+
+    /// Fold `other` in (e.g. per-worker sketches merged into a device
+    /// view). Keys present on only one side get the other side's floor
+    /// added to both `count` and `err` — the missing side may have seen
+    /// them up to that many times. Deterministic: ties sort by key.
+    pub fn merge(&mut self, other: &SpaceSaving) {
+        let (fs, fo) = (self.floor(), other.floor());
+        let mut merged: Vec<Entry> = Vec::with_capacity(self.entries.len() + other.entries.len());
+        for e in &self.entries {
+            match other.count(e.key) {
+                Some((c, err)) => merged.push(Entry {
+                    key: e.key,
+                    count: e.count + c,
+                    err: e.err + err,
+                    stamp: e.stamp.max(
+                        other.entries.iter().find(|o| o.key == e.key).map_or(0, |o| o.stamp),
+                    ),
+                }),
+                None => merged.push(Entry {
+                    key: e.key,
+                    count: e.count + fo,
+                    err: e.err + fo,
+                    stamp: e.stamp,
+                }),
+            }
+        }
+        for o in &other.entries {
+            if self.count(o.key).is_none() {
+                merged.push(Entry {
+                    key: o.key,
+                    count: o.count + fs,
+                    err: o.err + fs,
+                    stamp: o.stamp,
+                });
+            }
+        }
+        merged.sort_by(|a, b| b.count.cmp(&a.count).then(a.key.cmp(&b.key)));
+        merged.truncate(self.k);
+        self.entries = merged;
+        self.total += other.total;
+    }
+
+    /// Tracked rows, hottest first (count desc, key asc on ties).
+    pub fn hot_rows(&self) -> Vec<HotRow> {
+        let mut rows: Vec<HotRow> = self
+            .entries
+            .iter()
+            .map(|e| HotRow { key: e.key, acts: e.count, err: e.err })
+            .collect();
+        rows.sort_by(|a, b| b.acts.cmp(&a.acts).then(a.key.cmp(&b.key)));
+        rows
+    }
+}
+
+/// What a hot row's byte range serves, decoded through the engine's
+/// address-space layout (features in the first capacity quarter above
+/// `feat_base`, dropout masks in the second, double-buffered
+/// intermediates in the upper half — see `sim::driver`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RowRegion {
+    /// The row group holds vertex features `first_vertex..=last_vertex`.
+    Features { first_vertex: u64, last_vertex: u64, mean_degree: f64, max_degree: u64 },
+    /// Dropout mask write-back region.
+    Mask,
+    /// Intermediate / aggregation write-back buffers.
+    Intermediate,
+    /// Past the populated feature range (or an unmapped corner).
+    Other,
+}
+
+impl RowRegion {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RowRegion::Features { .. } => "features",
+            RowRegion::Mask => "mask",
+            RowRegion::Intermediate => "intermediate",
+            RowRegion::Other => "other",
+        }
+    }
+}
+
+/// One hot row with its GNN-semantic attribution — the "rows serving
+/// vertices 4096–4223 (mean degree 31) took 18% of ACTs" record the
+/// islandization reorder pass consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HotRowReport {
+    pub row: HotRow,
+    /// Fraction of all ACTs this row absorbed (upper bound / total).
+    pub share: f64,
+    pub region: RowRegion,
+}
+
+/// Spatial DRAM profiler: grids indexed `[channel * banks + bank]`
+/// (bank = the controller's flat rank×bankgroup×bank index within its
+/// channel), one reuse-distance [`LogHist`] per bank, one global hot-row
+/// sketch plus optional per-tenant sketches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpatialProfiler {
+    channels: usize,
+    /// Banks per channel.
+    banks: usize,
+    acts: Vec<u64>,
+    hits: Vec<u64>,
+    conflicts: Vec<u64>,
+    /// Row-reuse distance per bank: ACTs on this bank between two
+    /// consecutive ACTs of the same row (1 = immediately re-opened —
+    /// the thrash signature islandization wants to kill). Only rows
+    /// resident in the sketch contribute (bounded memory).
+    reuse: Vec<LogHist>,
+    /// Per-bank ACT clock driving the reuse distances.
+    bank_clock: Vec<u64>,
+    sketch: SpaceSaving,
+    /// Per-tenant hot rows; empty unless [`set_tenants`]
+    /// (Self::set_tenants) sized it (same no-op-by-default idiom as
+    /// `DramCounters::tenant_activations`).
+    tenant_sketches: Vec<SpaceSaving>,
+}
+
+impl SpatialProfiler {
+    pub fn new(channels: usize, banks_per_channel: usize, topk: usize) -> SpatialProfiler {
+        let cells = channels * banks_per_channel;
+        SpatialProfiler {
+            channels,
+            banks: banks_per_channel,
+            acts: vec![0; cells],
+            hits: vec![0; cells],
+            conflicts: vec![0; cells],
+            reuse: vec![LogHist::default(); cells],
+            bank_clock: vec![0; cells],
+            sketch: SpaceSaving::new(topk),
+            tenant_sketches: Vec::new(),
+        }
+    }
+
+    /// Size per-tenant hot-row sketches for `n` tenants (shared-device
+    /// mode). Until called, tenant attribution is a no-op.
+    pub fn set_tenants(&mut self, n: usize) {
+        let k = self.sketch.k();
+        while self.tenant_sketches.len() < n {
+            self.tenant_sketches.push(SpaceSaving::new(k));
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub fn banks_per_channel(&self) -> usize {
+        self.banks
+    }
+
+    /// Observe one ACT (row opened) on `(ch, bank)` for `row_key`.
+    /// `conflict` distinguishes a conflict-evicting ACT from one on a
+    /// closed bank. Also advances the bank's reuse clock and feeds the
+    /// sketches — pure observation, no controller state is touched.
+    #[inline]
+    pub fn record_act(&mut self, ch: usize, bank: usize, row_key: u64, tenant: usize, conflict: bool) {
+        let cell = ch * self.banks + bank;
+        self.acts[cell] += 1;
+        if conflict {
+            self.conflicts[cell] += 1;
+        }
+        self.bank_clock[cell] += 1;
+        let now = self.bank_clock[cell];
+        if let Some(prev) = self.sketch.bump(row_key, now) {
+            self.reuse[cell].record(now - prev);
+        }
+        if let Some(s) = self.tenant_sketches.get_mut(tenant) {
+            s.bump(row_key, now);
+        }
+    }
+
+    /// Observe `n` row hits on `(ch, bank)` — one call per closed-form
+    /// streak tail, so the fast path stays O(1) per refresh window.
+    #[inline]
+    pub fn record_hits(&mut self, ch: usize, bank: usize, n: u64) {
+        self.hits[ch * self.banks + bank] += n;
+    }
+
+    pub fn total_acts(&self) -> u64 {
+        self.acts.iter().sum()
+    }
+
+    pub fn total_hits(&self) -> u64 {
+        self.hits.iter().sum()
+    }
+
+    pub fn total_conflicts(&self) -> u64 {
+        self.conflicts.iter().sum()
+    }
+
+    /// ACTs binned on channel `ch` (must equal
+    /// `DramCounters.channel_activations[ch]`).
+    pub fn channel_acts(&self, ch: usize) -> u64 {
+        self.acts[ch * self.banks..(ch + 1) * self.banks].iter().sum()
+    }
+
+    /// `(acts, hits, conflicts)` of one grid cell.
+    pub fn cell(&self, ch: usize, bank: usize) -> (u64, u64, u64) {
+        let i = ch * self.banks + bank;
+        (self.acts[i], self.hits[i], self.conflicts[i])
+    }
+
+    pub fn reuse_hist(&self, ch: usize, bank: usize) -> &LogHist {
+        &self.reuse[ch * self.banks + bank]
+    }
+
+    pub fn sketch(&self) -> &SpaceSaving {
+        &self.sketch
+    }
+
+    pub fn tenant_sketch(&self, t: usize) -> Option<&SpaceSaving> {
+        self.tenant_sketches.get(t)
+    }
+
+    /// Fold another profiler of the same geometry in (per-worker →
+    /// device views). Grids and histograms add losslessly; the sketches
+    /// merge within the documented Space-Saving bound. Cross-profiler
+    /// reuse distances are not recomputed — each side's histograms
+    /// already hold its own stream's distances.
+    pub fn merge(&mut self, other: &SpatialProfiler) {
+        assert_eq!(
+            (self.channels, self.banks),
+            (other.channels, other.banks),
+            "merging profilers of different geometries"
+        );
+        for (a, b) in self.acts.iter_mut().zip(&other.acts) {
+            *a += b;
+        }
+        for (a, b) in self.hits.iter_mut().zip(&other.hits) {
+            *a += b;
+        }
+        for (a, b) in self.conflicts.iter_mut().zip(&other.conflicts) {
+            *a += b;
+        }
+        for (a, b) in self.bank_clock.iter_mut().zip(&other.bank_clock) {
+            *a += b;
+        }
+        for (a, b) in self.reuse.iter_mut().zip(&other.reuse) {
+            a.merge(b);
+        }
+        self.sketch.merge(&other.sketch);
+        if self.tenant_sketches.len() < other.tenant_sketches.len() {
+            self.set_tenants(other.tenant_sketches.len());
+        }
+        for (a, b) in self.tenant_sketches.iter_mut().zip(&other.tenant_sketches) {
+            a.merge(b);
+        }
+    }
+
+    /// Attribute the hot rows to the engine's address-space regions:
+    /// decode each row key's byte range with
+    /// [`AddressMapping::row_group_range`], then classify it against
+    /// the `sim::driver` layout (features / masks / intermediates at
+    /// capacity-quarter offsets above `feat_base`). With a graph, the
+    /// feature rows carry the vertex ID range and its degree stats.
+    pub fn hot_row_reports(
+        &self,
+        mapping: &AddressMapping,
+        feat_base: u64,
+        flen_bytes: u64,
+        graph: Option<&CsrGraph>,
+    ) -> Vec<HotRowReport> {
+        let total = self.total_acts().max(1) as f64;
+        self.sketch
+            .hot_rows()
+            .into_iter()
+            .map(|row| HotRowReport {
+                share: row.acts as f64 / total,
+                region: classify_row(mapping, feat_base, flen_bytes, graph, row.key),
+                row,
+            })
+            .collect()
+    }
+
+    /// The heatmap JSON the CLI writes (`simulate --heatmap`) and
+    /// `tools/check_heatmap.py` validates. Grids are per-channel arrays
+    /// of per-bank arrays; `reuse` lists only banks that recorded at
+    /// least one distance; `hot_rows` carry the decoded location and
+    /// the region attribution.
+    pub fn heatmap_json(
+        &self,
+        mapping: &AddressMapping,
+        feat_base: u64,
+        flen_bytes: u64,
+        graph: Option<&CsrGraph>,
+    ) -> Json {
+        let grid = |v: &[u64]| {
+            Json::Arr(
+                (0..self.channels)
+                    .map(|c| {
+                        Json::Arr(
+                            v[c * self.banks..(c + 1) * self.banks]
+                                .iter()
+                                .map(|&x| Json::num(x as f64))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        let mut reuse_rows = Vec::new();
+        for c in 0..self.channels {
+            for b in 0..self.banks {
+                let h = self.reuse_hist(c, b);
+                if h.count() == 0 {
+                    continue;
+                }
+                reuse_rows.push(Json::obj(vec![
+                    ("channel", Json::num(c as f64)),
+                    ("bank", Json::num(b as f64)),
+                    ("count", Json::num(h.count() as f64)),
+                    ("mean", Json::num(h.mean())),
+                    ("p50", Json::num(h.percentile(0.5).unwrap_or(0) as f64)),
+                    ("p95", Json::num(h.percentile(0.95).unwrap_or(0) as f64)),
+                    ("max", Json::num(h.max() as f64)),
+                ]));
+            }
+        }
+        let hot = self
+            .hot_row_reports(mapping, feat_base, flen_bytes, graph)
+            .into_iter()
+            .map(|r| hot_row_json(&r))
+            .collect();
+        Json::obj(vec![
+            ("channels", Json::num(self.channels as f64)),
+            ("banks", Json::num(self.banks as f64)),
+            ("topk", Json::num(self.sketch.k() as f64)),
+            ("total_acts", Json::num(self.total_acts() as f64)),
+            ("total_hits", Json::num(self.total_hits() as f64)),
+            ("total_conflicts", Json::num(self.total_conflicts() as f64)),
+            ("sketch_total", Json::num(self.sketch.total() as f64)),
+            ("acts", grid(&self.acts)),
+            ("hits", grid(&self.hits)),
+            ("conflicts", grid(&self.conflicts)),
+            ("reuse", Json::Arr(reuse_rows)),
+            ("hot_rows", Json::Arr(hot)),
+        ])
+    }
+}
+
+/// One hot-row report as JSON (shared by the heatmap export and the
+/// QoS per-tenant sections).
+pub fn hot_row_json(r: &HotRowReport) -> Json {
+    let mut fields = vec![
+        ("key", Json::num(r.row.key as f64)),
+        ("channel", Json::num(key::channel(r.row.key) as f64)),
+        ("rank", Json::num(key::rank(r.row.key) as f64)),
+        ("bankgroup", Json::num(key::bankgroup(r.row.key) as f64)),
+        ("bank", Json::num(key::bank(r.row.key) as f64)),
+        ("row", Json::num(key::row(r.row.key) as f64)),
+        ("acts", Json::num(r.row.acts as f64)),
+        ("err", Json::num(r.row.err as f64)),
+        ("share", Json::num(r.share)),
+        ("region", Json::str(r.region.name())),
+    ];
+    if let RowRegion::Features { first_vertex, last_vertex, mean_degree, max_degree } = r.region {
+        fields.push(("first_vertex", Json::num(first_vertex as f64)));
+        fields.push(("last_vertex", Json::num(last_vertex as f64)));
+        fields.push(("mean_degree", Json::num(mean_degree)));
+        fields.push(("max_degree", Json::num(max_degree as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Region classification of one row key. Offsets are measured from
+/// `feat_base` in the mapping's wrapped address space (the engine
+/// issues `feat_base + offset` and `decode` wraps modulo capacity), so
+/// the quarter boundaries match `sim::driver`'s `write_masks` /
+/// `intermediate_base` layout exactly.
+fn classify_row(
+    mapping: &AddressMapping,
+    feat_base: u64,
+    flen_bytes: u64,
+    graph: Option<&CsrGraph>,
+    row_key: u64,
+) -> RowRegion {
+    let cap = mapping.capacity_bytes();
+    let (start, end) = mapping.row_group_range(row_key);
+    let off = (start + cap - feat_base % cap) % cap;
+    if off >= cap / 2 {
+        return RowRegion::Intermediate;
+    }
+    if off >= cap / 4 {
+        return RowRegion::Mask;
+    }
+    let first_vertex = off / flen_bytes;
+    let last = (off + (end - start) - 1) / flen_bytes;
+    match graph {
+        Some(g) if first_vertex < g.num_vertices() as u64 => {
+            let last_vertex = last.min(g.num_vertices() as u64 - 1);
+            let mut sum = 0u64;
+            let mut max = 0u64;
+            for v in first_vertex..=last_vertex {
+                let d = g.in_degree(v as u32) as u64;
+                sum += d;
+                max = max.max(d);
+            }
+            let n = last_vertex - first_vertex + 1;
+            RowRegion::Features {
+                first_vertex,
+                last_vertex,
+                mean_degree: sum as f64 / n as f64,
+                max_degree: max,
+            }
+        }
+        Some(_) => RowRegion::Other,
+        // No graph to bound the populated range (e.g. shared-device
+        // profiles spanning several graphs): report the raw range.
+        None => RowRegion::Features {
+            first_vertex,
+            last_vertex: last,
+            mean_degree: 0.0,
+            max_degree: 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_tracks_exact_counts_below_k() {
+        let mut s = SpaceSaving::new(4);
+        for (key, n) in [(10u64, 5u64), (20, 3), (30, 1)] {
+            for i in 0..n {
+                s.bump(key, i + 1);
+            }
+        }
+        assert_eq!(s.total(), 9);
+        assert_eq!(s.count(10), Some((5, 0)));
+        assert_eq!(s.count(20), Some((3, 0)));
+        assert_eq!(s.count(30), Some((1, 0)));
+        assert_eq!(s.floor(), 0, "not full yet");
+        let rows = s.hot_rows();
+        assert_eq!(rows[0], HotRow { key: 10, acts: 5, err: 0 });
+    }
+
+    #[test]
+    fn sketch_eviction_bounds_hold() {
+        let mut s = SpaceSaving::new(2);
+        s.bump(1, 1);
+        s.bump(1, 2);
+        s.bump(2, 3);
+        // 3 evicts the min (key 2, count 1): count 2, err 1.
+        s.bump(3, 4);
+        assert_eq!(s.count(2), None);
+        assert_eq!(s.count(3), Some((2, 1)));
+        assert_eq!(s.total(), 4);
+        // True count of 3 is 1: count-err = 1 <= 1 <= 2 = count.
+    }
+
+    #[test]
+    fn bump_returns_previous_stamp_only_when_tracked() {
+        let mut s = SpaceSaving::new(2);
+        assert_eq!(s.bump(7, 10), None, "first sight has no history");
+        assert_eq!(s.bump(7, 25), Some(10));
+        assert_eq!(s.bump(7, 40), Some(25));
+    }
+
+    #[test]
+    fn merge_keeps_totals_exact_and_bounds_valid() {
+        let mut a = SpaceSaving::new(3);
+        let mut b = SpaceSaving::new(3);
+        for i in 0..10 {
+            a.bump(1, i);
+        }
+        for i in 0..4 {
+            a.bump(2, i);
+        }
+        for i in 0..6 {
+            b.bump(1, i);
+        }
+        for i in 0..2 {
+            b.bump(3, i);
+        }
+        let ta = a.total();
+        a.merge(&b);
+        assert_eq!(a.total(), ta + 8, "merged total is exact");
+        // Key 1 seen 16 times across both streams; both sketches were
+        // below capacity so counts were exact and the merge adds them.
+        assert_eq!(a.count(1), Some((16, 0)));
+    }
+
+    #[test]
+    fn profiler_grids_and_sketch_conserve() {
+        let mut p = SpatialProfiler::new(2, 4, 8);
+        p.record_act(0, 1, 0x10, 0, false);
+        p.record_act(0, 1, 0x10, 0, true);
+        p.record_act(1, 3, 0x21, 0, false);
+        p.record_hits(0, 1, 100);
+        assert_eq!(p.total_acts(), 3);
+        assert_eq!(p.total_conflicts(), 1);
+        assert_eq!(p.total_hits(), 100);
+        assert_eq!(p.channel_acts(0), 2);
+        assert_eq!(p.channel_acts(1), 1);
+        assert_eq!(p.sketch().total(), 3);
+        assert_eq!(p.cell(0, 1), (2, 100, 1));
+        // Same row re-activated after 1 intervening ACT on its bank:
+        // reuse distance 1 recorded.
+        assert_eq!(p.reuse_hist(0, 1).count(), 1);
+        assert_eq!(p.reuse_hist(0, 1).max(), 1);
+    }
+
+    #[test]
+    fn profiler_merge_adds_grids() {
+        let mut a = SpatialProfiler::new(1, 2, 4);
+        let mut b = SpatialProfiler::new(1, 2, 4);
+        a.record_act(0, 0, 0x5, 0, false);
+        b.record_act(0, 0, 0x5, 0, true);
+        b.record_hits(0, 1, 7);
+        a.merge(&b);
+        assert_eq!(a.total_acts(), 2);
+        assert_eq!(a.total_conflicts(), 1);
+        assert_eq!(a.total_hits(), 7);
+        assert_eq!(a.sketch().total(), 2);
+    }
+}

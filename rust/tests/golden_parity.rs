@@ -827,6 +827,65 @@ fn telemetry_recorder_is_inert_and_spans_sum_to_totals() {
 }
 
 #[test]
+fn spatial_profiler_is_inert_and_grids_conserve() {
+    // Same contract for the spatial profiler: attaching it must not
+    // change a single bit of the simulation (disabled it isn't even
+    // constructed — the hooks are `if let Some` on a `None` field), and
+    // its per-(channel, bank) grids plus the hot-row sketch must
+    // telescope exactly to the run's DramCounters.
+    use lignn::sim::run_sim_profiled;
+
+    let mut canonical = tiny_cfg(Variant::T, 0.5);
+    canonical.layers = 2;
+    canonical.epochs = 2;
+    canonical.backward = true;
+
+    let mut sampled = tiny_cfg(Variant::T, 0.5);
+    sampled.sampler = lignn::SamplerKind::Neighbor;
+    sampled.fanout = 8;
+    sampled.epochs = 2;
+
+    let mut partitioned = tiny_cfg(Variant::T, 0.5);
+    partitioned.channels = Some(lignn::dram::ChannelSet::parse("0-1").unwrap());
+
+    for (cfg, label) in
+        [(canonical, "canonical"), (sampled, "sampled"), (partitioned, "partitioned")]
+    {
+        let graph = cfg.build_graph();
+        let gold = run_sim(&cfg, &graph);
+        let (new, p) = run_sim_profiled(&cfg, &graph, 16);
+
+        assert_metrics_identical(&new, &gold, label);
+        assert_counters_identical(&new.dram, &gold.dram, label);
+
+        // Grid conservation: every ACT/hit/conflict landed in exactly
+        // one (channel, bank) cell, and every ACT passed through the
+        // sketch.
+        assert_eq!(p.total_acts(), gold.dram.activations, "{label}: grid acts");
+        assert_eq!(p.total_hits(), gold.dram.row_hits, "{label}: grid hits");
+        assert_eq!(
+            p.total_conflicts(),
+            gold.dram.row_conflicts,
+            "{label}: grid conflicts"
+        );
+        assert_eq!(p.sketch().total(), gold.dram.activations, "{label}: sketch total");
+        for (ch, &acts) in gold.dram.channel_activations.iter().enumerate() {
+            assert_eq!(p.channel_acts(ch), acts, "{label}: channel {ch} acts");
+        }
+
+        let rows = p.sketch().hot_rows();
+        assert!(rows.len() <= 16, "{label}: sketch overgrew its budget");
+        assert!(
+            rows.windows(2).all(|w| w[0].acts >= w[1].acts),
+            "{label}: hot rows not sorted by count"
+        );
+        for r in &rows {
+            assert!(r.acts >= r.err, "{label}: sketch bound violated");
+        }
+    }
+}
+
+#[test]
 fn fullbatch_sampler_matches_legacy() {
     // The FullBatch sampler spelled out — both through `cfg.sampler` and
     // through the explicit-sampler entry point — must reproduce the seed

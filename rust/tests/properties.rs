@@ -182,6 +182,195 @@ fn prop_run_path_matches_scalar_path_every_standard() {
 }
 
 #[test]
+fn prop_profiler_streak_equals_scalar_every_standard() {
+    // Spatial-profiler twin of the run-path property: for EVERY
+    // standard (full set and a ChannelSet subset), the profiler state
+    // left by the closed-form streak service must equal the
+    // burst-by-burst walk's *exactly* — every grid cell, every reuse
+    // histogram, the sketch entries and their stamps — and the grids
+    // must telescope to the model's own counters.
+    use lignn::dram::ChannelSet;
+
+    for kind in ALL_STANDARDS {
+        let cfg = kind.config();
+        let subset = ChannelSet::from_channels(
+            &(0..(cfg.channels as u32 / 2).max(1)).collect::<Vec<u32>>(),
+        )
+        .unwrap();
+        for (mlabel, scalar, fast) in [
+            ("full", DramModel::new(cfg), DramModel::new(cfg)),
+            (
+                "subset",
+                DramModel::with_channel_set(cfg, &subset),
+                DramModel::with_channel_set(cfg, &subset),
+            ),
+        ] {
+            let (mut scalar, mut fast) = (scalar, fast);
+            scalar.enable_profiler(16);
+            fast.enable_profiler(16);
+            let m = *fast.mapping();
+            let (bb, group) = (m.burst_bytes(), m.row_group_bytes());
+            let mut rng = Pcg64::new(0xFACE ^ (kind as u64) << 1 ^ (mlabel.len() as u64));
+            let mut arrival = 0u64;
+            for _ in 0..200u64 {
+                let streaky = rng.next_u64() % 2 == 0;
+                let addr = rng.next_u64() % (m.capacity_bytes() - 4 * group);
+                let len = if streaky {
+                    1 + rng.next_u64() % (3 * group)
+                } else {
+                    1 + rng.next_u64() % (4 * bb)
+                };
+                if rng.next_u64() % 11 == 0 {
+                    arrival += cfg.timing.t_refi * (2 + rng.next_u64() % 4);
+                }
+                let is_write = rng.next_u64() % 4 == 0;
+                for run in m.runs_for_range(addr, len) {
+                    for (a, _) in m.run_bursts(run) {
+                        if is_write {
+                            scalar.write_burst(a, arrival);
+                        } else {
+                            scalar.read_burst(a, arrival);
+                        }
+                    }
+                    if is_write {
+                        fast.write_run(run.start, run.bursts, arrival);
+                    } else {
+                        fast.read_run(run.start, run.bursts, arrival);
+                    }
+                }
+            }
+            scalar.flush_sessions();
+            fast.flush_sessions();
+            let label = format!("{kind:?}/{mlabel}");
+            let (sp, fp) = (
+                scalar.profiler().expect("profiler enabled"),
+                fast.profiler().expect("profiler enabled"),
+            );
+            assert_eq!(fp, sp, "{label}: profiler state diverged between paths");
+            // Conservation against the model's own counters.
+            let c = &fast.counters;
+            assert_eq!(fp.total_acts(), c.activations, "{label}: grid acts");
+            assert_eq!(fp.total_hits(), c.row_hits, "{label}: grid hits");
+            assert_eq!(fp.total_conflicts(), c.row_conflicts, "{label}: grid conflicts");
+            assert_eq!(fp.sketch().total(), c.activations, "{label}: sketch total");
+            for (ch, &acts) in c.channel_activations.iter().enumerate() {
+                assert_eq!(fp.channel_acts(ch), acts, "{label}: channel {ch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_space_saving_never_undercounts_heavy_hitters() {
+    // Metwally's guarantee, checked against exact ground truth: any key
+    // taking more than `total / k` of the stream is tracked, and for
+    // every tracked key `count - err <= true <= count`.
+    use lignn::telemetry::SpaceSaving;
+    use std::collections::HashMap;
+
+    for seed in 0..20u64 {
+        let k = 8usize;
+        let mut sketch = SpaceSaving::new(k);
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Pcg64::new(0x5ACE + seed);
+        let heavies = [3u64, 17, 42];
+        let mut now = 0u64;
+        for _ in 0..6_000 {
+            now += 1;
+            // ~60% of the stream concentrates on the planted heavies,
+            // the rest sprays over a wide key space (each cold key well
+            // below the total/k threshold).
+            let key = if rng.next_u64() % 10 < 6 {
+                heavies[(rng.next_u64() % 3) as usize]
+            } else {
+                100 + rng.next_u64() % 2_000
+            };
+            sketch.bump(key, now);
+            *truth.entry(key).or_insert(0) += 1;
+        }
+        let total: u64 = truth.values().sum();
+        assert_eq!(sketch.total(), total, "seed {seed}: sketch total is exact");
+        let threshold = total / k as u64;
+        for (&key, &t) in &truth {
+            let tracked = sketch.count(key);
+            if t > threshold {
+                let (count, err) = tracked
+                    .unwrap_or_else(|| panic!("seed {seed}: heavy key {key} ({t} > {threshold}) evicted"));
+                assert!(count >= t, "seed {seed}: key {key} undercounted ({count} < {t})");
+                assert!(
+                    count - err <= t,
+                    "seed {seed}: key {key} lower bound broken ({count}-{err} > {t})"
+                );
+            } else if let Some((count, err)) = tracked {
+                assert!(count >= t && count - err <= t, "seed {seed}: key {key} bounds");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_space_saving_merge_matches_single_stream_bound() {
+    // Per-worker sketches merged must agree with the single-stream
+    // sketch within the documented bound: totals are exact, and every
+    // key tracked by the merge keeps `count - err <= true <= count`
+    // against ground truth of the concatenated stream (the LogHist
+    // merge property, transplanted to the sketch).
+    use lignn::telemetry::SpaceSaving;
+    use std::collections::HashMap;
+
+    for seed in 0..10u64 {
+        let k = 8usize;
+        let workers = 4usize;
+        let mut parts: Vec<SpaceSaving> = (0..workers).map(|_| SpaceSaving::new(k)).collect();
+        let mut single = SpaceSaving::new(k);
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Pcg64::new(0xD1CE + seed);
+        let heavies = [5u64, 9, 31];
+        let mut now = 0u64;
+        for i in 0..4_000usize {
+            now += 1;
+            let key = if rng.next_u64() % 10 < 6 {
+                heavies[(rng.next_u64() % 3) as usize]
+            } else {
+                100 + rng.next_u64() % 500
+            };
+            parts[i % workers].bump(key, now);
+            single.bump(key, now);
+            *truth.entry(key).or_insert(0) += 1;
+        }
+        let mut merged = parts.remove(0);
+        for p in &parts {
+            merged.merge(p);
+        }
+        let total: u64 = truth.values().sum();
+        assert_eq!(merged.total(), total, "seed {seed}: merged total is exact");
+        assert_eq!(single.total(), total, "seed {seed}: single total is exact");
+        assert!(merged.hot_rows().len() <= k, "seed {seed}: merge overgrew k");
+        let threshold = total / k as u64;
+        for (&key, &t) in &truth {
+            if let Some((count, err)) = merged.count(key) {
+                assert!(count >= t, "seed {seed}: merged key {key} undercounted");
+                assert!(
+                    count - err <= t,
+                    "seed {seed}: merged key {key} lower bound broken"
+                );
+            } else {
+                assert!(
+                    t <= threshold,
+                    "seed {seed}: heavy key {key} ({t} > {threshold}) lost in merge"
+                );
+            }
+        }
+        // The merge must surface every heavy hitter the single-stream
+        // sketch is guaranteed to hold.
+        for &h in &heavies {
+            assert!(single.count(h).is_some(), "seed {seed}: single lost heavy {h}");
+            assert!(merged.count(h).is_some(), "seed {seed}: merge lost heavy {h}");
+        }
+    }
+}
+
+#[test]
 fn prop_lru_matches_reference_model() {
     // Reference: Vec-based LRU (O(n) but obviously correct).
     let cap = 8;

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Gate bench results against committed baselines.
+
+Usage: bench_diff.py <baseline_dir> <fresh_dir>
+
+Compares the perf-smoke JSON artifacts (BENCH_hotpath.json,
+BENCH_serve.json, BENCH_interference.json — the files CI copies into
+smoke/) against the same-named files under the baseline directory
+(bench_baselines/ in the repo), and fails on a >15% regression of:
+
+  - the hotpath run-coalescing streak speedup
+    (per_s of "dram.read_run(streak)" over "dram.read_burst(sequential)",
+    and its profiled twin when both sides carry it)
+  - the serve bench's end-to-end `jobs_per_sec` headline
+  - the qos_partition bench's partitioned/shared `*_elapsed_ms`
+    (elapsed is lower-is-better; the other two are higher-is-better)
+
+A missing baseline file or key is a WARNING and passes — that is the
+seeding path: the first CI run after this gate lands produces the
+artifacts that get committed as the baselines. CI wall-clock noise is
+why the bar sits at 15%, well above run-to-run jitter.
+
+Stdlib only — runs on any CI python3.
+"""
+
+import json
+import os
+import sys
+
+THRESHOLD = 0.15
+
+fails = []
+warns = []
+
+
+def load(dirname, fname):
+    path = os.path.join(dirname, fname)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate(label, base, fresh, lower_is_better=False):
+    """Record a failure if fresh regressed >15% against base."""
+    if base is None or fresh is None:
+        warns.append(f"{label}: missing value (base={base}, fresh={fresh}) — skipped")
+        return
+    if base <= 0:
+        warns.append(f"{label}: non-positive baseline {base} — skipped")
+        return
+    if lower_is_better:
+        ratio = fresh / base - 1.0  # positive = slower = worse
+    else:
+        ratio = 1.0 - fresh / base  # positive = lower throughput = worse
+    direction = "rose" if lower_is_better else "dropped"
+    line = f"{label}: {base:.4g} -> {fresh:.4g} ({direction} {abs(ratio) * 100:.1f}%)"
+    if ratio > THRESHOLD:
+        fails.append(line)
+    else:
+        print(f"ok {line}")
+
+
+def hotpath_speedups(rows):
+    """Streak speedups derivable from the hotpath rows, by label."""
+    if rows is None:
+        return None
+    per_s = {r.get("stage"): r.get("per_s") for r in rows}
+    seq = per_s.get("dram.read_burst(sequential)")
+    out = {}
+    for label, stage in [
+        ("streak_speedup", "dram.read_run(streak)"),
+        ("profiled_streak_speedup", "dram.read_run(streak, profiled)"),
+    ]:
+        if seq and per_s.get(stage):
+            out[label] = per_s[stage] / seq
+    return out
+
+
+def main(baseline_dir, fresh_dir):
+    if not os.path.isdir(baseline_dir):
+        print(
+            f"WARN: baseline dir {baseline_dir!r} missing — seeding run, gate passes",
+            file=sys.stderr,
+        )
+        return
+
+    # Hotpath: the run-coalescing speedup is the number the PRs defend;
+    # raw per_s of a single stage is too runner-dependent to gate, the
+    # speedup is a same-run ratio and stable.
+    base_hp = hotpath_speedups(load(baseline_dir, "BENCH_hotpath.json"))
+    fresh_hp = hotpath_speedups(load(fresh_dir, "BENCH_hotpath.json"))
+    if base_hp is None:
+        warns.append("BENCH_hotpath.json: no baseline — skipped")
+    elif fresh_hp is None:
+        fails.append("BENCH_hotpath.json missing from the fresh run")
+    else:
+        for label in base_hp:
+            gate(f"hotpath {label}", base_hp.get(label), fresh_hp.get(label))
+
+    base_sv = load(baseline_dir, "BENCH_serve.json")
+    fresh_sv = load(fresh_dir, "BENCH_serve.json")
+    if base_sv is None:
+        warns.append("BENCH_serve.json: no baseline — skipped")
+    elif fresh_sv is None:
+        fails.append("BENCH_serve.json missing from the fresh run")
+    else:
+        gate(
+            "serve jobs_per_sec",
+            base_sv.get("jobs_per_sec"),
+            fresh_sv.get("jobs_per_sec"),
+        )
+
+    base_if = load(baseline_dir, "BENCH_interference.json")
+    fresh_if = load(fresh_dir, "BENCH_interference.json")
+    if base_if is None:
+        warns.append("BENCH_interference.json: no baseline — skipped")
+    elif fresh_if is None:
+        fails.append("BENCH_interference.json missing from the fresh run")
+    else:
+        for key in ("partitioned_elapsed_ms", "shared_elapsed_ms"):
+            gate(
+                f"interference {key}",
+                base_if.get(key),
+                fresh_if.get(key),
+                lower_is_better=True,
+            )
+
+    for msg in warns:
+        print(f"WARN: {msg}", file=sys.stderr)
+    if fails:
+        for msg in fails:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("bench diff OK: no regression beyond 15%")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1], sys.argv[2])

@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Validate a lignn spatial DRAM heatmap against the run's JSON metrics.
+
+Usage: check_heatmap.py <heatmap.json> <metrics.json>
+
+Checks (all hard failures):
+  - the heatmap parses; the three grids are channels x banks rectangles
+  - grid conservation: the activation grid sums to the run's
+    `activations` total, per channel to `channel_activations[ch]`, the
+    hit grid to `row_hits` — every ACT/hit landed in exactly one
+    (channel, bank) cell
+  - the grids' own `total_*` fields agree with their cell sums, and
+    conflicts never exceed activations (globally and per cell)
+  - sketch conservation: `sketch_total` equals `activations` (every ACT
+    passed through the Space-Saving sketch)
+  - hot rows: at most `topk`, sorted by activation count descending,
+    `acts >= err >= 0`, shares in [0, 1] and summing to <= 1 + eps,
+    decoded channel/bank indices inside the device geometry, region one
+    of features/mask/intermediate/other, and feature rows carry a
+    non-inverted vertex range
+  - reuse histogram rows reference in-range banks with count >= 1 and
+    p50 <= p95 <= max
+
+Stdlib only — runs on any CI python3.
+"""
+
+import json
+import sys
+
+EPS = 1e-9
+
+fails = []
+
+
+def check(cond, msg):
+    if not cond:
+        fails.append(msg)
+
+
+def grid_sum(grid):
+    return sum(sum(row) for row in grid)
+
+
+def main(heatmap_path, metrics_path):
+    with open(heatmap_path) as f:
+        hm = json.load(f)
+    with open(metrics_path) as f:
+        metrics = json.load(f)
+
+    channels = hm.get("channels")
+    banks = hm.get("banks")
+    check(isinstance(channels, (int, float)) and channels >= 1, f"bad channels {channels!r}")
+    check(isinstance(banks, (int, float)) and banks >= 1, f"bad banks {banks!r}")
+    channels, banks = int(channels), int(banks)
+
+    grids = {}
+    for name in ("acts", "hits", "conflicts"):
+        g = hm.get(name)
+        check(isinstance(g, list) and len(g) == channels, f"{name}: not {channels} channels")
+        for c, row in enumerate(g or []):
+            check(
+                isinstance(row, list) and len(row) == banks,
+                f"{name}[{c}]: not {banks} banks",
+            )
+            check(all(v >= 0 for v in row), f"{name}[{c}]: negative cell")
+        grids[name] = g or []
+
+    # Conservation against the run's own metrics (simulate --json).
+    acts_sum = grid_sum(grids["acts"])
+    hits_sum = grid_sum(grids["hits"])
+    conflicts_sum = grid_sum(grids["conflicts"])
+    check(
+        acts_sum == metrics.get("activations"),
+        f"acts grid sum {acts_sum} != metrics activations {metrics.get('activations')}",
+    )
+    check(
+        hits_sum == metrics.get("row_hits"),
+        f"hits grid sum {hits_sum} != metrics row_hits {metrics.get('row_hits')}",
+    )
+    chan_acts = metrics.get("channel_activations", [])
+    check(
+        len(chan_acts) == channels,
+        f"metrics channel_activations has {len(chan_acts)} channels, heatmap {channels}",
+    )
+    for c, expect in enumerate(chan_acts[:channels]):
+        got = sum(grids["acts"][c])
+        check(got == expect, f"channel {c}: grid acts {got} != metrics {expect}")
+
+    # Internal consistency of the document.
+    check(acts_sum == hm.get("total_acts"), f"total_acts {hm.get('total_acts')} != {acts_sum}")
+    check(hits_sum == hm.get("total_hits"), f"total_hits {hm.get('total_hits')} != {hits_sum}")
+    check(
+        conflicts_sum == hm.get("total_conflicts"),
+        f"total_conflicts {hm.get('total_conflicts')} != {conflicts_sum}",
+    )
+    check(conflicts_sum <= acts_sum, f"conflicts {conflicts_sum} exceed acts {acts_sum}")
+    for c in range(channels):
+        for b in range(banks):
+            check(
+                grids["conflicts"][c][b] <= grids["acts"][c][b],
+                f"cell ({c},{b}): conflicts {grids['conflicts'][c][b]} "
+                f"> acts {grids['acts'][c][b]}",
+            )
+
+    # Sketch conservation: every ACT fed the hot-row sketch.
+    check(
+        hm.get("sketch_total") == metrics.get("activations"),
+        f"sketch_total {hm.get('sketch_total')} != activations "
+        f"{metrics.get('activations')}",
+    )
+
+    # Hot rows: bounded, ordered, bounds valid, attribution well-formed.
+    topk = int(hm.get("topk", 0))
+    rows = hm.get("hot_rows", [])
+    check(len(rows) <= topk, f"{len(rows)} hot rows exceed topk {topk}")
+    regions = {"features", "mask", "intermediate", "other"}
+    share_sum = 0.0
+    prev = None
+    for i, r in enumerate(rows):
+        acts, err = r.get("acts"), r.get("err")
+        check(acts is not None and err is not None, f"hot row {i}: missing acts/err")
+        check(acts >= err >= 0, f"hot row {i}: bound acts={acts} err={err}")
+        if prev is not None:
+            check(prev >= acts, f"hot row {i}: not sorted desc ({prev} then {acts})")
+        prev = acts
+        check(0 <= r.get("channel", -1) < channels, f"hot row {i}: channel out of range")
+        share = r.get("share", -1.0)
+        check(0.0 <= share <= 1.0, f"hot row {i}: share {share} outside [0,1]")
+        share_sum += share
+        check(r.get("region") in regions, f"hot row {i}: region {r.get('region')!r}")
+        if r.get("region") == "features":
+            fv, lv = r.get("first_vertex"), r.get("last_vertex")
+            check(
+                fv is not None and lv is not None and fv <= lv,
+                f"hot row {i}: inverted vertex range {fv}..{lv}",
+            )
+    check(share_sum <= 1.0 + EPS, f"hot-row shares sum to {share_sum} > 1")
+
+    # Reuse rows: in-range banks, sane percentile ordering.
+    for i, r in enumerate(hm.get("reuse", [])):
+        check(0 <= r.get("channel", -1) < channels, f"reuse {i}: channel out of range")
+        check(0 <= r.get("bank", -1) < banks, f"reuse {i}: bank out of range")
+        check(r.get("count", 0) >= 1, f"reuse {i}: empty histogram exported")
+        p50, p95, mx = r.get("p50", 0), r.get("p95", 0), r.get("max", 0)
+        check(p50 <= p95 <= mx, f"reuse {i}: percentiles disordered {p50}/{p95}/{mx}")
+
+    if fails:
+        for msg in fails:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"heatmap OK: {channels}x{banks} grid conserves {acts_sum} ACTs "
+        f"({hits_sum} hits, {conflicts_sum} conflicts), {len(rows)} hot rows, "
+        f"{len(hm.get('reuse', []))} reuse histograms"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1], sys.argv[2])

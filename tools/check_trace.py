@@ -6,7 +6,6 @@ Usage: check_trace.py <trace.json> <metrics.json> <metrics.prom>
 Checks (all hard failures):
   - the trace parses and `traceEvents` is non-empty
   - every complete ("X") event has ts >= 0 and dur >= 0
-  - no spans were evicted from the recorder ring (dropped_spans == 0)
   - every phase span is contained in its epoch's container event
     (matched by args.epoch, not by position)
   - preempt markers (QoS phase-boundary parks) are zero-width, carry
@@ -17,6 +16,14 @@ Checks (all hard failures):
     `lignnTotals` side object AND to the simulate-mode metrics JSON
   - the Prometheus snapshot is line-well-formed and its headline
     counters agree with the metrics JSON
+
+Ring evictions (dropped_spans > 0) are a WARNING, not a failure: long
+serving sessions legitimately outgrow the ring, and `lignnTotals` comes
+from the recorder's running totals, so the totals-vs-metrics agreement
+stays exact regardless. The per-span telescoping check is skipped in
+that case (evicted spans can no longer sum to the totals); the dropped
+count is exported as `lignn_telemetry_dropped_spans_total` so
+dashboards can alert on sustained loss.
 
 Stdlib only — runs on any CI python3.
 """
@@ -104,15 +111,24 @@ def main(trace_path, metrics_path, prom_path):
     for (ea, (_, end_a)), (eb, (start_b, _)) in zip(ordered, ordered[1:]):
         check(end_a <= start_b + EPS, f"epochs {ea} and {eb} overlap")
 
-    # Per-span deltas sum to the exported totals, exactly.
+    # Per-span deltas sum to the exported totals, exactly. Ring
+    # evictions demote this to a warning: the surviving spans can no
+    # longer telescope, but the totals themselves are still exact.
     totals = trace.get("lignnTotals", {})
-    check(totals.get("dropped_spans") == 0, f"dropped_spans = {totals.get('dropped_spans')}")
-    for key in ("reads", "writes", "activations", "row_hits"):
-        span_sum = sum(p[4].get(key, 0) for p in phases)
-        check(
-            span_sum == totals.get(key),
-            f"span {key} sum {span_sum} != lignnTotals {totals.get(key)}",
+    dropped = totals.get("dropped_spans", 0)
+    if dropped != 0:
+        print(
+            f"WARN: {dropped} spans evicted from the recorder ring — "
+            "skipping per-span telescoping check",
+            file=sys.stderr,
         )
+    else:
+        for key in ("reads", "writes", "activations", "row_hits"):
+            span_sum = sum(p[4].get(key, 0) for p in phases)
+            check(
+                span_sum == totals.get(key),
+                f"span {key} sum {span_sum} != lignnTotals {totals.get(key)}",
+            )
     # ...and to the run's own metrics JSON (simulate --json output).
     for key in ("reads", "writes", "activations", "row_hits"):
         check(
