@@ -1,0 +1,134 @@
+//! Reordering & sharding study: how much DRAM locality does islandized
+//! vertex order buy, and what does out-of-core sharding cost?
+//!
+//! Two sections, both gated (the asserts are the acceptance bars):
+//!
+//! * islandization on a hub-heavy R-MAT graph — activations under the
+//!   islandized order must come in *strictly below* the natural order at
+//!   α ∈ {0, 0.5} (locality-aware dropout on top of a locality-aware
+//!   layout still wins);
+//! * 4-shard streaming on a uniform control graph — DRAM counters must
+//!   match the monolithic run bit-for-bit while peak resident graph
+//!   bytes stay below 0.5× the monolithic footprint. The hub graph's
+//!   sharded run is reported too (its hub shard holds a super-even share
+//!   of edges, so only conservation — not the 0.5× bar — is gated).
+
+mod common;
+
+use lignn::config::{SimConfig, Variant};
+use lignn::graph::generate;
+use lignn::reorder::{islandize, run_sharded_sim, IslandConfig};
+use lignn::sim::run_sim;
+use lignn::util::benchkit::print_table;
+use lignn::util::json::Json;
+
+fn main() {
+    // Hub-heavy R-MAT: the skewed in-degree distribution islandization
+    // targets (hubs seed islands; their fan-ins pack into row groups).
+    let log_n = if common::fast_mode() { 11u32 } else { 12 };
+    let n = 1u64 << log_n;
+    let hub = generate::rmat(log_n, n * 16, 0.57, 0.19, 0.19, 99);
+
+    let base = SimConfig {
+        variant: Variant::T,
+        flen: 256,
+        capacity: 1024,
+        ..Default::default()
+    };
+    let per_group = base.effective_mapping().vertices_per_row_group(base.flen_bytes());
+    let (perm, island_rep) = islandize(&hub, per_group, IslandConfig::default());
+    let islandized = perm.apply_to_graph(&hub);
+
+    // --- islandized vs natural activations ---------------------------
+    let mut act_rows = Vec::new();
+    let mut act_ratios = Vec::new();
+    for &alpha in &[0.0f64, 0.5] {
+        let cfg = SimConfig { alpha, ..base.clone() };
+        let nat = run_sim(&cfg, &hub);
+        let isl = run_sim(&cfg, &islandized);
+        assert!(
+            isl.dram.activations < nat.dram.activations,
+            "islandized order must strictly reduce activations \
+             (α={alpha}: {} !< {})",
+            isl.dram.activations,
+            nat.dram.activations
+        );
+        let ratio = isl.dram.activations as f64 / nat.dram.activations.max(1) as f64;
+        act_ratios.push(ratio);
+        act_rows.push(vec![
+            format!("{alpha:.1}"),
+            format!("{}", nat.dram.activations),
+            format!("{}", isl.dram.activations),
+            format!("{ratio:.3}"),
+            format!("{:.3}", isl.dram.reads as f64 / nat.dram.reads.max(1) as f64),
+        ]);
+    }
+    print_table(
+        &format!(
+            "islandized vs natural — LG-T on rmat 2^{log_n} d16 \
+             ({} islands, {} singletons)",
+            island_rep.islands, island_rep.singletons
+        ),
+        &["alpha", "natural acts", "island acts", "act ratio", "read ratio"],
+        &act_rows,
+    );
+
+    // --- sharded vs monolithic residency -----------------------------
+    // Uniform control graph: shard residency is a scheduler property,
+    // measured without hub-skewed edge placement confounding the bar.
+    let ctrl = generate::erdos_renyi(n as usize, n * 16, 7);
+    let scfg = SimConfig {
+        variant: Variant::S,
+        alpha: 0.5,
+        flen: 256,
+        capacity: 1024,
+        ..Default::default()
+    };
+    let mut shard_rows = Vec::new();
+    let mut gated_peak_ratio = 1.0;
+    for (label, graph, gate_peak) in
+        [("uniform", &ctrl, true), ("hub (islandized)", &islandized, false)]
+    {
+        let mono = run_sim(&scfg, graph);
+        let (sh, rep) = run_sharded_sim(&scfg, graph, 4).expect("4-shard run");
+        assert_eq!(sh.dram.reads, mono.dram.reads, "{label}: reads conserved");
+        assert_eq!(sh.dram.writes, mono.dram.writes, "{label}: writes conserved");
+        assert_eq!(
+            sh.dram.activations, mono.dram.activations,
+            "{label}: activations conserved"
+        );
+        assert_eq!(sh.dram.row_hits, mono.dram.row_hits, "{label}: row hits conserved");
+        let peak_ratio =
+            rep.peak_resident_bytes as f64 / rep.monolithic_resident_bytes.max(1) as f64;
+        if gate_peak {
+            assert!(
+                peak_ratio < 0.5,
+                "{label}: peak residency {peak_ratio:.3} must stay below 0.5× monolithic"
+            );
+            gated_peak_ratio = peak_ratio;
+        }
+        shard_rows.push(vec![
+            label.to_string(),
+            format!("{}", rep.monolithic_resident_bytes),
+            format!("{}", rep.peak_resident_bytes),
+            format!("{peak_ratio:.3}"),
+            format!("{}", rep.handoffs),
+        ]);
+    }
+    print_table(
+        "4-shard streaming vs monolithic — LG-S α=0.5",
+        &["graph", "mono bytes", "peak shard bytes", "peak ratio", "handoffs"],
+        &shard_rows,
+    );
+
+    common::write_result(
+        "reorder_locality",
+        &Json::obj(vec![
+            ("act_ratio_a0", Json::num(act_ratios[0])),
+            ("act_ratio_a5", Json::num(act_ratios[1])),
+            ("shard_peak_ratio", Json::num(gated_peak_ratio)),
+            ("islands", Json::num(island_rep.islands as f64)),
+            ("singletons", Json::num(island_rep.singletons as f64)),
+        ]),
+    );
+}

@@ -203,6 +203,12 @@ pub struct SimConfig {
     /// forward mask — LiGNN drops nothing new there, §4.3). Off by
     /// default: the paper's figures measure the forward aggregation.
     pub backward: bool,
+    /// Frontier-limited aggregation write-back: write back only the
+    /// epoch's sampled frontier (vertices that aggregated something —
+    /// `EpochSubgraph::seeds`) instead of the full vertex set, so
+    /// write-back traffic scales with the mini-batch. Off by default:
+    /// the legacy full-vertex layout is what every golden run pins.
+    pub frontier_writeback: bool,
     /// Capture the DRAM burst trace to this path (see `sim::trace`).
     pub trace_path: Option<String>,
     /// RNG seed — every stochastic component derives its stream from this.
@@ -234,6 +240,7 @@ impl Default for SimConfig {
             channel_balance: false,
             mask_writeback: true,
             backward: false,
+            frontier_writeback: false,
             trace_path: None,
             seed: 0x11_C0DE,
             feat_base: 1 << 24, // 16 MiB — 4KB-aligned as §4.2 assumes

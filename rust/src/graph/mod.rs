@@ -218,6 +218,24 @@ impl CsrGraph {
         a
     }
 
+    /// Bytes of host memory this graph instance currently holds
+    /// resident: the CSR arrays, optional labels, and the cached
+    /// transpose if it has been materialized. The out-of-core shard
+    /// report compares per-shard residency against the monolithic
+    /// graph through this.
+    pub fn resident_bytes(&self) -> u64 {
+        let mut bytes = (self.offsets.len() * std::mem::size_of::<u64>()
+            + self.targets.len() * std::mem::size_of::<u32>())
+            as u64;
+        if let Some(labels) = &self.labels {
+            bytes += (labels.len() * std::mem::size_of::<u16>()) as u64;
+        }
+        if let Some(t) = self.transposed.get() {
+            bytes += t.resident_bytes();
+        }
+        bytes
+    }
+
     pub fn stats(&self) -> GraphStats {
         stats::compute(self)
     }

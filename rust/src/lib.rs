@@ -56,6 +56,13 @@
 //!   from full-batch, GraphSAGE-uniform, or GNNSampler-style
 //!   locality-aware neighbor selection (row-group geometry from the
 //!   actual DRAM mapping),
+//! * [`reorder`] — locality at the source: I-GCN-style islandization
+//!   ([`reorder::islandize`] emits a validated invertible
+//!   [`reorder::Permutation`] packing each hub community into few DRAM
+//!   row groups, optionally seeded from measured hot rows) and
+//!   row-range out-of-core sharding ([`reorder::GraphShard`]s streamed
+//!   through the engine at O(shard) peak residency, 1-shard runs
+//!   golden-pinned bit-identical to the monolithic path),
 //! * [`runtime`] / [`trainer`] — the PJRT side (behind the `pjrt`
 //!   feature): load the AOT-lowered JAX training step (HLO text
 //!   artifacts) and run real GNN training with LiGNN-shaped dropout
@@ -272,6 +279,36 @@
 //! std::fs::write("heatmap.json", heatmap.to_string()).unwrap();
 //! ```
 //!
+//! Reordering & sharding (`reorder`/`simulate --reorder island
+//! --shards N` on the CLI): islandize into DRAM-row-group-sized
+//! communities, relabel, then stream the relabeled graph shard-by-shard
+//! — same totals, fewer row activations, O(shard) peak residency:
+//!
+//! ```no_run
+//! use lignn::config::SimConfig;
+//! use lignn::reorder::{islandize, run_sharded_sim, IslandConfig};
+//! use lignn::sim::run_sim;
+//!
+//! let cfg = SimConfig::default();
+//! let graph = cfg.build_graph();
+//! let per_group = cfg.effective_mapping().vertices_per_row_group(cfg.flen_bytes());
+//! let (perm, islands) = islandize(&graph, per_group, IslandConfig::default());
+//! let reordered = perm.apply_to_graph(&graph);
+//! let natural = run_sim(&cfg, &graph);
+//! let islandized = run_sim(&cfg, &reordered);
+//! println!(
+//!     "{} islands (≤ {} vertices): ACTs {} -> {}",
+//!     islands.islands, islands.capacity_vertices,
+//!     natural.dram.activations, islandized.dram.activations
+//! );
+//! let (m, shard_report) = run_sharded_sim(&cfg, &reordered, 4).unwrap();
+//! println!(
+//!     "4 shards: peak resident {} B vs monolithic {} B (acts {})",
+//!     shard_report.peak_resident_bytes, shard_report.monolithic_resident_bytes,
+//!     m.dram.activations
+//! );
+//! ```
+//!
 //! Custom phase composition (e.g. epochs with shared engine state):
 //!
 //! ```no_run
@@ -299,6 +336,7 @@ pub mod dropout;
 pub mod graph;
 pub mod lignn;
 pub mod qos;
+pub mod reorder;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sample;
@@ -311,6 +349,7 @@ pub mod util;
 
 pub use config::{SimConfig, Variant};
 pub use qos::{QosEngine, TenantSet};
+pub use reorder::{GraphShard, IslandConfig, Permutation, ReorderKind, ShardPlan};
 pub use sample::{EpochSubgraph, Sampler, SamplerKind};
 pub use serve::{GraphStore, ServeJob, ServeReport, ServeRunner};
 pub use sim::metrics::Metrics;

@@ -8,6 +8,12 @@
 //!   sample        mini-batch sampling study: per-sampler subgraph
 //!                 locality and DRAM metrics (`--sampler`, `--fanout`;
 //!                 default compares full/neighbor/locality)
+//!   reorder       islandization study: hub-first relabeling capped to
+//!                 `--island-groups` DRAM row groups per island
+//!                 (`--profile-seeds` promotes measured hot rows,
+//!                 `--measure` reports the end-to-end DRAM delta);
+//!                 `simulate --reorder island --shards N` drives the
+//!                 relabeled graph out-of-core
 //!   serve         multi-graph serving: one engine pool over a named
 //!                 graph set (`--graphs k=1000:d=8,k=50000:d=16`), N
 //!                 jobs pulled off a shared queue (`--jobs`), per-tenant
@@ -33,15 +39,20 @@
 use lignn::analytic::{AlgoDropoutModel, CostModel};
 use lignn::config::{GraphPreset, SamplerKind, SimConfig, Variant};
 use lignn::qos::{QosEngine, TenantSet};
+use lignn::reorder::{
+    hub_seeds_from_hot_rows, islandize_seeded, run_sharded_on, GraphShard, IslandConfig,
+    ReorderKind, ShardPlan,
+};
 use lignn::serve::{GraphStore, ServeJob, ServeRunner};
 use lignn::sim::metrics::QueueWaitStats;
 use lignn::sim::runs::alpha_grid;
 use lignn::sim::{
     run_sim, run_sim_preemptible_with_buffer, run_sim_profiled, run_sim_recorded,
-    run_sim_recorded_profiled, NextStep, SweepPlan, SweepRunner,
+    run_sim_recorded_profiled, NextStep, SimEngine, SweepPlan, SweepRunner,
 };
 use lignn::telemetry::{
-    chrome_trace_with, prometheus_text_with, HotRow, PhaseActs, SpatialProfiler, TraceRecorder,
+    chrome_trace_with, prometheus_text_with, DramDelta, HotRow, PhaseActs, Recorder, SpanEvent,
+    SpanKind, SpatialProfiler, TraceRecorder,
 };
 use lignn::util::benchkit::print_table;
 use lignn::util::cli::Args;
@@ -49,8 +60,8 @@ use lignn::util::error::{Error, Result};
 use lignn::util::json::Json;
 use lignn::util::par::default_threads;
 
-const COMMANDS: &str = "simulate | sweep | sample | serve | train | table5 | graph-stats \
-     | report-cost | analytic | trace-replay";
+const COMMANDS: &str = "simulate | sweep | sample | reorder | serve | train | table5 \
+     | graph-stats | report-cost | analytic | trace-replay";
 
 fn sim_config(a: &Args) -> Result<SimConfig> {
     let mut cfg = SimConfig::default();
@@ -89,6 +100,7 @@ fn sim_config(a: &Args) -> Result<SimConfig> {
         cfg.mask_writeback = false;
     }
     cfg.backward = a.has("backward");
+    cfg.frontier_writeback = a.has("frontier-writeback");
     // `--trace` now names the Perfetto export (see cmd_simulate); the
     // raw burst-capture file moved to `--burst-trace`.
     cfg.trace_path = a.get("burst-trace").map(str::to_string);
@@ -167,6 +179,27 @@ fn qos_hot_row_json(r: &HotRow) -> Json {
 fn cmd_simulate(a: &Args) -> Result<()> {
     let cfg = sim_config(a)?;
     let graph = load_graph(a, &cfg)?;
+    // `--reorder island` relabels the graph hub-first before driving
+    // (`--island-groups N` caps each island at N DRAM row groups);
+    // `--shards N` streams the run through N row-range shards instead
+    // of the monolithic schedule.
+    let reorder: ReorderKind = a.get_or("reorder", "natural").parse().map_err(Error::msg)?;
+    let island_groups: usize = a.parse_or("island-groups", 4).map_err(Error::msg)?;
+    let shards: usize = a.parse_or("shards", 1).map_err(Error::msg)?;
+    let (graph, island_report) = match reorder {
+        ReorderKind::Natural => (graph, None),
+        ReorderKind::Island => {
+            let per_group = cfg.effective_mapping().vertices_per_row_group(cfg.flen_bytes());
+            let (perm, rep) = islandize_seeded(
+                &graph,
+                per_group,
+                IslandConfig { capacity_row_groups: island_groups },
+                &[],
+            );
+            (perm.apply_to_graph(&graph), Some(rep))
+        }
+    };
+    let mut shard_report = None;
     let trace_path = a.get("trace");
     let prom_path = a.get("prom");
     // `--preempt-at K` parks the engine at schedule boundary K and
@@ -192,10 +225,25 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     if heatmap_path.is_some() && preempt_at.is_some() {
         return Err(Error::msg("--heatmap cannot be combined with --preempt-at"));
     }
+    if shards > 1 && preempt_at.is_some() {
+        return Err(Error::msg("--shards cannot be combined with --preempt-at"));
+    }
     let mut profiler: Option<Box<SpatialProfiler>> = None;
     let m = if want_telemetry {
         let window: u64 = a.parse_or("timeline", 4096).map_err(Error::msg)?;
         let mut rec = TraceRecorder::new().with_timeline(window);
+        if island_report.is_some() {
+            // Zero-width marker at cycle 0: the trace self-describes
+            // that it was captured under an islandized vertex order.
+            rec.record_span(SpanEvent {
+                kind: SpanKind::Reorder,
+                epoch: 0,
+                tenant: 0,
+                start_cycle: 0,
+                end_cycle: 0,
+                dram: DramDelta::default(),
+            });
+        }
         let m = match preempt_at {
             Some(k) => {
                 let mut seen = 0usize;
@@ -217,6 +265,20 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                     },
                 )
             }
+            None if shards > 1 => {
+                let plan =
+                    ShardPlan::even(graph.num_vertices(), shards).map_err(Error::msg)?;
+                let parts = GraphShard::extract_all(&graph, &plan);
+                let mut engine = SimEngine::new(&cfg);
+                engine.set_recorder(&mut rec);
+                if heatmap_path.is_some() {
+                    engine.enable_profiler(topk);
+                }
+                let (m, rep) = run_sharded_on(&mut engine, &graph, &parts).map_err(Error::msg)?;
+                profiler = engine.take_profiler();
+                shard_report = Some(rep);
+                m
+            }
             None if heatmap_path.is_some() => {
                 let (m, p) = run_sim_recorded_profiled(&cfg, &graph, &mut rec, topk);
                 profiler = Some(p);
@@ -234,6 +296,17 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                 .map_err(|e| Error::msg(format!("writing metrics `{path}`: {e}")))?;
         }
         m
+    } else if shards > 1 {
+        let plan = ShardPlan::even(graph.num_vertices(), shards).map_err(Error::msg)?;
+        let parts = GraphShard::extract_all(&graph, &plan);
+        let mut engine = SimEngine::new(&cfg);
+        if heatmap_path.is_some() {
+            engine.enable_profiler(topk);
+        }
+        let (m, rep) = run_sharded_on(&mut engine, &graph, &parts).map_err(Error::msg)?;
+        profiler = engine.take_profiler();
+        shard_report = Some(rep);
+        m
     } else if heatmap_path.is_some() {
         let (m, p) = run_sim_profiled(&cfg, &graph, topk);
         profiler = Some(p);
@@ -248,9 +321,53 @@ fn cmd_simulate(a: &Args) -> Result<()> {
             .map_err(|e| Error::msg(format!("writing heatmap `{path}`: {e}")))?;
     }
     if a.has("json") {
-        println!("{}", metrics_json(&m));
+        let mut obj = metrics_json(&m);
+        if let Json::Obj(fields) = &mut obj {
+            fields.insert("reorder".into(), Json::str(reorder.name().to_string()));
+            if let Some(rep) = &island_report {
+                fields.insert("islands".into(), Json::num(rep.islands as f64));
+                fields.insert("island_singletons".into(), Json::num(rep.singletons as f64));
+                fields.insert("island_largest".into(), Json::num(rep.largest as f64));
+                fields.insert(
+                    "island_capacity_vertices".into(),
+                    Json::num(rep.capacity_vertices as f64),
+                );
+            }
+            if let Some(rep) = &shard_report {
+                fields.insert("shards".into(), Json::num(rep.shards as f64));
+                fields.insert(
+                    "peak_resident_bytes".into(),
+                    Json::num(rep.peak_resident_bytes as f64),
+                );
+                fields.insert(
+                    "monolithic_resident_bytes".into(),
+                    Json::num(rep.monolithic_resident_bytes as f64),
+                );
+                fields.insert("frontier".into(), Json::num(rep.frontier as f64));
+                fields.insert("handoffs".into(), Json::num(rep.handoffs as f64));
+            }
+        }
+        println!("{obj}");
     } else {
         println!("{}", m.summary());
+        if let Some(rep) = &island_report {
+            println!(
+                "islandized: {} islands ({} singletons, largest {}, cap {} vertices)",
+                rep.islands, rep.singletons, rep.largest, rep.capacity_vertices
+            );
+        }
+        if let Some(rep) = &shard_report {
+            println!(
+                "sharded x{}: peak resident {} B vs monolithic {} B ({:.3}x), \
+                 {} frontier vertices, {} handoffs",
+                rep.shards,
+                rep.peak_resident_bytes,
+                rep.monolithic_resident_bytes,
+                rep.peak_resident_bytes as f64 / rep.monolithic_resident_bytes.max(1) as f64,
+                rep.frontier,
+                rep.handoffs
+            );
+        }
         if cfg.layers > 1 {
             let shares = m.layer_read_shares();
             let mut parts: Vec<String> = m
@@ -379,6 +496,105 @@ fn cmd_sample(a: &Args) -> Result<()> {
         ],
         &rows,
     );
+    Ok(())
+}
+
+/// Islandization study: relabel the graph hub-first (optionally seeding
+/// hubs from a measured hot-row profile), report island shape and
+/// row-group locality natural vs islandized, and — with `--measure` —
+/// the end-to-end DRAM effect of the relabeled layout.
+fn cmd_reorder(a: &Args) -> Result<()> {
+    let cfg = sim_config(a)?;
+    let graph = load_graph(a, &cfg)?;
+    let groups: usize = a.parse_or("island-groups", 4).map_err(Error::msg)?;
+    let topk: usize = a.parse_or("topk", 16).map_err(Error::msg)?;
+    let mapping = cfg.effective_mapping();
+    let per_group = mapping.vertices_per_row_group(cfg.flen_bytes());
+    // `--profile-seeds`: one profiled pass first; measured hot feature
+    // rows become island seeds, so the reorder chases observed traffic
+    // instead of static degree alone.
+    let seeds = if a.has("profile-seeds") {
+        let (_, p) = run_sim_profiled(&cfg, &graph, topk);
+        let reports = p.hot_row_reports(&mapping, cfg.feat_base, cfg.flen_bytes(), Some(&graph));
+        hub_seeds_from_hot_rows(&reports)
+    } else {
+        Vec::new()
+    };
+    let (perm, rep) = islandize_seeded(
+        &graph,
+        per_group,
+        IslandConfig { capacity_row_groups: groups },
+        &seeds,
+    );
+    let reordered = perm.apply_to_graph(&graph);
+    let nat_loc = graph.row_group_locality(per_group as usize);
+    let isl_loc = reordered.row_group_locality(per_group as usize);
+    // `--measure`: drive both layouts through the configured variant and
+    // report the DRAM deltas the relabeling actually buys.
+    let measured = if a.has("measure") {
+        Some((run_sim(&cfg, &graph), run_sim(&cfg, &reordered)))
+    } else {
+        None
+    };
+    if a.has("json") {
+        let mut fields = vec![
+            ("graph", Json::str(cfg.graph.name().to_string())),
+            ("islands", Json::num(rep.islands as f64)),
+            ("singletons", Json::num(rep.singletons as f64)),
+            ("largest", Json::num(rep.largest as f64)),
+            ("capacity_vertices", Json::num(rep.capacity_vertices as f64)),
+            ("island_groups", Json::num(groups as f64)),
+            ("vertices_per_row_group", Json::num(per_group as f64)),
+            ("seeded_hot_rows", Json::num(seeds.len() as f64)),
+            ("same_group_rate_natural", Json::num(nat_loc.same_group_rate())),
+            ("same_group_rate_islandized", Json::num(isl_loc.same_group_rate())),
+        ];
+        if let Some((nat, isl)) = &measured {
+            fields.push(("acts_natural", Json::num(nat.dram.activations as f64)));
+            fields.push(("acts_islandized", Json::num(isl.dram.activations as f64)));
+            fields.push((
+                "act_ratio",
+                Json::num(isl.dram.activations as f64 / (nat.dram.activations as f64).max(1.0)),
+            ));
+            fields.push(("reads_natural", Json::num(nat.dram.reads as f64)));
+            fields.push(("reads_islandized", Json::num(isl.dram.reads as f64)));
+        }
+        println!("{}", Json::obj(fields));
+        return Ok(());
+    }
+    println!(
+        "islandize {}: {} islands ({} singletons, largest {}) at cap {} vertices \
+         ({} row-groups x {}/group){}",
+        cfg.graph.name(),
+        rep.islands,
+        rep.singletons,
+        rep.largest,
+        rep.capacity_vertices,
+        groups,
+        per_group,
+        if seeds.is_empty() {
+            String::new()
+        } else {
+            format!(", {} profiled hot-row seeds", seeds.len())
+        },
+    );
+    println!(
+        "row-group locality (same-group in-edge rate): natural {:.3} -> islandized {:.3}",
+        nat_loc.same_group_rate(),
+        isl_loc.same_group_rate(),
+    );
+    if let Some((nat, isl)) = &measured {
+        println!(
+            "measured ({} α={:.1}): ACTs {} -> {} ({:.3}x), reads {} -> {}",
+            cfg.variant.name(),
+            cfg.alpha,
+            nat.dram.activations,
+            isl.dram.activations,
+            isl.dram.activations as f64 / (nat.dram.activations as f64).max(1.0),
+            nat.dram.reads,
+            isl.dram.reads,
+        );
+    }
     Ok(())
 }
 
@@ -1023,6 +1239,12 @@ fn usage() {
          vertex attribution)\n\
          sampling flags: --sampler full|neighbor|locality --fanout N|inf|N,M,... \\\n\
          (layer-wise budgets: --fanout 10,5; sample: --compare runs all three)\n\
+         reorder flags: --reorder natural|island --island-groups N (simulate: \\\n\
+         relabel hub-first so each island fits N DRAM row groups) --shards N \\\n\
+         (stream N row-range shards, O(shard) peak residency) \\\n\
+         --frontier-writeback (write back only the sampled frontier); \\\n\
+         reorder subcommand: --profile-seeds (seed hubs from measured hot \\\n\
+         rows) --measure (run both layouts and report the DRAM delta)\n\
          serve flags: --graphs k=N:d=D,...|presets --jobs N --threads N \\\n\
          (α cycles the sweep grid unless --alpha pins it)\n\
          qos flags: serve --qos --tenants a:weight=2:channels=0-1,b:channels=4-7 \\\n\
@@ -1038,6 +1260,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
         Some("sample") => cmd_sample(args),
+        Some("reorder") => cmd_reorder(args),
         Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
         Some("table5") => cmd_table5(args),

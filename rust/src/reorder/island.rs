@@ -1,0 +1,229 @@
+//! I-GCN-style islandization: hub-seeded, capacity-capped BFS
+//! communities, emitted as a relabeling [`Permutation`].
+//!
+//! The aggregation phase reads the feature row of every in-neighbor a
+//! destination names; with a natural (generator) vertex order those
+//! sources scatter across DRAM row groups and every cache miss risks a
+//! fresh row activation. Islandization packs each hub together with
+//! the vertices that read it into one contiguous id range sized to fit
+//! a bounded number of row groups (geometry from the live
+//! `AddressMapping`), so a community's misses land in few rows and the
+//! open-row buffer absorbs them.
+//!
+//! Hub selection follows I-GCN's degree heuristic, measured in the
+//! direction that matters here: a vertex's *occurrence count* — how
+//! many destination lists name it — is exactly how many times its
+//! feature row is read per epoch. The spatial profiler can sharpen
+//! this with measured hot rows ([`hub_seeds_from_hot_rows`] +
+//! [`islandize_seeded`]): vertices whose rows the sketch flagged get
+//! first pick of island seeds.
+
+use crate::graph::CsrGraph;
+use crate::telemetry::{HotRowReport, RowRegion};
+
+use super::Permutation;
+
+/// Tuning for the islandization pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IslandConfig {
+    /// Island capacity in DRAM row groups: each island holds at most
+    /// `capacity_row_groups * vertices_per_row_group` vertices, so its
+    /// feature rows span at most this many row activations when read
+    /// cold. Small caps trade island count for tighter locality.
+    pub capacity_row_groups: usize,
+}
+
+impl Default for IslandConfig {
+    fn default() -> Self {
+        IslandConfig { capacity_row_groups: 4 }
+    }
+}
+
+/// Summary of one islandization pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IslandReport {
+    /// Islands grown (BFS trees rooted at a hub seed).
+    pub islands: usize,
+    /// Islands of exactly one vertex (isolated or fully-claimed hubs).
+    pub singletons: usize,
+    /// Largest island size in vertices.
+    pub largest: usize,
+    /// Vertex capacity per island used by this pass.
+    pub capacity_vertices: usize,
+}
+
+/// Islandize with hub seeds ordered purely by occurrence count.
+///
+/// `vertices_per_group` is the DRAM geometry:
+/// `AddressMapping::vertices_per_row_group(cfg.flen_bytes())`.
+pub fn islandize(
+    g: &CsrGraph,
+    vertices_per_group: u64,
+    cfg: IslandConfig,
+) -> (Permutation, IslandReport) {
+    islandize_seeded(g, vertices_per_group, cfg, &[])
+}
+
+/// Islandize with profiler-measured hot vertices promoted to the front
+/// of the hub order (ties within each tier broken by occurrence count,
+/// then id — fully deterministic). Unplaced vertices always get an
+/// island, so the result is a total permutation regardless of seeds.
+pub fn islandize_seeded(
+    g: &CsrGraph,
+    vertices_per_group: u64,
+    cfg: IslandConfig,
+    hot_seeds: &[u32],
+) -> (Permutation, IslandReport) {
+    let n = g.num_vertices();
+    let capacity = (cfg.capacity_row_groups.max(1) as u64 * vertices_per_group.max(1))
+        .min(n.max(1) as u64) as usize;
+
+    // Occurrence count = reads of this vertex's feature row per epoch
+    // (how many in-neighbor lists name it).
+    let mut counts = vec![0u64; n];
+    for &s in g.targets() {
+        counts[s as usize] += 1;
+    }
+    let mut hot = vec![false; n];
+    for &v in hot_seeds {
+        if (v as usize) < n {
+            hot[v as usize] = true;
+        }
+    }
+    let mut seeds: Vec<u32> = (0..n as u32).collect();
+    seeds.sort_unstable_by_key(|&v| {
+        (!hot[v as usize], u64::MAX - counts[v as usize], v)
+    });
+
+    let mut placed = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut queue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
+    let mut report = IslandReport {
+        islands: 0,
+        singletons: 0,
+        largest: 0,
+        capacity_vertices: capacity,
+    };
+
+    for &seed in &seeds {
+        if placed[seed as usize] {
+            continue;
+        }
+        // Grow one island: BFS over in-neighbor lists, admitting
+        // vertices only while the island is under capacity. Admission
+        // happens at enqueue time so `members` can never overshoot.
+        let mut members = 1usize;
+        placed[seed as usize] = true;
+        queue.push_back(seed);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &u in g.neighbors(v) {
+                if members < capacity && !placed[u as usize] {
+                    placed[u as usize] = true;
+                    queue.push_back(u);
+                    members += 1;
+                }
+            }
+        }
+        report.islands += 1;
+        report.largest = report.largest.max(members);
+        if members == 1 {
+            report.singletons += 1;
+        }
+    }
+
+    let perm = Permutation::from_new_order(order)
+        .expect("BFS placement covers every vertex exactly once");
+    (perm, report)
+}
+
+/// Derive islandization seed vertices from spatial-profiler hot rows:
+/// every vertex whose feature row the sketch flagged, hottest row
+/// first. Non-feature regions (mask, intermediate) carry no vertex
+/// identity and are skipped.
+pub fn hub_seeds_from_hot_rows(reports: &[HotRowReport]) -> Vec<u32> {
+    let mut seeds = Vec::new();
+    for r in reports {
+        if let RowRegion::Features { first_vertex, last_vertex, .. } = r.region {
+            for v in first_vertex..=last_vertex {
+                seeds.push(v as u32);
+            }
+        }
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn star_plus_chain() -> CsrGraph {
+        // Hub 0 read by 1..=5; a chain 6->7->8 off to the side.
+        CsrGraph::from_edges(
+            9,
+            &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (6, 7), (7, 8)],
+        )
+    }
+
+    #[test]
+    fn islandize_covers_all_vertices_bijectively() {
+        let g = star_plus_chain();
+        let (p, rep) = islandize(&g, 4, IslandConfig { capacity_row_groups: 1 });
+        assert_eq!(p.len(), g.num_vertices());
+        assert!(rep.islands >= 1);
+        assert!(rep.largest <= rep.capacity_vertices);
+        // Bijectivity is construction-validated; spot-check roundtrip.
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(p.old_id(p.new_id(v)), v);
+        }
+    }
+
+    #[test]
+    fn hub_gets_lowest_new_ids() {
+        let g = star_plus_chain();
+        // Vertex 0 has the highest occurrence count (5 lists name it),
+        // so it seeds the first island and lands at new id 0.
+        let (p, _) = islandize(&g, 16, IslandConfig::default());
+        assert_eq!(p.new_id(0), 0);
+    }
+
+    #[test]
+    fn capacity_caps_island_size() {
+        let g = generate::rmat(8, 2048, 0.57, 0.19, 0.19, 3);
+        let cfg = IslandConfig { capacity_row_groups: 2 };
+        let (_, rep) = islandize(&g, 8, cfg);
+        assert_eq!(rep.capacity_vertices, 16);
+        assert!(rep.largest <= 16, "largest {} exceeds cap", rep.largest);
+        assert!(rep.islands >= g.num_vertices() / 16);
+    }
+
+    #[test]
+    fn hot_seeds_take_priority() {
+        let g = star_plus_chain();
+        // Promote the chain tail — in-degree-poor, never a natural hub.
+        let (p, _) = islandize_seeded(&g, 16, IslandConfig::default(), &[8]);
+        assert_eq!(p.new_id(8), 0, "hot seed must head the order");
+    }
+
+    #[test]
+    fn seeds_from_feature_hot_rows_only() {
+        use crate::telemetry::HotRow;
+        let feat = HotRowReport {
+            row: HotRow { key: 1, acts: 10, err: 0 },
+            share: 0.5,
+            region: RowRegion::Features {
+                first_vertex: 4,
+                last_vertex: 6,
+                mean_degree: 1.0,
+                max_degree: 2,
+            },
+        };
+        let mask = HotRowReport {
+            row: HotRow { key: 2, acts: 3, err: 0 },
+            share: 0.1,
+            region: RowRegion::Mask,
+        };
+        assert_eq!(hub_seeds_from_hot_rows(&[feat, mask]), vec![4, 5, 6]);
+    }
+}

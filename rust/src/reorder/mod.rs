@@ -1,0 +1,78 @@
+//! Locality-aware graph reordering and out-of-core sharding.
+//!
+//! Two cooperating layers attack vertex-order locality at the source
+//! (where `dropout`/`lignn` attack it at the memory controller):
+//!
+//! 1. **Islandization** ([`islandize`] / [`islandize_seeded`]) — an
+//!    I-GCN-style hub-based community pass: hubs picked by occurrence
+//!    count (optionally promoted by measured
+//!    [`SpatialProfiler`](crate::telemetry::SpatialProfiler) hot rows
+//!    via [`hub_seeds_from_hot_rows`]), islands grown by capped BFS so
+//!    each island's feature rows fit a bounded number of DRAM row
+//!    groups, emitted as a validated invertible [`Permutation`]. The
+//!    relabeled graph runs through every existing sampler/engine path
+//!    unchanged — a feature row's address is a pure function of its
+//!    vertex id, so relabeling the graph relabels the memory layout.
+//!
+//! 2. **Sharding** ([`ShardPlan`] / [`GraphShard`] /
+//!    [`run_sharded_sim`]) — row-range partitions of the (reordered)
+//!    CSR streamed through `SimEngine` shard-by-shard, peak resident
+//!    bytes O(shard) not O(graph). One shard is golden-pinned
+//!    bit-identical to the monolithic path; multi-shard forward-only
+//!    non-merge runs conserve every DRAM counter exactly.
+//!
+//! Ordering matters: islandize first, then shard — islands are
+//! contiguous id ranges after relabeling, so row-range shards cut
+//! along community boundaries instead of across them.
+
+mod island;
+mod permutation;
+mod shard;
+
+pub use island::{hub_seeds_from_hot_rows, islandize, islandize_seeded, IslandConfig, IslandReport};
+pub use permutation::Permutation;
+pub use shard::{
+    run_sharded_on, run_sharded_sim, run_sharded_sim_recorded, GraphShard, ShardPlan, ShardReport,
+};
+
+/// Vertex-order policy named on the CLI (`simulate --reorder`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReorderKind {
+    /// The generator's natural order (the legacy layout).
+    Natural,
+    /// Hub-seeded capped-BFS islandization.
+    Island,
+}
+
+impl ReorderKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReorderKind::Natural => "natural",
+            ReorderKind::Island => "island",
+        }
+    }
+}
+
+impl std::str::FromStr for ReorderKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "natural" | "none" => Ok(ReorderKind::Natural),
+            "island" | "islandize" => Ok(ReorderKind::Island),
+            other => Err(format!("unknown reorder policy `{other}` (want natural|island)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reorder_kind_parses() {
+        assert_eq!("island".parse::<ReorderKind>().unwrap(), ReorderKind::Island);
+        assert_eq!("NONE".parse::<ReorderKind>().unwrap(), ReorderKind::Natural);
+        assert!("hilbert".parse::<ReorderKind>().is_err());
+        assert_eq!(ReorderKind::Island.name(), "island");
+    }
+}

@@ -1,0 +1,204 @@
+//! Validated, invertible vertex permutations.
+//!
+//! A [`Permutation`] carries both directions of the old↔new vertex-id
+//! mapping and is bijection-checked at construction, so every consumer
+//! (graph relabeling, seed translation, result de-relabeling) can index
+//! without re-validating. Because a feature row's DRAM address is a
+//! pure function of its vertex id (`feat_base + v * flen_bytes`),
+//! relabeling the graph *is* relabeling the feature and intermediate
+//! layouts — no separate tensor shuffle exists in the simulator.
+
+use crate::graph::CsrGraph;
+
+/// Bijective old↔new vertex-id mapping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Permutation {
+    /// `new_of_old[old] = new`.
+    new_of_old: Vec<u32>,
+    /// `old_of_new[new] = old`.
+    old_of_new: Vec<u32>,
+}
+
+impl Permutation {
+    /// The identity permutation on `n` vertices.
+    pub fn identity(n: usize) -> Permutation {
+        let ids: Vec<u32> = (0..n as u32).collect();
+        Permutation { new_of_old: ids.clone(), old_of_new: ids }
+    }
+
+    /// Build from a placement order: `order[new] = old` (the vertex
+    /// placed at new id `new`). Validates that `order` is a bijection
+    /// on `0..order.len()`.
+    pub fn from_new_order(order: Vec<u32>) -> Result<Permutation, String> {
+        let n = order.len();
+        let mut new_of_old = vec![u32::MAX; n];
+        for (new, &old) in order.iter().enumerate() {
+            let slot = new_of_old
+                .get_mut(old as usize)
+                .ok_or_else(|| format!("vertex {old} out of range (n = {n})"))?;
+            if *slot != u32::MAX {
+                return Err(format!("vertex {old} placed twice"));
+            }
+            *slot = new as u32;
+        }
+        // Every slot written exactly once and all ids in range — the
+        // double-placement check plus the pigeonhole makes this total.
+        debug_assert!(new_of_old.iter().all(|&x| x != u32::MAX));
+        Ok(Permutation { new_of_old, old_of_new: order })
+    }
+
+    /// Build from the forward direction: `new_of_old[old] = new`.
+    pub fn from_mapping(new_of_old: Vec<u32>) -> Result<Permutation, String> {
+        let n = new_of_old.len();
+        let mut old_of_new = vec![u32::MAX; n];
+        for (old, &new) in new_of_old.iter().enumerate() {
+            let slot = old_of_new
+                .get_mut(new as usize)
+                .ok_or_else(|| format!("new id {new} out of range (n = {n})"))?;
+            if *slot != u32::MAX {
+                return Err(format!("new id {new} assigned twice"));
+            }
+            *slot = old as u32;
+        }
+        Ok(Permutation { new_of_old, old_of_new })
+    }
+
+    /// Number of vertices the permutation covers.
+    pub fn len(&self) -> usize {
+        self.new_of_old.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.new_of_old.is_empty()
+    }
+
+    /// Whether this is the identity (relabeling with it is a no-op).
+    pub fn is_identity(&self) -> bool {
+        self.new_of_old.iter().enumerate().all(|(i, &v)| v == i as u32)
+    }
+
+    /// New id of old vertex `old`.
+    pub fn new_id(&self, old: u32) -> u32 {
+        self.new_of_old[old as usize]
+    }
+
+    /// Old id of new vertex `new`.
+    pub fn old_id(&self, new: u32) -> u32 {
+        self.old_of_new[new as usize]
+    }
+
+    /// The inverse permutation (maps relabeled ids back).
+    pub fn inverse(&self) -> Permutation {
+        Permutation {
+            new_of_old: self.old_of_new.clone(),
+            old_of_new: self.new_of_old.clone(),
+        }
+    }
+
+    /// Map a list of old vertex ids into the new id space.
+    pub fn apply_to_vertices(&self, old_ids: &[u32]) -> Vec<u32> {
+        old_ids.iter().map(|&v| self.new_id(v)).collect()
+    }
+
+    /// Relabel a graph into the new id space: new vertex `v'` has the
+    /// in-neighbor list of `old_id(v')`, every source mapped through
+    /// `new_id`. Lists stay sorted/unique (CsrGraph's invariant), edge
+    /// and vertex counts are preserved exactly, and community labels
+    /// (when present) travel with their vertices.
+    pub fn apply_to_graph(&self, g: &CsrGraph) -> CsrGraph {
+        let n = g.num_vertices();
+        assert_eq!(n, self.len(), "permutation covers {} vertices, graph has {n}", self.len());
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut targets = Vec::with_capacity(g.num_edges());
+        offsets.push(0u64);
+        let mut list: Vec<u32> = Vec::new();
+        for new_d in 0..n as u32 {
+            let old_d = self.old_id(new_d);
+            list.clear();
+            list.extend(g.neighbors(old_d).iter().map(|&s| self.new_id(s)));
+            list.sort_unstable();
+            targets.extend_from_slice(&list);
+            offsets.push(targets.len() as u64);
+        }
+        let mut out = CsrGraph::from_parts(offsets, targets)
+            .expect("relabeled CSR is structurally valid by construction");
+        if let Some(labels) = g.labels() {
+            let mut relabeled = vec![0u16; n];
+            for (old, &lab) in labels.iter().enumerate() {
+                relabeled[self.new_id(old as u32) as usize] = lab;
+            }
+            out.set_labels(relabeled);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        let p = Permutation::identity(4);
+        assert!(p.is_identity());
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.new_id(2), 2);
+        assert_eq!(p.old_id(3), 3);
+        assert_eq!(p.inverse(), p);
+    }
+
+    #[test]
+    fn from_new_order_validates_bijection() {
+        assert!(Permutation::from_new_order(vec![0, 0]).is_err()); // dup
+        assert!(Permutation::from_new_order(vec![0, 5]).is_err()); // range
+        let p = Permutation::from_new_order(vec![2, 0, 1]).unwrap();
+        // vertex 2 placed first → new id 0
+        assert_eq!(p.new_id(2), 0);
+        assert_eq!(p.old_id(0), 2);
+        assert!(!p.is_identity());
+    }
+
+    #[test]
+    fn from_mapping_matches_from_new_order() {
+        let p = Permutation::from_new_order(vec![2, 0, 1]).unwrap();
+        let q = Permutation::from_mapping(vec![1, 2, 0]).unwrap();
+        assert_eq!(p, q);
+        assert!(Permutation::from_mapping(vec![1, 1, 0]).is_err());
+    }
+
+    #[test]
+    fn roundtrip_both_directions() {
+        let p = Permutation::from_new_order(vec![3, 1, 0, 2]).unwrap();
+        for v in 0..4u32 {
+            assert_eq!(p.old_id(p.new_id(v)), v);
+            assert_eq!(p.new_id(p.old_id(v)), v);
+        }
+        let inv = p.inverse();
+        for v in 0..4u32 {
+            assert_eq!(inv.new_id(v), p.old_id(v));
+        }
+    }
+
+    #[test]
+    fn apply_to_graph_relabels_edges_and_labels() {
+        // 0 -> 1 -> 2 (in-neighbor lists: 1 aggregates {0}, 2 aggregates {1})
+        let mut g = CsrGraph::from_edges(3, &[(0, 1), (1, 2)]);
+        g.set_labels(vec![10, 11, 12]);
+        let p = Permutation::from_new_order(vec![2, 1, 0]).unwrap(); // reverse
+        let r = p.apply_to_graph(&g);
+        assert_eq!(r.num_edges(), g.num_edges());
+        // old 2 (neighbors {1}) is now vertex 0; old 1 maps to new 1.
+        assert_eq!(r.neighbors(0), &[1]);
+        assert_eq!(r.neighbors(1), &[2]);
+        assert_eq!(r.neighbors(2), &[] as &[u32]);
+        assert_eq!(r.labels().unwrap(), &[12, 11, 10]);
+        // Inverse relabeling restores the original exactly.
+        assert_eq!(p.inverse().apply_to_graph(&r), g);
+    }
+
+    #[test]
+    fn apply_identity_is_noop() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (2, 3), (1, 3)]);
+        assert_eq!(Permutation::identity(4).apply_to_graph(&g), g);
+    }
+}

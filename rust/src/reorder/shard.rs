@@ -1,0 +1,309 @@
+//! Row-range graph sharding: stream an epoch through [`SimEngine`]
+//! shard-by-shard, so peak resident bytes are O(shard) not O(graph).
+//!
+//! A [`GraphShard`] keeps the *full* vertex id space (addresses, the
+//! feature cache, sampler geometry and write-back layout all key on
+//! vertex ids, so ids must not shift) but materializes only the
+//! in-neighbor lists of destinations inside its row range — offsets
+//! outside the range are flat, `targets` is one contiguous slice of
+//! the full CSR. Concatenating the shards' dst-major edge streams
+//! therefore reproduces the monolithic stream *exactly*, which is what
+//! makes the sharded drive metrics-conserved:
+//!
+//! - **1 shard** is bit-identical to the monolithic schedule (golden
+//!   pinned), including `exec_ns`.
+//! - **N shards, forward-only, non-merge variants**: every DRAM, cache
+//!   and unit counter is bit-identical at *any* shard count — no drain
+//!   happens between shard drives, so the controller sees one
+//!   uninterrupted stream. Only `compute_ns` differs (the per-drive
+//!   combination charge is per `push_phase`).
+//! - **Merge variants (LG-T/LM)** re-seed their REC window per drive,
+//!   and multi-shard backward passes drive per-shard transposes, so
+//!   those streams legitimately differ at shard boundaries — the
+//!   locality cost of out-of-core execution, measured not assumed.
+
+use crate::config::SamplerKind;
+use crate::graph::CsrGraph;
+use crate::sim::metrics::Metrics;
+use crate::sim::{Phase, SimEngine};
+use crate::telemetry::Recorder;
+
+/// Row-range partition of `0..n` into contiguous shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Half-open vertex ranges `[lo, hi)`, contiguous and exhaustive.
+    pub ranges: Vec<(u32, u32)>,
+}
+
+impl ShardPlan {
+    /// Split `n` vertices into `shards` near-even contiguous ranges
+    /// (the first `n % shards` ranges hold one extra vertex).
+    pub fn even(n: usize, shards: usize) -> Result<ShardPlan, String> {
+        if shards == 0 {
+            return Err("shard count must be ≥ 1".into());
+        }
+        if shards > n {
+            return Err(format!("{shards} shards over {n} vertices — at most one per vertex"));
+        }
+        let base = n / shards;
+        let extra = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut lo = 0usize;
+        for i in 0..shards {
+            let hi = lo + base + usize::from(i < extra);
+            ranges.push((lo as u32, hi as u32));
+            lo = hi;
+        }
+        debug_assert_eq!(lo, n);
+        Ok(ShardPlan { ranges })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+/// One row-range shard: the in-neighbor lists of destinations in
+/// `[lo, hi)`, over the full vertex id space.
+#[derive(Debug, Clone)]
+pub struct GraphShard {
+    graph: CsrGraph,
+    lo: u32,
+    hi: u32,
+    index: usize,
+}
+
+impl GraphShard {
+    /// Materialize shard `index` covering destinations `[lo, hi)` of
+    /// `full`. O(shard) work and memory: flat offsets outside the
+    /// range, one contiguous `targets` copy inside it.
+    pub fn extract(full: &CsrGraph, lo: u32, hi: u32, index: usize) -> GraphShard {
+        let n = full.num_vertices();
+        assert!(lo <= hi && (hi as usize) <= n, "shard range [{lo}, {hi}) out of 0..{n}");
+        let offs = full.offsets();
+        let (start, end) = (offs[lo as usize], offs[hi as usize]);
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.extend(std::iter::repeat_n(0u64, lo as usize + 1));
+        offsets.extend(offs[lo as usize + 1..=hi as usize].iter().map(|&o| o - start));
+        offsets.extend(std::iter::repeat_n(end - start, n - hi as usize));
+        let targets = full.targets()[start as usize..end as usize].to_vec();
+        let graph = CsrGraph::from_parts(offsets, targets)
+            .expect("a row-range slice of a valid CSR is a valid CSR");
+        GraphShard { graph, lo, hi, index }
+    }
+
+    /// Materialize every shard of `plan` over `full`.
+    pub fn extract_all(full: &CsrGraph, plan: &ShardPlan) -> Vec<GraphShard> {
+        plan.ranges
+            .iter()
+            .enumerate()
+            .map(|(i, &(lo, hi))| GraphShard::extract(full, lo, hi, i))
+            .collect()
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    /// Half-open destination range `[lo, hi)` this shard owns.
+    pub fn range(&self) -> (u32, u32) {
+        (self.lo, self.hi)
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.graph.num_edges()
+    }
+
+    /// Vertices in this shard's range that aggregate at least one
+    /// in-neighbor — the frontier handed to the next shard's epoch
+    /// (and the write-back set under frontier-limited write-back).
+    pub fn frontier_len(&self) -> usize {
+        (self.lo..self.hi).filter(|&v| self.graph.in_degree(v) > 0).count()
+    }
+
+    /// Host bytes this shard holds resident (including its cached
+    /// transpose once a backward drive materialized it).
+    pub fn resident_bytes(&self) -> u64 {
+        self.graph.resident_bytes()
+    }
+}
+
+/// Residency and handoff accounting of one sharded run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardReport {
+    /// Shards the run streamed through.
+    pub shards: usize,
+    /// Largest single-shard residency (bytes) — what an out-of-core
+    /// deployment must hold in RAM at once, measured after the run so
+    /// backward shards include their cached transposes.
+    pub peak_resident_bytes: u64,
+    /// The monolithic graph's residency (bytes) for comparison, as
+    /// materialized by this run (the sharded drive never touches the
+    /// full graph's transpose cache).
+    pub monolithic_resident_bytes: u64,
+    /// Total frontier vertices across shards (destinations that
+    /// aggregated something).
+    pub frontier: usize,
+    /// Shard switches performed (`shard_load` markers minus the first
+    /// load of each drive sequence).
+    pub handoffs: usize,
+}
+
+/// Drive `engine` through the sharded schedule: per epoch, each layer
+/// streams every shard's edge range in turn (frontier handoff is the
+/// running cache/controller state — no drain between shards), then one
+/// drain + write-back pair, mirroring the monolithic schedule's shape
+/// exactly. Full-batch only: the engine's config must not request
+/// mini-batch sampling (shards *are* the batching axis here).
+pub fn run_sharded_on(
+    engine: &mut SimEngine<'_>,
+    full: &CsrGraph,
+    shards: &[GraphShard],
+) -> Result<(Metrics, ShardReport), String> {
+    let cfg = engine.config();
+    if cfg.sampler != SamplerKind::Full {
+        return Err(format!(
+            "sharded runs are full-batch (got sampler `{}`): shards already bound the \
+             per-drive working set",
+            cfg.sampler.name()
+        ));
+    }
+    if shards.is_empty() {
+        return Err("no shards to drive".into());
+    }
+    let frontier: usize = shards.iter().map(|s| s.frontier_len()).sum();
+    let write_back = if cfg.frontier_writeback {
+        frontier as u32
+    } else {
+        full.num_vertices() as u32
+    };
+    let mut handoffs = 0usize;
+    for epoch in 0..cfg.epochs {
+        engine.set_epoch(epoch as u32);
+        engine.note_sample();
+        for layer in 0..cfg.layers {
+            for shard in shards {
+                engine.note_shard_load(shard.index());
+                engine.push_phase(Phase::Forward { layer }, shard.graph());
+            }
+            handoffs += shards.len() - 1;
+            if layer + 1 == cfg.layers && cfg.backward {
+                for shard in shards {
+                    engine.note_shard_load(shard.index());
+                    engine.push_phase(Phase::Backward, shard.graph());
+                }
+                handoffs += shards.len() - 1;
+            }
+            engine.drain();
+            engine.push_write_back(write_back);
+            engine.push_mask_write_back();
+        }
+    }
+    let metrics = engine.finish(full);
+    let report = ShardReport {
+        shards: shards.len(),
+        peak_resident_bytes: shards.iter().map(|s| s.resident_bytes()).max().unwrap_or(0),
+        monolithic_resident_bytes: full.resident_bytes(),
+        frontier,
+        handoffs,
+    };
+    Ok((metrics, report))
+}
+
+/// One-call sharded run: plan an even row-range split, extract the
+/// shards, stream them through a fresh engine.
+pub fn run_sharded_sim(
+    cfg: &crate::config::SimConfig,
+    graph: &CsrGraph,
+    shards: usize,
+) -> Result<(Metrics, ShardReport), String> {
+    let plan = ShardPlan::even(graph.num_vertices(), shards)?;
+    let parts = GraphShard::extract_all(graph, &plan);
+    let mut engine = SimEngine::new(cfg);
+    run_sharded_on(&mut engine, graph, &parts)
+}
+
+/// [`run_sharded_sim`] with a telemetry recorder attached: identical
+/// metrics, plus per-phase spans and zero-width `shard_load` markers.
+pub fn run_sharded_sim_recorded(
+    cfg: &crate::config::SimConfig,
+    graph: &CsrGraph,
+    shards: usize,
+    rec: &mut dyn Recorder,
+) -> Result<(Metrics, ShardReport), String> {
+    let plan = ShardPlan::even(graph.num_vertices(), shards)?;
+    let parts = GraphShard::extract_all(graph, &plan);
+    let mut engine = SimEngine::new(cfg);
+    engine.set_recorder(rec);
+    run_sharded_on(&mut engine, graph, &parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn even_plan_partitions_exhaustively() {
+        let plan = ShardPlan::even(10, 3).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 4), (4, 7), (7, 10)]);
+        assert!(ShardPlan::even(10, 0).is_err());
+        assert!(ShardPlan::even(2, 3).is_err());
+        assert_eq!(ShardPlan::even(4, 4).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn shards_cover_every_edge_once_in_order() {
+        let g = generate::rmat(7, 512, 0.57, 0.19, 0.19, 11);
+        let plan = ShardPlan::even(g.num_vertices(), 4).unwrap();
+        let shards = GraphShard::extract_all(&g, &plan);
+        // Concatenated shard streams == the monolithic dst-major stream.
+        let mono: Vec<_> = g.edge_iter().collect();
+        let mut cat = Vec::new();
+        for s in &shards {
+            cat.extend(s.graph().edge_iter());
+        }
+        assert_eq!(cat, mono);
+        let total: usize = shards.iter().map(|s| s.num_edges()).sum();
+        assert_eq!(total, g.num_edges());
+        // Every edge's destination sits inside its shard's range.
+        for s in &shards {
+            let (lo, hi) = s.range();
+            assert!(s.graph().edge_iter().all(|(d, _)| d >= lo && d < hi));
+        }
+    }
+
+    #[test]
+    fn shard_residency_is_o_of_shard() {
+        let g = generate::rmat(9, 8192, 0.57, 0.19, 0.19, 5);
+        let plan = ShardPlan::even(g.num_vertices(), 4).unwrap();
+        let shards = GraphShard::extract_all(&g, &plan);
+        let peak = shards.iter().map(|s| s.resident_bytes()).max().unwrap();
+        // Each shard keeps the full offsets array but ~1/4 of targets.
+        assert!(
+            peak < g.resident_bytes(),
+            "peak shard {peak} B !< monolithic {} B",
+            g.resident_bytes()
+        );
+        let frontier: usize = shards.iter().map(|s| s.frontier_len()).sum();
+        let full_frontier = (0..g.num_vertices() as u32).filter(|&v| g.in_degree(v) > 0).count();
+        assert_eq!(frontier, full_frontier, "shard frontiers partition the full frontier");
+    }
+
+    #[test]
+    fn single_shard_is_the_whole_graph() {
+        let g = generate::rmat(6, 256, 0.57, 0.19, 0.19, 2);
+        let plan = ShardPlan::even(g.num_vertices(), 1).unwrap();
+        let shards = GraphShard::extract_all(&g, &plan);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(*shards[0].graph(), g);
+    }
+}

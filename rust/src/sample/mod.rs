@@ -87,7 +87,11 @@ impl<'g> EpochSubgraph<'g> {
 
     /// Seed-vertex frontier: destinations with ≥ 1 sampled in-edge, in
     /// ascending order (the vertices whose aggregation this epoch
-    /// computes). Computed on first use.
+    /// computes). Computed on first use. Under
+    /// [`SimConfig::frontier_writeback`](crate::config::SimConfig::frontier_writeback)
+    /// the write-back phase flushes exactly this set instead of every
+    /// vertex row — sampled epochs stop paying full-graph write
+    /// traffic for rows they never touched.
     pub fn seeds(&self) -> &[u32] {
         self.seeds.get_or_init(|| frontier(self.graph()))
     }

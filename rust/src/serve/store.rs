@@ -9,6 +9,7 @@
 use crate::config::GraphPreset;
 use crate::fail;
 use crate::graph::{generate, CsrGraph};
+use crate::reorder::{GraphShard, ShardPlan};
 use crate::util::error::{Error, Result};
 
 /// Decorrelates per-entry generator seeds when a spec builds several
@@ -20,6 +21,17 @@ const SPEC_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 /// paper's largest stand-in).
 const MAX_SPEC_VERTICES: u64 = 1 << 26;
 
+/// One registered graph: the monolithic instance plus, for out-of-core
+/// entries, its pre-extracted row-range shards. Shards keep their own
+/// transpose caches, so backward jobs streaming a sharded entry pay one
+/// O(shard-edges) transpose per shard — not one O(E) per job.
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    graph: CsrGraph,
+    shards: Option<Vec<GraphShard>>,
+}
+
 /// Named immutable graph set served by one process.
 ///
 /// Entries keep insertion order (reports and round-robin job synthesis
@@ -28,7 +40,7 @@ const MAX_SPEC_VERTICES: u64 = 1 << 26;
 /// registry is never the hot path.
 #[derive(Debug, Default)]
 pub struct GraphStore {
-    entries: Vec<(String, CsrGraph)>,
+    entries: Vec<Entry>,
 }
 
 impl GraphStore {
@@ -47,7 +59,26 @@ impl GraphStore {
         if self.get(&name).is_some() {
             return Err(fail!("duplicate graph name `{name}` in store"));
         }
-        self.entries.push((name, graph));
+        self.entries.push(Entry { name, graph, shards: None });
+        Ok(())
+    }
+
+    /// Register `graph` under `name` as an out-of-core entry split into
+    /// `shards` even row-range [`GraphShard`]s, extracted once at
+    /// insertion so every job streaming this entry shares the shard set
+    /// (and each shard's lazily-cached transpose).
+    pub fn insert_sharded(
+        &mut self,
+        name: impl Into<String>,
+        graph: CsrGraph,
+        shards: usize,
+    ) -> Result<()> {
+        let name = name.into();
+        let plan = ShardPlan::even(graph.num_vertices(), shards)
+            .map_err(|e| fail!("graph `{name}`: {e}"))?;
+        let parts = GraphShard::extract_all(&graph, &plan);
+        self.insert(name, graph)?;
+        self.entries.last_mut().expect("just inserted").shards = Some(parts);
         Ok(())
     }
 
@@ -62,17 +93,23 @@ impl GraphStore {
     }
 
     pub fn get(&self, name: &str) -> Option<&CsrGraph> {
-        self.entries.iter().find(|(n, _)| n == name).map(|(_, g)| g)
+        self.entries.iter().find(|e| e.name == name).map(|e| &e.graph)
+    }
+
+    /// The pre-extracted shard set of an out-of-core entry (`None` for
+    /// monolithic entries or unknown names).
+    pub fn shards(&self, name: &str) -> Option<&[GraphShard]> {
+        self.entries.iter().find(|e| e.name == name).and_then(|e| e.shards.as_deref())
     }
 
     /// Entry names in insertion order.
     pub fn names(&self) -> Vec<&str> {
-        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+        self.entries.iter().map(|e| e.name.as_str()).collect()
     }
 
     /// `(name, graph)` pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&str, &CsrGraph)> {
-        self.entries.iter().map(|(n, g)| (n.as_str(), g))
+        self.entries.iter().map(|e| (e.name.as_str(), &e.graph))
     }
 
     pub fn len(&self) -> usize {
@@ -84,21 +121,31 @@ impl GraphStore {
     }
 
     /// Total O(E) transpose computations performed across the store
-    /// (the serve acceptance bar: ≤ 1 per graph, no matter how many
-    /// backward jobs ran).
+    /// (the serve acceptance bar: ≤ 1 per graph — plus ≤ 1 per shard of
+    /// sharded entries — no matter how many backward jobs ran).
     pub fn total_transposes(&self) -> u64 {
-        self.entries.iter().map(|(_, g)| g.transpose_count()).sum()
+        self.entries
+            .iter()
+            .map(|e| {
+                e.graph.transpose_count()
+                    + e.shards
+                        .as_deref()
+                        .map_or(0, |s| s.iter().map(|p| p.graph().transpose_count()).sum())
+            })
+            .sum()
     }
 
     /// Build a store from a graph-set spec: comma-separated items, each
     /// either a preset name (`tiny`, `small`, `lj`, …) or a synthetic
-    /// R-MAT shape `k=<vertices>:d=<avg degree>[:seed=<seed>]` — e.g.
-    /// `k=1000:d=8,k=50000:d=16`. The item string doubles as the graph
-    /// name. Vertex counts round up to the next power of two (the R-MAT
-    /// address space); the average degree applies to the rounded size.
-    /// Without an explicit `seed=`, entry `i` derives its stream from
-    /// `base_seed` and `i`, so same-shaped items at different positions
-    /// still produce distinct graphs.
+    /// R-MAT shape `k=<vertices>:d=<avg degree>[:seed=<seed>][:shards=<n>]`
+    /// — e.g. `k=1000:d=8,k=50000:d=16:shards=4`. The item string doubles
+    /// as the graph name. Vertex counts round up to the next power of two
+    /// (the R-MAT address space); the average degree applies to the
+    /// rounded size. `shards=n` (n ≥ 2) registers the entry out-of-core
+    /// with `n` pre-extracted row-range shards. Without an explicit
+    /// `seed=`, entry `i` derives its stream from `base_seed` and `i`, so
+    /// same-shaped items at different positions still produce distinct
+    /// graphs.
     pub fn from_spec(spec: &str, base_seed: u64) -> Result<GraphStore> {
         let mut store = GraphStore::new();
         for (i, item) in spec.split(',').enumerate() {
@@ -107,8 +154,11 @@ impl GraphStore {
                 return Err(fail!("empty graph spec item in `{spec}`"));
             }
             let seed = base_seed.wrapping_add(SPEC_SEED_STRIDE.wrapping_mul(i as u64));
-            let graph = build_spec_item(item, seed)?;
-            store.insert(item, graph)?;
+            let (graph, shards) = build_spec_item(item, seed)?;
+            match shards {
+                0 | 1 => store.insert(item, graph)?,
+                n => store.insert_sharded(item, graph, n)?,
+            }
         }
         if store.is_empty() {
             return Err(Error::msg("graph spec names no graphs"));
@@ -117,11 +167,12 @@ impl GraphStore {
     }
 }
 
-fn build_spec_item(item: &str, default_seed: u64) -> Result<CsrGraph> {
+fn build_spec_item(item: &str, default_seed: u64) -> Result<(CsrGraph, usize)> {
     if let Ok(preset) = item.parse::<GraphPreset>() {
-        return Ok(preset.build(default_seed));
+        return Ok((preset.build(default_seed), 0));
     }
     let (mut vertices, mut degree, mut seed) = (None, 8.0f64, default_seed);
+    let mut shards = 0usize;
     for part in item.split(':') {
         let (key, val) = part
             .split_once('=')
@@ -136,9 +187,14 @@ fn build_spec_item(item: &str, default_seed: u64) -> Result<CsrGraph> {
             "seed" => {
                 seed = val.parse::<u64>().map_err(|e| fail!("`{item}`: seed={val}: {e}"))?
             }
+            "shards" => {
+                shards =
+                    val.parse::<usize>().map_err(|e| fail!("`{item}`: shards={val}: {e}"))?
+            }
             other => {
                 return Err(fail!(
-                    "unknown spec key `{other}` in `{item}` (want k=|d=|seed=, or a preset name)"
+                    "unknown spec key `{other}` in `{item}` \
+                     (want k=|d=|seed=|shards=, or a preset name)"
                 ))
             }
         }
@@ -156,10 +212,13 @@ fn build_spec_item(item: &str, default_seed: u64) -> Result<CsrGraph> {
     }
     let log_n = k.next_power_of_two().trailing_zeros();
     let n = 1u64 << log_n;
+    if shards as u64 > n {
+        return Err(fail!("`{item}`: shards={shards} exceeds the {n}-vertex address space"));
+    }
     let edges = (n as f64 * degree) as u64;
     // The preset trio's skew: power-law, self-similar — the regime the
     // paper's datasets live in (see config::presets).
-    Ok(generate::rmat(log_n, edges, 0.57, 0.19, 0.19, seed))
+    Ok((generate::rmat(log_n, edges, 0.57, 0.19, 0.19, seed), shards))
 }
 
 #[cfg(test)]
@@ -220,6 +279,41 @@ mod tests {
             c.get("k=512:d=6:seed=3").unwrap().targets(),
             d.get("k=512:d=6:seed=3").unwrap().targets()
         );
+    }
+
+    #[test]
+    fn sharded_entries_extract_once_and_report_transposes() {
+        let mut store = GraphStore::new();
+        store.insert_sharded("oc", GraphPreset::Tiny.build(1), 4).unwrap();
+        store.insert("mono", GraphPreset::Tiny.build(2)).unwrap();
+        let shards = store.shards("oc").expect("sharded entry exposes its shard set");
+        assert_eq!(shards.len(), 4);
+        let g = store.get("oc").unwrap();
+        let total: usize = shards.iter().map(|s| s.num_edges()).sum();
+        assert_eq!(total, g.num_edges());
+        assert!(store.shards("mono").is_none());
+        assert!(store.shards("nosuch").is_none());
+        // Transposing two shards twice each still counts once per shard.
+        for _ in 0..2 {
+            shards[0].graph().transposed();
+            shards[2].graph().transposed();
+        }
+        assert_eq!(store.total_transposes(), 2);
+        store.get("oc").unwrap().transposed();
+        assert_eq!(store.total_transposes(), 3, "monolithic instance counted too");
+        // Invalid shard counts are rejected before insertion.
+        let mut bad = GraphStore::new();
+        assert!(bad.insert_sharded("z", GraphPreset::Tiny.build(3), 0).is_err());
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn spec_builds_sharded_entries() {
+        let store = GraphStore::from_spec("k=512:d=6:shards=4,k=512:d=6", 11).unwrap();
+        let shards = store.shards("k=512:d=6:shards=4").unwrap();
+        assert_eq!(shards.len(), 4);
+        assert!(store.shards("k=512:d=6").is_none());
+        assert!(GraphStore::from_spec("k=512:d=6:shards=100000", 1).is_err());
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::dram::energy::EnergyReport;
 use crate::dram::{DramModel, DramReq};
 use crate::graph::CsrGraph;
 use crate::lignn::{AddressCalc, Burst, Criteria, Edge, LignnUnit, RecMerger, UnitStats};
-use crate::sample::Sampler;
+use crate::sample::{EpochSubgraph, Sampler};
 use crate::telemetry::{DramDelta, DramSnapshot, Recorder, SpanEvent, SpanKind, SpatialProfiler};
 
 use super::frfcfs::{FrFcfs, DEFAULT_DEPTH};
@@ -253,6 +253,14 @@ impl<'a> SimEngine<'a> {
         }
     }
 
+    /// The config this engine was built from (the `'a` borrow, so
+    /// callers can hold it across mutating engine calls — the sharded
+    /// schedule in `reorder::shard` composes phases from outside this
+    /// module).
+    pub fn config(&self) -> &'a SimConfig {
+        self.cfg
+    }
+
     /// Attach a telemetry recorder for this run. A disabled recorder
     /// (`enabled() == false`, e.g. [`NullRecorder`]
     /// (crate::telemetry::NullRecorder)) is not stored at all, so the
@@ -434,14 +442,49 @@ impl<'a> SimEngine<'a> {
                 self.drive_edges(graph.transposed().edge_iter());
             }
             Phase::WriteBack => {
-                self.mark_span(SpanKind::WriteBack);
-                self.write_back(graph.num_vertices() as u32);
+                self.push_write_back(graph.num_vertices() as u32);
             }
             Phase::MaskWriteBack => {
-                self.mark_span(SpanKind::MaskWriteBack);
-                self.write_masks();
+                self.push_mask_write_back();
             }
         }
+    }
+
+    /// Aggregation write-back for an explicit vertex count — the entry
+    /// point of the frontier-limited and sharded schedules, which write
+    /// back only the vertices a phase actually produced (the sampled
+    /// frontier, or one shard's row range) instead of the full vertex
+    /// set. `push_phase(Phase::WriteBack, g)` is exactly
+    /// `push_write_back(g.num_vertices())`.
+    pub fn push_write_back(&mut self, vertices: u32) {
+        self.mark_span(SpanKind::WriteBack);
+        self.write_back(vertices);
+    }
+
+    /// Dropout-mask write-back as a standalone step (covers the feature
+    /// instances processed since the previous mask write-back —
+    /// identical to `push_phase(Phase::MaskWriteBack, _)`, which needs
+    /// no graph).
+    pub fn push_mask_write_back(&mut self) {
+        self.mark_span(SpanKind::MaskWriteBack);
+        self.write_masks();
+    }
+
+    /// Record that the sharded schedule switched the resident shard: a
+    /// zero-width `shard_load` marker span with an empty delta, so
+    /// sharded traces still telescope to run totals (same contract as
+    /// [`note_preempt`](Self::note_preempt)).
+    pub fn note_shard_load(&mut self, shard: usize) {
+        let Some(rec) = self.rec.as_deref_mut() else { return };
+        let cycle = self.dram.busy_until();
+        rec.record_span(SpanEvent {
+            kind: SpanKind::ShardLoad { shard },
+            epoch: self.epoch,
+            tenant: self.span_tenant,
+            start_cycle: cycle,
+            end_cycle: cycle,
+            dram: DramDelta::default(),
+        });
     }
 
     /// Sync point: drain LiGNN residue, in-flight interleaved reads and
@@ -758,6 +801,21 @@ fn boundary(
     }
 }
 
+/// Vertices the aggregation write-back covers for one epoch's subgraph:
+/// the full vertex set by default (the legacy layout every golden run
+/// pins), or only the sampled frontier — vertices the epoch actually
+/// aggregated into — under `cfg.frontier_writeback`, so write-back
+/// traffic scales with the mini-batch instead of the graph. Full-batch
+/// epochs on a graph with no isolated vertices write the same count
+/// either way.
+fn write_back_count(cfg: &SimConfig, sub: &EpochSubgraph<'_>) -> u32 {
+    if cfg.frontier_writeback {
+        sub.seeds().len() as u32
+    } else {
+        sub.graph().num_vertices() as u32
+    }
+}
+
 /// Drive `engine` through the canonical schedule its config implies:
 /// `epochs × (sample + layers forward + [backward after the last layer]
 /// + write-backs)`, consulting `hook` at every phase boundary.
@@ -797,9 +855,9 @@ fn run_layerwise_schedule(
             }
             engine.drain();
             boundary(engine, hook, epoch, layer, NextStep::WriteBack);
-            engine.push_phase(Phase::WriteBack, g);
+            engine.push_write_back(write_back_count(cfg, &sub));
             boundary(engine, hook, epoch, layer, NextStep::MaskWriteBack);
-            engine.push_phase(Phase::MaskWriteBack, g);
+            engine.push_mask_write_back();
         }
     }
     engine.finish(graph)
@@ -832,9 +890,9 @@ fn run_schedule_with(
             }
             engine.drain();
             boundary(engine, hook, epoch, layer, NextStep::WriteBack);
-            engine.push_phase(Phase::WriteBack, g);
+            engine.push_write_back(write_back_count(cfg, &sub));
             boundary(engine, hook, epoch, layer, NextStep::MaskWriteBack);
-            engine.push_phase(Phase::MaskWriteBack, g);
+            engine.push_mask_write_back();
         }
     }
     engine.finish(graph)

@@ -35,6 +35,13 @@ pub enum SpanKind {
     /// the QoS preemption path and later resumed. Carries an empty
     /// delta, so traces with preemptions still telescope to run totals.
     Preempt,
+    /// Zero-width marker: an islandization pass relabeled the graph
+    /// before this run (emitted by the CLI's `--reorder island` path,
+    /// so a trace self-describes which vertex order it measured).
+    Reorder,
+    /// Zero-width marker: the sharded schedule switched the resident
+    /// shard. Empty delta — sharded traces telescope like any other.
+    ShardLoad { shard: usize },
 }
 
 impl SpanKind {
@@ -47,6 +54,8 @@ impl SpanKind {
             SpanKind::WriteBack => "write_back".into(),
             SpanKind::MaskWriteBack => "mask_write_back".into(),
             SpanKind::Preempt => "preempt".into(),
+            SpanKind::Reorder => "reorder".into(),
+            SpanKind::ShardLoad { shard } => format!("shard_load[{shard}]"),
         }
     }
 }
@@ -325,9 +334,11 @@ impl Recorder for PhaseActs {
             SpanKind::Backward => self.backward += acts,
             SpanKind::WriteBack => self.write_back += acts,
             SpanKind::MaskWriteBack => self.mask_write_back += acts,
-            // Preempt markers are zero-width with empty deltas; nothing
+            // Marker spans are zero-width with empty deltas; nothing
             // to attribute (debug-asserted so a non-empty one is loud).
-            SpanKind::Preempt => debug_assert_eq!(acts, 0),
+            SpanKind::Preempt | SpanKind::Reorder | SpanKind::ShardLoad { .. } => {
+                debug_assert_eq!(acts, 0)
+            }
         }
     }
 }
@@ -418,6 +429,8 @@ mod tests {
         assert_eq!(SpanKind::Sample.label(), "sample");
         assert_eq!(SpanKind::MaskWriteBack.label(), "mask_write_back");
         assert_eq!(SpanKind::Preempt.label(), "preempt");
+        assert_eq!(SpanKind::Reorder.label(), "reorder");
+        assert_eq!(SpanKind::ShardLoad { shard: 2 }.label(), "shard_load[2]");
     }
 
     #[test]

@@ -886,6 +886,99 @@ fn spatial_profiler_is_inert_and_grids_conserve() {
 }
 
 #[test]
+fn sharded_single_shard_is_bit_identical() {
+    // The out-of-core acceptance bar's golden pin: a 1-shard run IS the
+    // monolithic schedule — same drive, same drain points, same
+    // write-back — so every field (exec_ns included) must be identical
+    // across variants, α, backward, and multi-layer/multi-epoch shapes.
+    use lignn::reorder::run_sharded_sim;
+
+    for variant in [Variant::A, Variant::B, Variant::R, Variant::S, Variant::T, Variant::M] {
+        for alpha in [0.0, 0.5] {
+            let cfg = tiny_cfg(variant, alpha);
+            let graph = cfg.build_graph();
+            let gold = run_sim(&cfg, &graph);
+            let (new, rep) = run_sharded_sim(&cfg, &graph, 1).unwrap();
+            assert_metrics_identical(&new, &gold, &format!("{variant:?} α={alpha} 1-shard"));
+            assert_eq!(rep.shards, 1);
+            assert_eq!(rep.handoffs, 0, "one shard never hands off");
+            assert_eq!(
+                rep.peak_resident_bytes, rep.monolithic_resident_bytes,
+                "the lone shard is the whole graph"
+            );
+        }
+    }
+    for variant in [Variant::A, Variant::T] {
+        let mut cfg = tiny_cfg(variant, 0.5);
+        cfg.backward = true;
+        cfg.layers = 2;
+        cfg.epochs = 2;
+        let graph = cfg.build_graph();
+        let gold = run_sim(&cfg, &graph);
+        let (new, _) = run_sharded_sim(&cfg, &graph, 1).unwrap();
+        assert_metrics_identical(&new, &gold, &format!("{variant:?} 1-shard deep"));
+    }
+}
+
+#[test]
+fn sharded_forward_only_conserves_dram_counters() {
+    // Multi-shard, forward-only, non-merge variants: the concatenated
+    // shard edge streams equal the monolithic stream and no drain runs
+    // between shard drives, so the DRAM controller sees the exact same
+    // burst sequence — every DRAM, cache and unit counter must be
+    // bit-identical at any shard count. (Only compute_ns legitimately
+    // differs: the combination charge is per push_phase.)
+    use lignn::reorder::run_sharded_sim;
+
+    for variant in [Variant::A, Variant::S] {
+        for alpha in [0.0, 0.5] {
+            for shards in [2usize, 4] {
+                let mut cfg = tiny_cfg(variant, alpha);
+                cfg.layers = 2;
+                let graph = cfg.build_graph();
+                let gold = run_sim(&cfg, &graph);
+                let (new, rep) = run_sharded_sim(&cfg, &graph, shards).unwrap();
+                let label = format!("{variant:?} α={alpha} {shards}-shard");
+                assert_counters_identical(&new.dram, &gold.dram, &label);
+                assert_eq!(new.unit.features_in, gold.unit.features_in, "{label}: features_in");
+                assert_eq!(new.unit.bursts_kept, gold.unit.bursts_kept, "{label}: bursts_kept");
+                assert_eq!(new.cache_hits, gold.cache_hits, "{label}: cache_hits");
+                assert_eq!(new.cache_misses, gold.cache_misses, "{label}: cache_misses");
+                assert_eq!(new.layer_reads, gold.layer_reads, "{label}: layer_reads");
+                assert_eq!(new.sampled_edges, gold.sampled_edges, "{label}: sampled_edges");
+                assert_eq!(rep.shards, shards);
+                assert_eq!(
+                    rep.handoffs,
+                    (shards - 1) * cfg.layers * cfg.epochs,
+                    "{label}: handoffs"
+                );
+                assert!(
+                    rep.peak_resident_bytes < rep.monolithic_resident_bytes,
+                    "{label}: peak {} !< monolithic {}",
+                    rep.peak_resident_bytes,
+                    rep.monolithic_resident_bytes
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn identity_permutation_is_inert() {
+    // Relabeling by the identity permutation is a no-op on the graph
+    // and therefore on every metric of the run.
+    use lignn::reorder::Permutation;
+
+    let cfg = tiny_cfg(Variant::T, 0.5);
+    let graph = cfg.build_graph();
+    let relabeled = Permutation::identity(graph.num_vertices()).apply_to_graph(&graph);
+    assert_eq!(relabeled, graph);
+    let gold = run_sim(&cfg, &graph);
+    let new = run_sim(&cfg, &relabeled);
+    assert_metrics_identical(&new, &gold, "identity permutation");
+}
+
+#[test]
 fn fullbatch_sampler_matches_legacy() {
     // The FullBatch sampler spelled out — both through `cfg.sampler` and
     // through the explicit-sampler entry point — must reproduce the seed

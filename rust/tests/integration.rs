@@ -273,6 +273,88 @@ fn energy_tracks_activations() {
     assert!(t.energy.activation_share < a.energy.activation_share + 0.05);
 }
 
+#[test]
+fn sharded_store_serves_backward_with_one_transpose_per_shard() {
+    // Out-of-core store entries: repeated backward runs over a sharded
+    // entry transpose each shard exactly once (the per-shard OnceLock
+    // cache), and never materialize the monolithic transpose at all.
+    use lignn::reorder::run_sharded_on;
+    use lignn::serve::GraphStore;
+    use lignn::sim::SimEngine;
+
+    let mut store = GraphStore::new();
+    store.insert_sharded("oc", GraphPreset::Tiny.build(5), 4).unwrap();
+    let g = store.get("oc").unwrap();
+    let shards = store.shards("oc").unwrap();
+    let cfg = SimConfig {
+        graph: GraphPreset::Tiny,
+        variant: Variant::T,
+        alpha: 0.5,
+        flen: 64,
+        capacity: 256,
+        access: 64,
+        range: 64,
+        backward: true,
+        ..Default::default()
+    };
+    let mut first = None;
+    for round in 0..3 {
+        let mut engine = SimEngine::new(&cfg);
+        let (m, rep) = run_sharded_on(&mut engine, g, shards).unwrap();
+        assert!(m.dram.reads > 0, "round {round}");
+        assert_eq!(rep.shards, 4);
+        // pure function of (graph, config): repeated runs are identical
+        let key = (m.dram.reads, m.dram.writes, m.dram.activations);
+        match first {
+            None => first = Some(key),
+            Some(k) => assert_eq!(key, k, "round {round} diverged"),
+        }
+    }
+    assert_eq!(
+        store.total_transposes(),
+        4,
+        "one transpose per shard, cached across runs"
+    );
+    assert_eq!(g.transpose_count(), 0, "monolithic transpose never materialized");
+}
+
+#[test]
+fn islandize_then_shard_pipeline_conserves_demand() {
+    // The tentpole composed end-to-end: islandize, relabel, stream the
+    // relabeled graph through 4 shards. With no dropout and a cache
+    // holding every vertex, demand is layout-invariant — reads and
+    // writes match the natural-order monolithic run exactly — while
+    // peak residency drops to O(shard).
+    use lignn::reorder::{islandize, run_sharded_sim, IslandConfig};
+
+    let cfg = SimConfig {
+        graph: GraphPreset::Tiny,
+        variant: Variant::A,
+        alpha: 0.0,
+        flen: 64,
+        capacity: 2048,
+        access: 64,
+        range: 64,
+        ..Default::default()
+    };
+    let g = cfg.build_graph();
+    let per_group = cfg.effective_mapping().vertices_per_row_group(cfg.flen_bytes());
+    let (perm, rep) = islandize(&g, per_group, IslandConfig::default());
+    let reordered = perm.apply_to_graph(&g);
+    let natural = run_sim(&cfg, &g);
+    let (m, srep) = run_sharded_sim(&cfg, &reordered, 4).unwrap();
+    assert!(rep.islands >= 1);
+    assert_eq!(m.dram.reads, natural.dram.reads, "reads are layout-invariant");
+    assert_eq!(m.dram.writes, natural.dram.writes, "writes are layout-invariant");
+    assert_eq!(m.sampled_edges, natural.sampled_edges);
+    assert!(
+        srep.peak_resident_bytes < srep.monolithic_resident_bytes,
+        "peak {} !< monolithic {}",
+        srep.peak_resident_bytes,
+        srep.monolithic_resident_bytes
+    );
+}
+
 // ---------------------------------------------------------------------
 // PJRT training path (requires the `pjrt` feature + `make artifacts`)
 // ---------------------------------------------------------------------

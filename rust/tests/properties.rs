@@ -767,6 +767,209 @@ fn prop_serve_transposes_each_graph_at_most_once_under_concurrency() {
     assert_eq!(store.total_transposes(), 2);
 }
 
+// ---------------------------------------------------------------------
+// Reorder path: permutations, islandization, sharding, frontier
+// write-back
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_permutation_roundtrip_on_random_graphs() {
+    // Any shuffle of 0..n is a valid Permutation; mapping old→new→old
+    // (and new→old→new) is the identity, and relabeling a graph then
+    // relabeling by the inverse reproduces the original exactly.
+    use lignn::graph::generate;
+    use lignn::reorder::Permutation;
+
+    let mut rng = Pcg64::new(0x9E0D);
+    for round in 0..10u64 {
+        let log_n = 5 + (round % 3) as u32; // 32..128 vertices
+        let n = 1usize << log_n;
+        let g = generate::rmat(log_n, (n * 6) as u64, 0.57, 0.19, 0.19, 100 + round);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            order.swap(i, j);
+        }
+        let perm = Permutation::from_new_order(order.clone()).unwrap();
+        assert_eq!(perm.len(), n);
+        for v in 0..n as u32 {
+            assert_eq!(perm.new_id(perm.old_id(v)), v, "round {round}: new→old→new");
+            assert_eq!(perm.old_id(perm.new_id(v)), v, "round {round}: old→new→old");
+        }
+        let inv = perm.inverse();
+        let relabeled = perm.apply_to_graph(&g);
+        assert_eq!(relabeled.num_edges(), g.num_edges(), "round {round}: edge count");
+        // degree multiset is permutation-invariant
+        let mut deg_old: Vec<usize> =
+            (0..n as u32).map(|v| g.neighbors(v).len()).collect();
+        let mut deg_new: Vec<usize> =
+            (0..n as u32).map(|v| relabeled.neighbors(v).len()).collect();
+        deg_old.sort_unstable();
+        deg_new.sort_unstable();
+        assert_eq!(deg_new, deg_old, "round {round}: degree multiset");
+        assert_eq!(inv.apply_to_graph(&relabeled), g, "round {round}: inverse roundtrip");
+        // vertex-list relabeling composes the same way
+        let vs: Vec<u32> = (0..16).map(|_| rng.below(n as u32)).collect();
+        assert_eq!(
+            inv.apply_to_vertices(&perm.apply_to_vertices(&vs)),
+            vs,
+            "round {round}: vertex roundtrip"
+        );
+    }
+}
+
+#[test]
+fn prop_islandize_is_bijective_and_respects_capacity() {
+    // Across random graphs, geometries and capacity knobs: the emitted
+    // permutation is a bijection over 0..n, no island exceeds the
+    // capacity, and island counts telescope (singletons ≤ islands,
+    // largest ≤ cap).
+    use lignn::graph::generate;
+    use lignn::reorder::{islandize, IslandConfig};
+
+    for (round, (log_n, vpg, groups)) in
+        [(6u32, 4u64, 1usize), (7, 16, 2), (8, 16, 4), (7, 8, 64)].into_iter().enumerate()
+    {
+        let n = 1usize << log_n;
+        let g = generate::rmat(log_n, (n * 8) as u64, 0.57, 0.19, 0.19, 7 + round as u64);
+        let (perm, rep) =
+            islandize(&g, vpg, IslandConfig { capacity_row_groups: groups });
+        assert_eq!(perm.len(), n, "round {round}");
+        // bijectivity: every old id appears exactly once
+        let mut seen = vec![false; n];
+        for v in 0..n as u32 {
+            let old = perm.old_id(v) as usize;
+            assert!(!seen[old], "round {round}: old id {old} placed twice");
+            seen[old] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "round {round}: coverage");
+        assert!(rep.islands >= 1, "round {round}");
+        assert!(rep.singletons <= rep.islands, "round {round}");
+        assert!(
+            rep.largest <= rep.capacity_vertices,
+            "round {round}: island of {} exceeds cap {}",
+            rep.largest,
+            rep.capacity_vertices
+        );
+        assert_eq!(
+            rep.capacity_vertices as u64,
+            (groups as u64 * vpg).min(n as u64),
+            "round {round}: cap formula"
+        );
+    }
+}
+
+#[test]
+fn prop_relabeled_run_conserves_totals() {
+    // Relabeling changes WHERE feature rows live, never HOW MUCH work
+    // the epoch does: with the cache holding every vertex (misses =
+    // distinct sources, order-invariant) and no dropout, a variant-A
+    // run over the islandized graph moves exactly the same reads,
+    // writes, sampled edges, misses and features as the natural order.
+    use lignn::reorder::{islandize, IslandConfig};
+
+    let mut cfg = sampling_cfg(0.0);
+    cfg.variant = Variant::A;
+    cfg.capacity = 2048; // ≥ |V| of Tiny: every source misses exactly once
+    let g = cfg.build_graph();
+    let per_group = cfg.effective_mapping().vertices_per_row_group(cfg.flen_bytes());
+    let (perm, _) = islandize(&g, per_group, IslandConfig::default());
+    let reordered = perm.apply_to_graph(&g);
+    let nat = run_sim(&cfg, &g);
+    let isl = run_sim(&cfg, &reordered);
+    assert_eq!(isl.dram.reads, nat.dram.reads, "reads");
+    assert_eq!(isl.dram.writes, nat.dram.writes, "writes");
+    assert_eq!(isl.sampled_edges, nat.sampled_edges, "sampled_edges");
+    assert_eq!(isl.cache_misses, nat.cache_misses, "cache_misses");
+    assert_eq!(isl.cache_hits, nat.cache_hits, "cache_hits");
+    assert_eq!(isl.unit.features_in, nat.unit.features_in, "features_in");
+    assert_eq!(isl.unit.bursts_kept, nat.unit.bursts_kept, "bursts_kept");
+}
+
+#[test]
+fn prop_sharded_run_conserves_counters_and_bounds_residency() {
+    // Forward-only non-merge sharded runs see the exact monolithic
+    // burst stream (no drain between shard drives), so DRAM counters
+    // are bit-equal at any shard count — while peak residency stays
+    // strictly below the monolithic graph's.
+    use lignn::graph::generate;
+    use lignn::reorder::run_sharded_sim;
+
+    let g = generate::rmat(9, 4096, 0.57, 0.19, 0.19, 23);
+    for shards in [2usize, 3, 5] {
+        let mut cfg = sampling_cfg(0.5);
+        cfg.variant = Variant::S;
+        let mono = run_sim(&cfg, &g);
+        let (m, rep) = run_sharded_sim(&cfg, &g, shards).unwrap();
+        let label = format!("{shards}-shard");
+        assert_eq!(m.dram.reads, mono.dram.reads, "{label}: reads");
+        assert_eq!(m.dram.writes, mono.dram.writes, "{label}: writes");
+        assert_eq!(m.dram.activations, mono.dram.activations, "{label}: activations");
+        assert_eq!(m.dram.row_hits, mono.dram.row_hits, "{label}: row_hits");
+        assert_eq!(m.cache_misses, mono.cache_misses, "{label}: cache_misses");
+        assert!(
+            rep.peak_resident_bytes < rep.monolithic_resident_bytes,
+            "{label}: peak {} !< monolithic {}",
+            rep.peak_resident_bytes,
+            rep.monolithic_resident_bytes
+        );
+    }
+    // Sharded runs are full-batch by contract: a sampled config is
+    // rejected up front rather than silently double-sampling.
+    let mut sampled = sampling_cfg(0.5);
+    sampled.sampler = SamplerKind::Neighbor;
+    sampled.fanout = 4;
+    assert!(run_sharded_sim(&sampled, &g, 2).is_err());
+}
+
+#[test]
+fn prop_frontier_writeback_skips_isolated_vertices() {
+    // A graph where half the vertices aggregate nothing: frontier
+    // write-back flushes only the seeds (= destinations with in-edges),
+    // so writes strictly drop while the read stream is untouched.
+    use lignn::graph::CsrGraph;
+
+    let n = 256usize;
+    let mut offsets = vec![0u64; n + 1];
+    let mut targets = Vec::new();
+    let mut rng = Pcg64::new(0xF50);
+    for v in 0..n {
+        if v < n / 2 {
+            let mut ns: Vec<u32> =
+                (0..4).map(|_| rng.below(n as u32)).collect();
+            ns.sort_unstable();
+            ns.dedup();
+            targets.extend(ns);
+        }
+        offsets[v + 1] = targets.len() as u64;
+    }
+    let g = CsrGraph::from_parts(offsets, targets).unwrap();
+
+    let mut off = sampling_cfg(0.3);
+    off.variant = Variant::A;
+    let mut on = off.clone();
+    on.frontier_writeback = true;
+    let m_off = run_sim(&off, &g);
+    let m_on = run_sim(&on, &g);
+    assert_eq!(m_on.dram.reads, m_off.dram.reads, "reads untouched");
+    assert!(
+        m_on.dram.writes < m_off.dram.writes,
+        "frontier write-back must write less: {} !< {}",
+        m_on.dram.writes,
+        m_off.dram.writes
+    );
+    // On a graph whose every vertex aggregates something, the flag is
+    // invisible (full-batch frontier = whole vertex set).
+    let dense = GraphPreset::Tiny.build(3);
+    let full_frontier =
+        (0..dense.num_vertices() as u32).all(|v| dense.in_degree(v) > 0);
+    if full_frontier {
+        let a = run_sim(&off, &dense);
+        let b = run_sim(&on, &dense);
+        assert_eq!(a.dram.writes, b.dram.writes, "dense graph: flag invisible");
+    }
+}
+
 #[test]
 fn prop_mask_rate_converges_all_granularities() {
     let gen = MaskGen::new(37);

@@ -14,6 +14,9 @@ smoke/) against the same-named files under the baseline directory
   - the serve bench's end-to-end `jobs_per_sec` headline
   - the qos_partition bench's partitioned/shared `*_elapsed_ms`
     (elapsed is lower-is-better; the other two are higher-is-better)
+  - the reorder bench's islandized/natural activation ratios and the
+    4-shard peak-residency ratio (all lower-is-better same-run ratios:
+    a rise means reordering or sharding lost ground)
 
 A missing baseline file or key is a WARNING and passes — that is the
 seeding path: the first CI run after this gate lands produces the
@@ -123,6 +126,21 @@ def main(baseline_dir, fresh_dir):
                 f"interference {key}",
                 base_if.get(key),
                 fresh_if.get(key),
+                lower_is_better=True,
+            )
+
+    base_ro = load(baseline_dir, "BENCH_reorder.json")
+    fresh_ro = load(fresh_dir, "BENCH_reorder.json")
+    if base_ro is None:
+        warns.append("BENCH_reorder.json: no baseline — skipped")
+    elif fresh_ro is None:
+        fails.append("BENCH_reorder.json missing from the fresh run")
+    else:
+        for key in ("act_ratio_a0", "act_ratio_a5", "shard_peak_ratio"):
+            gate(
+                f"reorder {key}",
+                base_ro.get(key),
+                fresh_ro.get(key),
                 lower_is_better=True,
             )
 

@@ -2,8 +2,9 @@
 """Validate a lignn spatial DRAM heatmap against the run's JSON metrics.
 
 Usage: check_heatmap.py <heatmap.json> <metrics.json>
+       check_heatmap.py --compare <natural_heatmap.json> <reordered_heatmap.json> [K]
 
-Checks (all hard failures):
+Validate mode checks (all hard failures):
   - the heatmap parses; the three grids are channels x banks rectangles
   - grid conservation: the activation grid sums to the run's
     `activations` total, per channel to `channel_activations[ch]`, the
@@ -20,6 +21,13 @@ Checks (all hard failures):
     non-inverted vertex range
   - reuse histogram rows reference in-range banks with count >= 1 and
     p50 <= p95 <= max
+
+Compare mode checks that a reordered (islandized) run's hot-row
+concentration did not worsen: the sum of ABSOLUTE activation counts over
+the top-K hot rows must be <= the natural run's, and total ACTs must
+drop or hold. Absolute counts, not shares — islandization concentrates
+the (much smaller) ACT total into fewer rows, so top-K *share* rises
+even as every row's actual activation count falls.
 
 Stdlib only — runs on any CI python3.
 """
@@ -155,8 +163,47 @@ def main(heatmap_path, metrics_path):
     )
 
 
+def topk_acts(hm, k):
+    rows = hm.get("hot_rows", [])
+    return sum(r.get("acts", 0) for r in rows[:k])
+
+
+def compare(natural_path, reordered_path, k):
+    with open(natural_path) as f:
+        nat = json.load(f)
+    with open(reordered_path) as f:
+        reo = json.load(f)
+
+    nat_total, reo_total = nat.get("total_acts", 0), reo.get("total_acts", 0)
+    check(
+        reo_total <= nat_total,
+        f"reordered total ACTs {reo_total} > natural {nat_total}",
+    )
+    nat_topk, reo_topk = topk_acts(nat, k), topk_acts(reo, k)
+    check(
+        reo_topk <= nat_topk,
+        f"reordered top-{k} hot-row ACTs {reo_topk} > natural {nat_topk}",
+    )
+
+    if fails:
+        for msg in fails:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"reorder compare OK: total ACTs {nat_total} -> {reo_total} "
+        f"({reo_total / max(nat_total, 1):.3f}x), top-{k} hot-row ACTs "
+        f"{nat_topk} -> {reo_topk} ({reo_topk / max(nat_topk, 1):.3f}x)"
+    )
+
+
 if __name__ == "__main__":
-    if len(sys.argv) != 3:
+    if len(sys.argv) >= 2 and sys.argv[1] == "--compare":
+        if len(sys.argv) not in (4, 5):
+            print(__doc__, file=sys.stderr)
+            sys.exit(2)
+        compare(sys.argv[2], sys.argv[3], int(sys.argv[4]) if len(sys.argv) == 5 else 8)
+    elif len(sys.argv) == 3:
+        main(sys.argv[1], sys.argv[2])
+    else:
         print(__doc__, file=sys.stderr)
         sys.exit(2)
-    main(sys.argv[1], sys.argv[2])
